@@ -1,0 +1,55 @@
+"""Shared benchmark helpers: CSV emission + calibrated simulator."""
+from __future__ import annotations
+
+import pathlib
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO / "src") not in sys.path:
+    sys.path.insert(0, str(REPO / "src"))
+
+from repro.core.calibration import load as load_params  # noqa: E402
+from repro.core.simulator import AraSimulator  # noqa: E402
+
+OUT_DIR = REPO / "experiments" / "benchmarks"
+
+
+def simulator() -> AraSimulator:
+    return AraSimulator(params=load_params())
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """Print CSV to stdout and persist under experiments/benchmarks/."""
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(_fmt(r[c]) for c in cols))
+    text = "\n".join(lines)
+    print(f"# --- {name} ---")
+    print(text)
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    (OUT_DIR / f"{name}.csv").write_text(text + "\n")
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (CPU-interpret numbers;
+    structural, not TPU perf — see DESIGN.md §8)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

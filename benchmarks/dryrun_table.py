@@ -1,0 +1,81 @@
+"""§Dry-run / §Roofline aggregation: read experiments/dryrun/*.json and
+emit the per-cell table EXPERIMENTS.md embeds."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import REPO, emit
+
+DRYRUN = REPO / "experiments" / "dryrun"
+
+
+COLS = ["arch", "shape", "mesh", "status", "reason", "compile_s",
+        "live_gb_per_device", "fits_16gb", "compute_ms", "memory_ms",
+        "collective_ms", "bound", "useful_flops_ratio",
+        "roofline_fraction", "cost_kind"]
+
+
+def load_cells() -> list[dict]:
+    rows = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        if p.name.endswith(".analysis.json") or p.name == "sweep.log":
+            continue
+        rec = json.loads(p.read_text())
+        analysis_path = p.with_suffix("").with_suffix("")  # strip .json
+        apath = DRYRUN / (p.stem + ".analysis.json")
+        analysis = json.loads(apath.read_text()) if apath.exists() else None
+        row = {
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "status": rec["status"],
+        }
+        if rec["status"] == "skipped":
+            row.update(reason=rec["reason"])
+            rows.append({c: row.get(c, "") for c in COLS})
+            continue
+        mem = rec.get("memory", {})
+        row.update({
+            "compile_s": rec.get("compile_s"),
+            "live_gb_per_device": round(
+                mem.get("live_bytes_per_device", 0) / 1e9, 2),
+            "fits_16gb": mem.get("fits_16gb_hbm"),
+        })
+        from repro.core.roofline import RooflineTerms
+        mf = rec.get("model_flops_per_device", 0.0)
+        if analysis and analysis.get("status") == "ok":
+            t = analysis["total_remat"]
+            terms = RooflineTerms(flops=t["flops"],
+                                  hbm_bytes=t["hbm_bytes"],
+                                  collective_bytes=t["coll_total"])
+            kind = "scan-corrected"
+        else:
+            r = rec["roofline"]
+            terms = RooflineTerms(flops=r["flops_per_device"],
+                                  hbm_bytes=r["hbm_bytes_per_device"],
+                                  collective_bytes=r[
+                                      "collective_bytes_per_device"])
+            kind = "raw(scan-1x)"
+        row.update({
+            "compute_ms": round(terms.compute_s * 1e3, 4),
+            "memory_ms": round(terms.memory_s * 1e3, 4),
+            "collective_ms": round(terms.collective_s * 1e3, 4),
+            "bound": terms.bound,
+            "useful_flops_ratio": round(mf / terms.flops, 3)
+            if terms.flops else None,
+            "roofline_fraction": round(terms.roofline_fraction(mf), 5),
+            "cost_kind": kind,
+        })
+        rows.append({c: row.get(c, "") for c in COLS})
+    return rows
+
+
+def main() -> None:
+    rows = load_cells()
+    if not rows:
+        print("# no dry-run records yet: run python -m repro.launch.sweep")
+        return
+    emit(rows, "dryrun_table")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Fig. 3: achieved performance of baseline Ara vs Ara-Opt per kernel."""
+from __future__ import annotations
+
+from benchmarks.common import emit, simulator
+from repro.core import paper
+from repro.core.isa import OptConfig, geomean
+from repro.core.traces import DEFAULT_TRACES
+
+
+def run() -> list[dict]:
+    sim = simulator()
+    rows = []
+    speedups = []
+    for name, fn in DEFAULT_TRACES.items():
+        tr = fn()
+        base = sim.run(tr, OptConfig.baseline())
+        opt = sim.run(tr, OptConfig.full())
+        s = base.cycles / opt.cycles
+        speedups.append(s)
+        rows.append({
+            "kernel": name, "problem": tr.problem,
+            "base_gflops": base.gflops, "opt_gflops": opt.gflops,
+            "speedup_sim": s,
+            "speedup_paper": paper.FIG3_SPEEDUP.get(name, float("nan")),
+            "lane_util_base": base.lane_utilization,
+            "lane_util_opt": opt.lane_utilization,
+        })
+    rows.append({
+        "kernel": "GEOMEAN", "problem": "",
+        "base_gflops": float("nan"), "opt_gflops": float("nan"),
+        "speedup_sim": geomean(speedups),
+        "speedup_paper": paper.FIG3_GEOMEAN,
+        "lane_util_base": float("nan"), "lane_util_opt": float("nan"),
+    })
+    return rows
+
+
+def main() -> None:
+    emit(run(), "fig3_speedup")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Fig. 4: roofline-normalized performance and gap-closed ratio."""
+from __future__ import annotations
+
+from benchmarks.common import emit, simulator
+from repro.core import paper
+from repro.core.isa import OptConfig, geomean
+from repro.core.roofline import gap_closed, normalized, p_ideal
+from repro.core.traces import DEFAULT_TRACES
+
+
+def run() -> list[dict]:
+    sim = simulator()
+    rows = []
+    norm_b, norm_o, gaps = [], [], []
+    for name, fn in DEFAULT_TRACES.items():
+        tr = fn()
+        base = sim.run(tr, OptConfig.baseline())
+        opt = sim.run(tr, OptConfig.full())
+        oi = tr.operational_intensity
+        nb, no = normalized(base.gflops, oi), normalized(opt.gflops, oi)
+        gc = gap_closed(base.gflops, opt.gflops, oi)
+        norm_b.append(nb)
+        norm_o.append(no)
+        gaps.append(gc)
+        pb, po = paper.FIG4_NORMALIZED.get(name, (float("nan"),) * 2)
+        rows.append({
+            "kernel": name, "oi_flops_per_byte": oi,
+            "p_ideal_gflops": p_ideal(oi),
+            "norm_base_sim": nb, "norm_opt_sim": no, "gap_closed_sim": gc,
+            "norm_base_paper": pb, "norm_opt_paper": po,
+            "gap_closed_paper": paper.FIG4_GAP_CLOSED.get(name,
+                                                          float("nan")),
+        })
+    rows.append({
+        "kernel": "GEOMEAN", "oi_flops_per_byte": float("nan"),
+        "p_ideal_gflops": float("nan"),
+        "norm_base_sim": geomean(norm_b), "norm_opt_sim": geomean(norm_o),
+        "gap_closed_sim": geomean([max(g, 1e-6) for g in gaps]),
+        "norm_base_paper": paper.FIG4_GEOMEAN_NORM[0],
+        "norm_opt_paper": paper.FIG4_GEOMEAN_NORM[1],
+        "gap_closed_paper": paper.FIG4_GEOMEAN_GAP_CLOSED,
+    })
+    return rows
+
+
+def main() -> None:
+    emit(run(), "fig4_roofline")
+
+
+if __name__ == "__main__":
+    main()

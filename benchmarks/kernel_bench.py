@@ -1,0 +1,96 @@
+"""TPU kernel microbench: wall-time per call (CPU interpret — structural)
+plus the analytic TPU roofline estimate per kernel variant, fused vs
+unfused (the paper's O-optimization quantified on v5e constants)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.core.roofline import TPU_V5E
+from repro.kernels import ops
+from repro.kernels.flash_attention import attention_flops_bytes
+from repro.kernels.gemm import gemm_flops_bytes
+from repro.kernels.streamer import hbm_roundtrip_bytes
+
+
+def _roofline_us(flops: float, bytes_: float) -> float:
+    return max(flops / TPU_V5E.peak_flops, bytes_ / TPU_V5E.hbm_bw) * 1e6
+
+
+def run() -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    rows = []
+
+    n = 1 << 16
+    x, y, w = (jax.random.normal(k, (n,)) for k in ks[:3])
+    for name, fn, fused in (("chain_fused", ops.fused_chain, True),
+                            ("chain_unfused", ops.unfused_chain, False)):
+        b = hbm_roundtrip_bytes((n,), jnp.float32, fused=fused)
+        rows.append({
+            "kernel": name, "shape": f"n={n}",
+            "cpu_interpret_us": timed(fn, x, y, w),
+            "tpu_roofline_us": _roofline_us(2 * n, b),
+            "hbm_bytes": b,
+        })
+
+    m = kk = nn = 512
+    a = jax.random.normal(ks[0], (m, kk), jnp.float32)
+    bmat = jax.random.normal(ks[1], (kk, nn), jnp.float32)
+    bias = jax.random.normal(ks[2], (nn,), jnp.float32)
+    for name, fn, fused in (
+            ("gemm_fused_epilogue",
+             lambda: ops.gemm(a, bmat, bias, "gelu"), True),
+            ("gemm_unfused_epilogue",
+             lambda: ops.gemm_unfused_epilogue(a, bmat, bias, "gelu"),
+             False)):
+        fl, by = gemm_flops_bytes(m, nn, kk, jnp.float32,
+                                  fused_epilogue=fused)
+        rows.append({
+            "kernel": name, "shape": f"{m}x{kk}x{nn}",
+            "cpu_interpret_us": timed(fn),
+            "tpu_roofline_us": _roofline_us(fl, by),
+            "hbm_bytes": by,
+        })
+
+    b_, s, h, d = 1, 512, 4, 64
+    q = jax.random.normal(ks[0], (b_, s, h, d), jnp.float32)
+    kv = jax.random.normal(ks[1], (b_, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b_, s, h, d), jnp.float32)
+    for name, flash in (("flash_attention", True),
+                        ("naive_attention_model", False)):
+        fl, by = attention_flops_bytes(b_, s, s, h, d, jnp.float32,
+                                       flash=flash)
+        rows.append({
+            "kernel": name, "shape": f"b{b_} s{s} h{h} d{d}",
+            "cpu_interpret_us": (timed(lambda: ops.flash_attention(
+                q, kv, v, causal=True, bq=128, bkv=128))
+                if flash else float("nan")),
+            "tpu_roofline_us": _roofline_us(fl, by),
+            "hbm_bytes": by,
+        })
+
+    xs = jax.random.normal(ks[0], (2, 512, 8, 64), jnp.float32)
+    dts = jax.nn.softplus(jax.random.normal(ks[1], (2, 512, 8)))
+    a_ = -jnp.exp(jax.random.normal(ks[2], (8,)))
+    bs = jax.random.normal(ks[3], (2, 512, 1, 64), jnp.float32)
+    cs = jax.random.normal(ks[0], (2, 512, 1, 64), jnp.float32)
+    ssd_flops = 2 * 2 * 512 * 8 * (64 * 64 * 2 + 128 * 64)
+    ssd_bytes = (xs.size + bs.size + cs.size + xs.size) * 4
+    rows.append({
+        "kernel": "ssd_chunked", "shape": "b2 l512 h8 p64 n64",
+        "cpu_interpret_us": timed(
+            lambda: ops.ssd_batched(xs, dts, a_, bs, cs, chunk=128)),
+        "tpu_roofline_us": _roofline_us(ssd_flops, ssd_bytes),
+        "hbm_bytes": ssd_bytes,
+    })
+    return rows
+
+
+def main() -> None:
+    emit(run(), "kernel_bench")
+
+
+if __name__ == "__main__":
+    main()

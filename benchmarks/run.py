@@ -1,0 +1,29 @@
+"""Run every benchmark (one per paper table/figure + kernel/dry-run
+tables).  Prints CSV per table and persists to experiments/benchmarks/."""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO / "src") not in sys.path:
+    sys.path.insert(0, str(REPO / "src"))
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+
+def main() -> None:
+    from benchmarks import (dryrun_table, fig3_speedup, fig4_roofline,
+                            fig5_sensitivity, kernel_bench, table1_ablation,
+                            table2_efficiency)
+    fig3_speedup.main()
+    fig4_roofline.main()
+    table1_ablation.main()
+    fig5_sensitivity.main()
+    table2_efficiency.main()
+    kernel_bench.main()
+    dryrun_table.main()
+
+
+if __name__ == "__main__":
+    main()

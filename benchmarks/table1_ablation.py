@@ -1,0 +1,41 @@
+"""Table I: 2^3 orthogonal ablation of the M/C/O optimization classes."""
+from __future__ import annotations
+
+from benchmarks.common import emit, simulator
+from repro.core import paper
+from repro.core.isa import ABLATION_GRID, OptConfig, geomean
+from repro.core.traces import DEFAULT_TRACES
+
+KERNELS = ("scal", "axpy", "ger", "gemm", "gemv", "dotp")
+
+
+def run() -> list[dict]:
+    sim = simulator()
+    rows = []
+    cols = {}
+    for name in KERNELS:
+        tr = DEFAULT_TRACES[name]()
+        base = sim.run(tr, OptConfig.baseline()).cycles
+        row = {"kernel": name}
+        for label, cfg in zip(paper.TABLE1_CONFIGS, ABLATION_GRID):
+            s = base / sim.run(tr, cfg).cycles
+            row[f"{label}_sim"] = s
+            cols.setdefault(label, []).append(s)
+        for label, val in zip(paper.TABLE1_CONFIGS, paper.TABLE1[name]):
+            row[f"{label}_paper"] = val
+        rows.append(row)
+    gm = {"kernel": "GEOMEAN"}
+    for label in paper.TABLE1_CONFIGS:
+        gm[f"{label}_sim"] = geomean(cols[label])
+    for label, val in zip(paper.TABLE1_CONFIGS, paper.TABLE1_GEOMEAN):
+        gm[f"{label}_paper"] = val
+    rows.append(gm)
+    return rows
+
+
+def main() -> None:
+    emit(run(), "table1_ablation")
+
+
+if __name__ == "__main__":
+    main()

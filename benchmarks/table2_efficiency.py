@@ -1,0 +1,97 @@
+"""Table II: PPA / efficiency positioning.
+
+Synthesis is impossible in this container; we reproduce the table's
+*structure* with an analytic resource model: the added hardware (descriptor
+buffers, prefetch data buffer, dual-source operand queues, forwarding
+muxes) is costed in SRAM bits + register-equivalents against the published
+Ara area, and throughput comes from the calibrated simulator on the same
+single-precision 128x128 gemm the paper measures.  Published values are
+carried alongside for comparison.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, simulator
+from repro.core import paper
+from repro.core.isa import OptConfig
+from repro.core.traces import gemm
+
+# Resource model (TSMC28-ish densities): SRAM ~ 0.25 mm^2/Mbit,
+# std-cell regs ~ 1.5x SRAM bit area.
+SRAM_MM2_PER_MBIT = 0.25
+ARA_BASE_MM2 = paper.TABLE2["area_mm2"][0]
+
+ADDED_STRUCTURES = {
+    # name: (bits, kind)
+    "descriptor_buffer": (8 * 128, "reg"),          # 8 descriptors x 128b
+    "transaction_queue": (16 * 96, "reg"),
+    "prefetch_data_buffer": (2 * 1024 * 8 * 4, "sram"),   # 2x next-VL of fp32
+    "dual_source_operand_queues": (4 * 2 * 10 * 64, "reg"),  # /lane x2 src
+    "forwarding_network": (4 * 6 * 64, "reg"),      # per-lane 6-source mux
+    "read_done_aggregator": (512, "reg"),
+}
+
+
+def added_area_mm2() -> float:
+    total = 0.0
+    for bits, kind in ADDED_STRUCTURES.values():
+        mm2_per_bit = SRAM_MM2_PER_MBIT / 1e6 * (1.5 if kind == "reg"
+                                                 else 1.0)
+        total += bits * mm2_per_bit
+    # control overhead factor for FSMs/arbiters around the new queues
+    return total * 2.5
+
+
+def run() -> list[dict]:
+    sim = simulator()
+    tr = gemm(128, 128, 128)
+    base = sim.run(tr, OptConfig.baseline())
+    opt = sim.run(tr, OptConfig.full())
+    add = added_area_mm2()
+    area_opt = ARA_BASE_MM2 + add
+    # Power model: dynamic power scales with achieved activity (lane
+    # utilization) plus the new always-on structures.
+    p_base = paper.TABLE2["power_mw"][0]
+    p_opt = p_base * (opt.lane_utilization / max(base.lane_utilization,
+                                                 1e-9)) * 0.95 + 12.0
+    rows = [{
+        "metric": "perf_gflops",
+        "ara_sim": base.gflops, "ara_opt_sim": opt.gflops,
+        "ratio_sim": opt.gflops / base.gflops,
+        "ara_paper": paper.TABLE2["perf_gflops"][0],
+        "ara_opt_paper": paper.TABLE2["perf_gflops"][1],
+    }, {
+        "metric": "area_mm2",
+        "ara_sim": ARA_BASE_MM2, "ara_opt_sim": area_opt,
+        "ratio_sim": area_opt / ARA_BASE_MM2,
+        "ara_paper": paper.TABLE2["area_mm2"][0],
+        "ara_opt_paper": paper.TABLE2["area_mm2"][1],
+    }, {
+        "metric": "power_mw",
+        "ara_sim": p_base, "ara_opt_sim": p_opt,
+        "ratio_sim": p_opt / p_base,
+        "ara_paper": paper.TABLE2["power_mw"][0],
+        "ara_opt_paper": paper.TABLE2["power_mw"][1],
+    }, {
+        "metric": "area_eff_gflops_mm2",
+        "ara_sim": base.gflops / ARA_BASE_MM2,
+        "ara_opt_sim": opt.gflops / area_opt,
+        "ratio_sim": (opt.gflops / area_opt) / (base.gflops / ARA_BASE_MM2),
+        "ara_paper": paper.TABLE2["area_eff"][0],
+        "ara_opt_paper": paper.TABLE2["area_eff"][1],
+    }, {
+        "metric": "energy_eff_gflops_w",
+        "ara_sim": base.gflops / (p_base / 1e3),
+        "ara_opt_sim": opt.gflops / (p_opt / 1e3),
+        "ratio_sim": (opt.gflops / p_opt) / (base.gflops / p_base),
+        "ara_paper": paper.TABLE2["energy_eff"][0],
+        "ara_opt_paper": paper.TABLE2["energy_eff"][1],
+    }]
+    return rows
+
+
+def main() -> None:
+    emit(run(), "table2_efficiency")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Reproduce the paper's evaluation section in one script:
+Fig. 3 (speedups), Fig. 4 (gap-closed), Table I (ablation),
+Fig. 5 (size sensitivity) — from the calibrated simulator.
+
+    PYTHONPATH=src python examples/ara_paper_repro.py
+"""
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO))
+
+from benchmarks import (fig3_speedup, fig4_roofline, fig5_sensitivity,
+                        table1_ablation)
+
+fig3_speedup.main()
+print()
+fig4_roofline.main()
+print()
+table1_ablation.main()
+print()
+fig5_sensitivity.main()

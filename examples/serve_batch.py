@@ -1,0 +1,54 @@
+"""Batched serving example: prefill + decode across the model zoo,
+demonstrating every cache type (GQA linear, sliding-window ring, MLA
+latent, SSD state, RG-LRU state).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, reduced
+from repro.models import init_model
+from repro.serve.engine import Engine
+
+ARCH_LIST = ["glm4-9b", "gemma3-27b", "deepseek-v2-236b",
+             "recurrentgemma-2b", "mamba2-780m"]
+
+
+def type_of_cache(cfg):
+    kinds = set(cfg.pattern)
+    if kinds == {"ssd"}:
+        return "ssm-state"
+    if "rglru" in kinds:
+        return "rnn+ring"
+    if "mla" in kinds:
+        return "mla-latent"
+    if "local" in kinds and "attn" in kinds:
+        return "ring+linear"
+    return "linear-kv"
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    for name in ARCH_LIST:
+        cfg = reduced(ARCHS[name])
+        params = init_model(key, cfg)
+        eng = Engine(params, cfg, s_max=96, cache_dtype=jnp.float32)
+        prompt = jax.random.randint(key, (4, 24), 0, cfg.vocab_size)
+
+        t0 = time.perf_counter()
+        out = eng.generate(prompt, max_new=16, temperature=0.8, key=key)
+        dt = time.perf_counter() - t0
+        print(f"{name:22s} cache={type_of_cache(cfg):12s} "
+              f"generated {tuple(out.shape)} in {dt:.1f}s "
+              f"(first row: {out[0, :8].tolist()})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""End-to-end training driver example: train a small LM for a few hundred
+steps with the fault-tolerant loop (checkpoints + resumability), then
+validate resume-from-checkpoint.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+Scale knobs: this same driver trains the ~100M-param preset on real
+hardware (--layers 8 --d-model 512 --batch 32 --seq 1024); the default is
+CPU-sized so the example completes in minutes.
+"""
+import argparse
+import dataclasses
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCHS, reduced
+from repro.data.pipeline import SyntheticLM
+from repro.models import init_model
+from repro.train import optimizer as opt
+from repro.train.loop import LoopConfig, run
+from repro.train.step import StepConfig, init_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    args = ap.parse_args()
+
+    cfg = reduced(ARCHS[args.arch])
+    cfg = dataclasses.replace(cfg, n_layers=args.layers,
+                              d_model=args.d_model,
+                              d_ff=4 * args.d_model)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name}  params={n:,}")
+
+    sched = opt.cosine_schedule(args.lr, warmup=args.steps // 10,
+                                total=args.steps)
+    tstep = jax.jit(make_train_step(cfg, StepConfig(
+        microbatches=2, adamw=opt.AdamWConfig(lr=args.lr),
+        schedule=sched)), donate_argnums=(0,))
+
+    workdir = pathlib.Path(tempfile.mkdtemp(prefix="repro_train_"))
+    ckpt = CheckpointManager(workdir / "ckpt", keep=2)
+    data = SyntheticLM(cfg, batch=args.batch, seq_len=args.seq, seed=1)
+    res = run(tstep, init_state(params), data, ckpt,
+              LoopConfig(total_steps=args.steps,
+                         ckpt_every=max(args.steps // 4, 1),
+                         log_every=20),
+              log_path=str(workdir / "train.jsonl"))
+    losses = [h["loss"] for h in res.history]
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} over {len(losses)} steps")
+
+    # Demonstrate restart: a second run() resumes from the final checkpoint.
+    data2 = SyntheticLM(cfg, batch=args.batch, seq_len=args.seq, seed=1)
+    res2 = run(tstep, init_state(init_model(jax.random.PRNGKey(0), cfg)),
+               data2, ckpt,
+               LoopConfig(total_steps=args.steps + 20,
+                          ckpt_every=10, log_every=20))
+    print(f"resumed from step {res2.resumed_from}, continued to "
+          f"{res2.history[-1]['step']}: loss {res2.history[-1]['loss']:.4f}")
+    print(f"artifacts: {workdir}")
+
+
+if __name__ == "__main__":
+    main()

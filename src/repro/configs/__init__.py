@@ -1,0 +1,7 @@
+"""Architecture configs, shapes, and the simulator hardware config."""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ARCHS, get, reduced
+from repro.configs.shapes import SHAPES, ShapeSpec, cells, skip_reason
+
+__all__ = ["ModelConfig", "ARCHS", "get", "reduced", "SHAPES", "ShapeSpec",
+           "cells", "skip_reason"]

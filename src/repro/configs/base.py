@@ -1,0 +1,169 @@
+"""Model configuration shared by all assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # Block pattern: mixer type per layer, cycled (gemma3 5:1, griffin 1:2).
+    pattern: tuple[str, ...] = ("attn",)   # attn | local | mla | ssd | rglru
+    ffn: str = "glu"                       # glu | mlp | moe | none
+    act: str = "silu"
+    norm: str = "rmsnorm"                  # rmsnorm | layernorm | gemma
+    qkv_bias: bool = False
+    mlp_bias: bool = False
+    qk_norm: bool = False
+    logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    rope_theta: float = 1e4
+    rope_theta_global: float | None = None  # gemma3: 1M on global layers
+    sliding_window: int = 4096              # "local" mixers
+    tie_embeddings: bool = False
+    embed_scale: bool = False               # gemma: embeds * sqrt(d)
+    encoder_only: bool = False
+    causal: bool = True
+
+    # MoE.
+    n_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+
+    # MLA (DeepSeek-V2).
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # SSD (Mamba-2).
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_expand: int = 2
+    conv_kernel: int = 4
+    ssm_chunk: int = 128
+
+    # RG-LRU (Griffin / RecurrentGemma).
+    lru_width: int = 0
+
+    # Modality (frontend stubs per the brief).
+    modality: str = "text"                 # text | audio | vlm
+    n_img_tokens: int = 0                  # vlm: fixed image-prefix length
+
+    # Numerics / implementation.
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    attn_impl: str = "chunked"             # chunked (flash-like) | naive
+    attn_chunk: int = 1024
+    use_pallas: bool = False               # route hot paths to Pallas kernels
+    remat: bool = True
+    scan_layers: bool = True
+    # Distribution strategy knobs (§Perf hillclimb levers).
+    sharding_mode: str = "tp"              # tp (Megatron) | fsdp (pure DP)
+    use_cp_decode: bool = False            # shard_map context-parallel decode
+
+    # ----- derived -----------------------------------------------------
+    @property
+    def n_rep(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def mixer_at(self, layer: int) -> str:
+        return self.pattern[layer % len(self.pattern)]
+
+    def ffn_at(self, layer: int) -> str:
+        if self.ffn == "moe" and layer < self.first_dense_layers:
+            return "glu"
+        return self.ffn
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def rnn_width(self) -> int:
+        return self.lru_width or self.d_model
+
+    # ----- analytic param counts (roofline MODEL_FLOPS) ----------------
+    def _mixer_params(self, kind: str) -> int:
+        d = self.d_model
+        if kind in ("attn", "local"):
+            q = d * self.n_heads * self.head_dim
+            kv = 2 * d * self.n_kv_heads * self.head_dim
+            o = self.n_heads * self.head_dim * d
+            return q + kv + o
+        if kind == "mla":
+            qa = d * self.q_lora_rank
+            qb = self.q_lora_rank * self.n_heads * (
+                self.qk_nope_head_dim + self.qk_rope_head_dim)
+            kva = d * (self.kv_lora_rank + self.qk_rope_head_dim)
+            kvb = self.kv_lora_rank * self.n_heads * (
+                self.qk_nope_head_dim + self.v_head_dim)
+            o = self.n_heads * self.v_head_dim * d
+            return qa + qb + kva + kvb + o
+        if kind == "ssd":
+            di, g, n, h = (self.d_inner, self.ssm_ngroups, self.ssm_state,
+                           self.ssm_nheads)
+            in_p = d * (2 * di + 2 * g * n + h)
+            conv = self.conv_kernel * (di + 2 * g * n)
+            out = di * d
+            return in_p + conv + out + 2 * h
+        if kind == "rglru":
+            w = self.rnn_width
+            return 2 * d * w + self.conv_kernel * w + 2 * w * w + w * d
+        raise ValueError(kind)
+
+    def _ffn_params(self, kind: str) -> int:
+        d = self.d_model
+        if kind == "none":
+            return 0
+        if kind == "mlp":
+            return 2 * d * self.d_ff
+        if kind == "glu":
+            return 3 * d * self.d_ff
+        if kind == "moe":
+            expert = 3 * d * self.moe_d_ff
+            shared = self.n_shared_experts * expert
+            return self.n_experts * expert + shared + d * self.n_experts
+        raise ValueError(kind)
+
+    def param_count(self) -> int:
+        total = self.vocab_size * self.d_model
+        if not self.tie_embeddings and not self.encoder_only:
+            total += self.vocab_size * self.d_model
+        for i in range(self.n_layers):
+            total += self._mixer_params(self.mixer_at(i))
+            total += self._ffn_params(self.ffn_at(i))
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k + shared only)."""
+        total = self.vocab_size * self.d_model
+        if not self.tie_embeddings and not self.encoder_only:
+            total += self.vocab_size * self.d_model
+        for i in range(self.n_layers):
+            total += self._mixer_params(self.mixer_at(i))
+            kind = self.ffn_at(i)
+            if kind == "moe":
+                expert = 3 * self.d_model * self.moe_d_ff
+                total += (self.moe_top_k + self.n_shared_experts) * expert
+                total += self.d_model * self.n_experts
+            else:
+                total += self._ffn_params(kind)
+        return total

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see registry.py for the sourced spec)."""
+from repro.configs.registry import DEEPSEEK_V2_236B as CONFIG, reduced
+
+SMOKE = reduced(CONFIG)

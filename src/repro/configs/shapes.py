@@ -1,0 +1,39 @@
+"""Assigned input shapes and the (arch x shape) cell matrix."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+#: Archs whose attention is sub-quadratic / hybrid (long_500k runs).
+LONG_CONTEXT_OK = {"gemma3-27b", "recurrentgemma-2b", "mamba2-780m"}
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> str | None:
+    """Why a cell is skipped, or None if it runs (DESIGN.md §Arch-applic.)."""
+    if cfg.encoder_only and shape.kind == "decode":
+        return "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and cfg.name not in LONG_CONTEXT_OK:
+        return ("pure full-attention arch: 500k context is out of scope "
+                "(needs sub-quadratic attention)")
+    return None
+
+
+def cells(cfg: ModelConfig) -> list[tuple[ShapeSpec, str | None]]:
+    return [(s, skip_reason(cfg, s)) for s in SHAPES.values()]

@@ -1,0 +1,21 @@
+"""Core: the paper's contribution — ideal multi-lane chaining model,
+sustained-throughput simulator, and roofline analysis."""
+from repro.core.chaining import (ChainSpec, Deviation, IDEAL, attribute,
+                                 ii_eff_from_rates, pipeline_efficiency,
+                                 pipeline_spec)
+from repro.core.isa import (ABLATION_GRID, KernelTrace, MachineConfig,
+                            OpKind, OptConfig, Stride, VInstr, geomean)
+from repro.core.roofline import (ARA_PEAK_BW, ARA_PEAK_GFLOPS, RooflineTerms,
+                                 TPU_V5E, TPUSpec, gap_closed,
+                                 model_flops_inference, model_flops_training,
+                                 normalized, p_ideal)
+from repro.core.simulator import AraSimulator, SimParams, SimResult
+
+__all__ = [
+    "ChainSpec", "Deviation", "IDEAL", "attribute", "ii_eff_from_rates",
+    "pipeline_efficiency", "pipeline_spec", "ABLATION_GRID", "KernelTrace",
+    "MachineConfig", "OpKind", "OptConfig", "Stride", "VInstr", "geomean",
+    "ARA_PEAK_BW", "ARA_PEAK_GFLOPS", "RooflineTerms", "TPU_V5E", "TPUSpec",
+    "gap_closed", "model_flops_inference", "model_flops_training",
+    "normalized", "p_ideal", "AraSimulator", "SimParams", "SimResult",
+]

@@ -1,0 +1,187 @@
+"""Calibrate the simulator's baseline-side parameters against the paper.
+
+The RTL microarchitecture's exact timings are not published, so we fit a
+small set of *physical* parameters (memory latency, per-burst overhead, bus
+turnaround, issue gap, WAR release overhead, write-back/re-read delay, queue
+depths) to the paper's measurements:
+
+  targets:  Fig. 3 full-configuration speedups (11 kernels, weight 1.0),
+            Fig. 4 baseline normalized performance (4 kernels, weight 1.5),
+            Table I single-class ablation columns for scal/axpy/gemm/dotp
+            (weight 0.5 — structural, keeps M/C/O attribution honest).
+
+Search: seeded random search followed by coordinate refinement.  The result
+is written to ``src/repro/configs/ara_calibrated.json`` and loaded by
+``repro.configs.ara``.  Fidelity is reported in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import pathlib
+import random
+
+from repro.core import paper
+from repro.core.isa import OptConfig, geomean
+from repro.core.roofline import normalized
+from repro.core.simulator import AraSimulator, SimParams
+from repro.core.traces import DEFAULT_TRACES
+
+# Parameter search space: (name, lo, hi).  tx_ovh is bounded low because
+# back-to-back unit-stride loads stream efficiently even in baseline Ara
+# (Table I: dotp M = 1.00); the dominant baseline memory losses are
+# store-coupled (r/w interference + latency re-exposure behind stores).
+SPACE = [
+    ("mem_latency", 24.0, 140.0),
+    ("tx_ovh_base", 0.02, 0.6),
+    ("rw_turnaround_base", 2.0, 30.0),
+    ("store_commit_base", 0.0, 120.0),
+    ("issue_gap_base", 1.0, 8.0),
+    ("war_release_ovh", 2.0, 40.0),
+    ("d_chain_base", 3.0, 30.0),
+    ("queue_adv_base", 4.0, 64.0),
+    ("queue_adv_opt", 64.0, 256.0),
+    ("idx_ovh_base", 0.5, 4.0),
+]
+
+# Hand-derived seed (napkin math over scal/axpy periods; see EXPERIMENTS.md
+# §Paper-repro): random search refines from here.
+SEED_CANDIDATE = {
+    "mem_latency": 70.0, "tx_ovh_base": 0.1, "rw_turnaround_base": 10.0,
+    "store_commit_base": 30.0, "issue_gap_base": 3.0,
+    "war_release_ovh": 15.0, "d_chain_base": 15.0, "queue_adv_base": 12.0,
+    "queue_adv_opt": 160.0, "idx_ovh_base": 2.0,
+}
+
+ABL_KERNELS = ("scal", "axpy", "gemm", "dotp")
+ABL_SINGLES = {"M": OptConfig(True, False, False),
+               "C": OptConfig(False, True, False),
+               "O": OptConfig(False, False, True),
+               "M+C": OptConfig(True, True, False)}
+CAL_PATH = pathlib.Path(__file__).resolve().parents[1] / "configs" / \
+    "ara_calibrated.json"
+
+
+def _traces():
+    return {k: fn() for k, fn in DEFAULT_TRACES.items()}
+
+
+def evaluate(params: SimParams, traces=None) -> dict:
+    """Simulate everything the loss needs; returns a metrics dict."""
+    traces = traces or _traces()
+    sim = AraSimulator(params=params)
+    out = {"speedup": {}, "norm_base": {}, "norm_opt": {}, "ablation": {}}
+    base_cycles = {}
+    for name, tr in traces.items():
+        b = sim.run(tr, OptConfig.baseline())
+        o = sim.run(tr, OptConfig.full())
+        base_cycles[name] = b.cycles
+        out["speedup"][name] = b.cycles / o.cycles
+        oi = tr.operational_intensity
+        out["norm_base"][name] = normalized(b.gflops, oi)
+        out["norm_opt"][name] = normalized(o.gflops, oi)
+    for name in ABL_KERNELS:
+        tr = traces[name]
+        row = {}
+        for label, cfg in ABL_SINGLES.items():
+            row[label] = base_cycles[name] / sim.run(tr, cfg).cycles
+        out["ablation"][name] = row
+    out["geomean_speedup"] = geomean(list(out["speedup"].values()))
+    out["geomean_norm_base"] = geomean(list(out["norm_base"].values()))
+    out["geomean_norm_opt"] = geomean(list(out["norm_opt"].values()))
+    return out
+
+
+def loss(metrics: dict) -> float:
+    err = 0.0
+    for k, tgt in paper.FIG3_SPEEDUP.items():
+        err += (math.log(metrics["speedup"][k] / tgt)) ** 2
+    for k, (nb, no) in paper.FIG4_NORMALIZED.items():
+        err += 1.5 * (metrics["norm_base"][k] - nb) ** 2
+        err += 0.75 * (metrics["norm_opt"][k] - no) ** 2
+    cols = dict(zip(paper.TABLE1_CONFIGS, range(7)))
+    for k in ABL_KERNELS:
+        for label in ("M", "C", "O", "M+C"):
+            tgt = paper.TABLE1[k][cols[label]]
+            err += 0.5 * (math.log(metrics["ablation"][k][label] / tgt)) ** 2
+    return err
+
+
+def _loss_of(vals: dict, traces) -> float:
+    return loss(evaluate(SimParams(**vals), traces))
+
+
+def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
+              verbose: bool = True) -> tuple[SimParams, float]:
+    rng = random.Random(seed)
+    traces = _traces()
+    defaults = dataclasses.asdict(SimParams())
+
+    def sample() -> dict:
+        vals = dict(defaults)
+        for name, lo, hi in SPACE:
+            vals[name] = rng.uniform(lo, hi)
+        vals["idx_ovh_opt"] = 0.9 * vals["idx_ovh_base"]
+        return vals
+
+    best_vals = dict(defaults, **SEED_CANDIDATE)
+    best_vals["idx_ovh_opt"] = 0.9 * best_vals["idx_ovh_base"]
+    best = _loss_of(best_vals, traces)
+    if verbose:
+        print(f"[seed] loss={best:.4f}")
+    for i in range(iters):
+        vals = sample()
+        l = _loss_of(vals, traces)
+        if l < best:
+            best, best_vals = l, vals
+            if verbose:
+                print(f"[{i:4d}] loss={best:.4f}")
+    # Coordinate refinement.
+    for _ in range(refine_rounds):
+        for name, lo, hi in SPACE:
+            cur = best_vals[name]
+            for f in (0.5, 0.75, 0.9, 1.1, 1.33, 2.0):
+                cand = dict(best_vals)
+                cand[name] = min(hi, max(lo, cur * f))
+                if name == "idx_ovh_base":
+                    cand["idx_ovh_opt"] = 0.9 * cand[name]
+                l = _loss_of(cand, traces)
+                if l < best:
+                    best, best_vals = l, cand
+        if verbose:
+            print(f"[refine] loss={best:.4f}")
+    return SimParams(**best_vals), best
+
+
+def save(params: SimParams, loss_value: float,
+         path: pathlib.Path = CAL_PATH) -> None:
+    payload = {"params": dataclasses.asdict(params), "loss": loss_value}
+    path.write_text(json.dumps(payload, indent=2))
+
+
+def load(path: pathlib.Path = CAL_PATH) -> SimParams:
+    if path.exists():
+        payload = json.loads(path.read_text())
+        return SimParams(**payload["params"])
+    return SimParams()
+
+
+def main() -> None:  # pragma: no cover - CLI
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    params, best = calibrate(iters=args.iters, seed=args.seed)
+    save(params, best)
+    metrics = evaluate(params)
+    print(json.dumps({"loss": best,
+                      "speedup": metrics["speedup"],
+                      "geomean": metrics["geomean_speedup"],
+                      "norm_base": metrics["norm_base"]}, indent=2))
+    print(f"saved -> {CAL_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Ideal multi-lane chaining model (paper §II.C, Eq. (1)-(5)).
+
+The model decomposes execution of a dependent vector-instruction chain into
+prologue startup, steady-state progression, and tail drain:
+
+    p_N      = sum_i d_{i,i+1} + T_fill                             (1)
+    T_steady = ceil(VL / L)                                          (2)
+    T_ideal  = p_N + T_steady + T_tail                               (3)
+    T_real   = (p_N + dp) + T_steady * II_eff + (T_tail + dt)        (4)
+    dT       = dp + T_steady * (II_eff - 1) + dt                     (5)
+
+It is used three ways in this framework:
+  * as the analytical reference the simulator is measured against,
+  * to attribute a simulated/real execution into (dp, II_eff, dt),
+  * to model TPU pipeline prologue/steady/tail (Pallas grid pipelines and
+    pipeline-parallel schedules share exactly this decomposition).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainSpec:
+    """A dependent chain of N stages over VL elements on L lanes."""
+    startup_delays: tuple[float, ...]   # d_{i,i+1}, length N-1
+    fill_time: float                    # T_fill
+    tail_time: float                    # T_tail
+    vl: int
+    lanes: int
+
+    @property
+    def prologue(self) -> float:
+        """Eq. (1): ideal prologue p_N."""
+        return sum(self.startup_delays) + self.fill_time
+
+    @property
+    def steady_ideal(self) -> float:
+        """Eq. (2): ideal steady-state time (one element group / cycle)."""
+        return math.ceil(self.vl / self.lanes)
+
+    @property
+    def t_ideal(self) -> float:
+        """Eq. (3)."""
+        return self.prologue + self.steady_ideal + self.tail_time
+
+
+@dataclasses.dataclass(frozen=True)
+class Deviation:
+    """Real-execution deviation terms of Eq. (4)."""
+    dp: float          # additional prologue delay
+    ii_eff: float      # effective initiation interval (cycles/element group)
+    dt: float          # additional tail overhead
+
+    def t_real(self, spec: ChainSpec) -> float:
+        """Eq. (4)."""
+        return ((spec.prologue + self.dp)
+                + spec.steady_ideal * self.ii_eff
+                + (spec.tail_time + self.dt))
+
+    def loss(self, spec: ChainSpec) -> float:
+        """Eq. (5): dT = dp + T_steady*(II_eff - 1) + dt."""
+        return (self.dp + spec.steady_ideal * (self.ii_eff - 1.0) + self.dt)
+
+
+IDEAL = Deviation(dp=0.0, ii_eff=1.0, dt=0.0)
+
+
+def attribute(spec: ChainSpec, t_real: float, prologue_real: float,
+              tail_real: float) -> Deviation:
+    """Back out (dp, II_eff, dt) from measured phase times.
+
+    Given a measured total split into (prologue_real, steady_real,
+    tail_real), returns the deviation triple such that
+    ``Deviation.t_real(spec) == t_real`` exactly.
+    """
+    dp = prologue_real - spec.prologue
+    dt = tail_real - spec.tail_time
+    steady_real = t_real - prologue_real - tail_real
+    ii_eff = steady_real / max(spec.steady_ideal, 1e-12)
+    return Deviation(dp=dp, ii_eff=ii_eff, dt=dt)
+
+
+def pipeline_spec(num_stages: int, per_stage_delay: float, num_items: int,
+                  item_time: float, tail: float | None = None) -> ChainSpec:
+    """Chaining spec for a software pipeline (Pallas grid / PP schedule).
+
+    A double-buffered Pallas kernel over G grid steps, or a pipeline-parallel
+    schedule over M microbatches, is the same object as the paper's chain:
+    prologue = stage fill, steady state = one item per interval, tail =
+    drain.  `item_time` plays the role of 1/L (time per element group).
+    """
+    delays = tuple([per_stage_delay] * max(num_stages - 1, 0))
+    return ChainSpec(startup_delays=delays,
+                     fill_time=per_stage_delay,
+                     tail_time=per_stage_delay if tail is None else tail,
+                     vl=num_items,
+                     lanes=max(int(round(1.0 / item_time)), 1)
+                     if item_time <= 1.0 else 1)
+
+
+def pipeline_efficiency(num_items: int, num_stages: int) -> float:
+    """Steady-state fraction of an ideal chained pipeline:
+    items / (items + stages - 1).  The classic bubble formula — identical
+    in form to T_steady / T_ideal with unit delays."""
+    return num_items / float(num_items + num_stages - 1)
+
+
+def ii_eff_from_rates(consume_rate: float,
+                      supply_rates: Sequence[float]) -> float:
+    """Steady-state II_eff when progression is gated by the slowest of the
+    consumer and its suppliers (paper §IV: II_eff > 1 whenever data supply,
+    dependence release, or operand delivery falls behind the lanes)."""
+    rates = [consume_rate, *supply_rates]
+    slowest = min(r for r in rates if r > 0)
+    return consume_rate / slowest

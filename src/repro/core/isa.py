@@ -1,0 +1,165 @@
+"""Vector-ISA trace IR for the Ara sustained-throughput simulator.
+
+The paper analyzes dependent vector-instruction chains (vle -> vfmul ->
+vfadd -> vse) executing on a multi-lane RVV machine.  We represent a kernel
+as a program-ordered list of strip-mined vector instructions; the simulator
+(`repro.core.simulator`) assigns cycle timings under baseline-Ara or Ara-Opt
+semantics.
+
+Register semantics follow RVV: a named vector register (group) is written by
+exactly one in-flight producer at a time; RAW consumers may chain off the
+producer's first results; WAR (a writer overwriting a register still being
+read) is the hazard whose release policy the paper's C-optimization changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Iterator, Sequence
+
+
+class OpKind(enum.Enum):
+    LOAD = "load"          # vector load (vle / vlse / vluxei)
+    STORE = "store"        # vector store (vse / vsse / vsuxei)
+    COMPUTE = "compute"    # lane FPU/ALU op (vfmul, vfadd, vfmacc, ...)
+    REDUCE = "reduce"      # vfredsum-style reduction (scalar-out)
+    SLIDE = "slide"        # vslideup/down, gathers within VRF (SLDU)
+
+
+class Stride(enum.Enum):
+    UNIT = "unit"          # vle32.v   — prefetchable
+    STRIDED = "strided"    # vlse32.v  — partially prefetchable
+    INDEXED = "indexed"    # vluxei32  — gather; not prefetchable
+
+
+@dataclasses.dataclass(frozen=True)
+class VInstr:
+    """One strip-mined vector instruction.
+
+    Attributes:
+      name: mnemonic, for debugging ("vle32", "vfmacc", ...).
+      kind: resource class.
+      vl: number of elements processed by this strip.
+      sew: element width in bytes.
+      dst: destination register name or None (stores, scalar-out reduces).
+      srcs: vector register names read by this instruction.
+      stride: memory access pattern (memory ops only).
+      flops: floating-point ops performed (vl * flops_per_element).
+      stream: identity of the memory stream this op belongs to (prefetcher
+        state is tracked per stream; e.g. all strips of "x" share a stream).
+      first_strip: True for the first strip of a memory stream (prefetch
+        cannot have warmed the buffer yet).
+    """
+    name: str
+    kind: OpKind
+    vl: int
+    sew: int = 4
+    dst: str | None = None
+    srcs: tuple[str, ...] = ()
+    stride: Stride = Stride.UNIT
+    flops: int = 0
+    stream: str = ""
+    first_strip: bool = False
+
+    @property
+    def bytes(self) -> int:
+        if self.kind in (OpKind.LOAD, OpKind.STORE):
+            return self.vl * self.sew
+        return 0
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTrace:
+    """A complete kernel: instruction stream plus roofline accounting."""
+    name: str
+    instrs: tuple[VInstr, ...]
+    total_flops: int          # useful FLOPs (roofline numerator)
+    total_bytes: int          # bytes that must cross the memory interface
+    problem: str = ""         # human-readable problem size
+
+    @property
+    def operational_intensity(self) -> float:
+        return self.total_flops / max(self.total_bytes, 1)
+
+
+def strips(n: int, vlmax: int) -> Iterator[int]:
+    """Strip-mine n elements into vector lengths of at most vlmax."""
+    done = 0
+    while done < n:
+        vl = min(vlmax, n - done)
+        yield vl
+        done += vl
+
+
+def vlmax_for(sew: int, vlen_bits: int, lmul: int) -> int:
+    return (vlen_bits * lmul) // (8 * sew)
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineConfig:
+    """Fixed hardware configuration (paper §VI.A: 4 lanes, VLEN=1024,
+    DLEN=256, 128-bit AXI at 1 GHz => 16 GB/s, 16 GFLOPS fp32 peak)."""
+    lanes: int = 4
+    vlen_bits: int = 1024
+    dlen_bits: int = 256
+    axi_bytes_per_cycle: int = 16      # 128-bit AXI @ 1 GHz
+    freq_ghz: float = 1.0
+    fu_latency: int = 5                # FPU pipeline depth (cycles)
+    burst_bytes: int = 64              # AXI burst granule for tx accounting
+
+    @property
+    def elems_per_cycle(self) -> int:
+        """fp32 elements the lane datapath retires per cycle (DLEN-wide)."""
+        return self.dlen_bits // 32
+
+    @property
+    def peak_flops(self) -> float:
+        """fp32 FMA peak: DLEN/32 FMA/cycle * 2 flops (paper: 16 GFLOPS)."""
+        return self.elems_per_cycle * 2 * self.freq_ghz * 1e9
+
+    @property
+    def peak_bw(self) -> float:
+        return self.axi_bytes_per_cycle * self.freq_ghz * 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    """Which Ara-Opt optimization classes are enabled (paper Table I)."""
+    memory: bool = False      # M: decoupled front end + next-VL prefetch
+    control: bool = False     # C: early read-dep release + dynamic issue
+    operand: bool = False     # O: multi-source forwarding + dual-source queues
+
+    @classmethod
+    def baseline(cls) -> "OptConfig":
+        return cls(False, False, False)
+
+    @classmethod
+    def full(cls) -> "OptConfig":
+        return cls(True, True, True)
+
+    @property
+    def label(self) -> str:
+        if not (self.memory or self.control or self.operand):
+            return "base"
+        parts = [n for n, on in (("M", self.memory), ("C", self.control),
+                                 ("O", self.operand)) if on]
+        return "+".join(parts)
+
+
+ABLATION_GRID: tuple[OptConfig, ...] = (
+    OptConfig(True, False, False),   # M
+    OptConfig(False, True, False),   # C
+    OptConfig(False, False, True),   # O
+    OptConfig(True, True, False),    # M+C
+    OptConfig(True, False, True),    # M+O
+    OptConfig(False, True, True),    # C+O
+    OptConfig(True, True, True),     # All
+)
+
+
+def geomean(xs: Sequence[float]) -> float:
+    xs = list(xs)
+    if not xs:
+        return float("nan")
+    return math.exp(sum(math.log(max(x, 1e-30)) for x in xs) / len(xs))

@@ -1,0 +1,55 @@
+"""Published numbers from the paper, used for calibration and validation.
+
+Sources: Fig. 3 (speedups, problem sizes), Fig. 4 (normalized performance /
+gap-closed), Table I (2^3 ablation), §VI.C (lane utilization, VRF conflict),
+Table II (PPA).
+"""
+
+# Fig. 3: Ara-Opt speedup over baseline Ara (All configuration).
+FIG3_SPEEDUP = {
+    "scal": 2.41, "axpy": 1.60, "ger": 1.52, "gemm": 1.42,
+    "symv": 1.22, "syrk": 1.24, "dwt": 1.22, "trsm": 1.20, "spmv": 1.18,
+    "dotp": 1.05, "gemv": 1.06,
+}
+FIG3_GEOMEAN = 1.33
+
+# Fig. 4: normalized-to-roofline performance, baseline -> Ara-Opt.
+FIG4_NORMALIZED = {
+    "scal": (0.40, 0.96),
+    "axpy": (0.60, 0.95),
+    "ger": (0.60, 0.91),
+    "gemm": (0.58, 0.83),
+}
+FIG4_GAP_CLOSED = {"scal": 0.937, "axpy": 0.889, "ger": 0.783, "gemm": 0.593}
+FIG4_GEOMEAN_NORM = (0.30, 0.40)
+FIG4_GEOMEAN_GAP_CLOSED = 0.122
+
+# Table I: orthogonal ablation (speedup over baseline).
+TABLE1 = {
+    #         M     C     O     M+C   M+O   C+O   All
+    "scal": (1.24, 1.36, 1.14, 2.09, 1.47, 1.52, 2.41),
+    "axpy": (1.22, 1.05, 1.03, 1.59, 1.12, 1.11, 1.60),
+    "ger":  (1.13, 1.05, 1.03, 1.45, 1.03, 1.11, 1.52),
+    "gemm": (1.26, 1.05, 1.10, 1.41, 1.29, 1.12, 1.42),
+    "gemv": (1.07, 1.00, 1.07, 1.01, 1.07, 1.07, 1.06),
+    "dotp": (1.00, 1.04, 1.04, 1.02, 1.04, 1.06, 1.05),
+}
+TABLE1_CONFIGS = ("M", "C", "O", "M+C", "M+O", "C+O", "All")
+TABLE1_GEOMEAN = (1.15, 1.09, 1.07, 1.38, 1.16, 1.16, 1.45)
+
+# §VI.C lane utilization baseline -> opt.
+LANE_UTILIZATION = {
+    "scal": (0.100, 0.241), "axpy": (0.099, 0.159),
+    "ger": (0.100, 0.152), "gemm": (0.580, 0.827),
+}
+GEMM_VRF_CONFLICT = (0.14, 0.05)
+
+# Table II PPA.
+TABLE2 = {
+    "freq_ghz": 1.0,
+    "perf_gflops": (9.32, 13.28),
+    "area_mm2": (2.64, 2.78),
+    "power_mw": (141.89, 214.05),
+    "energy_eff": (65.68, 62.04),
+    "area_eff": (3.53, 4.78),
+}

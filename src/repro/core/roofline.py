@@ -1,0 +1,126 @@
+"""Roofline models: the paper's Ara roofline (Fig. 4) and the TPU v5e
+roofline used by the dry-run analysis (EXPERIMENTS.md §Roofline).
+
+Paper normalization:  P_ideal = min(P_peak, BW * OI),
+gap-closed ratio     = (P_opt - P_base) / (P_ideal - P_base).
+
+TPU three-term model (per device):
+    compute term    = HLO_FLOPs / peak_FLOPs
+    memory term     = HLO_bytes / HBM_bw
+    collective term = collective_bytes / ICI_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+# --- Ara side (paper §VI.B) -------------------------------------------------
+
+ARA_PEAK_GFLOPS = 16.0      # GFLOPS (4 lanes, fp32 FMA, 1 GHz)
+ARA_PEAK_BW = 16.0          # GB/s (128-bit AXI @ 1 GHz)
+
+
+def p_ideal(oi: float, peak_gflops: float = ARA_PEAK_GFLOPS,
+            bw_gbs: float = ARA_PEAK_BW) -> float:
+    """Roofline bound in GFLOPS for operational intensity `oi` (flops/byte)."""
+    return min(peak_gflops, bw_gbs * oi)
+
+
+def normalized(perf_gflops: float, oi: float, **kw) -> float:
+    return perf_gflops / p_ideal(oi, **kw)
+
+
+def gap_closed(base_gflops: float, opt_gflops: float, oi: float,
+               **kw) -> float:
+    """Fraction of the baseline->roofline gap recovered by the optimization."""
+    ideal = p_ideal(oi, **kw)
+    gap = ideal - base_gflops
+    if gap <= 0:
+        return 1.0
+    return (opt_gflops - base_gflops) / gap
+
+
+# --- TPU side (dry-run §Roofline) -------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    """Hardware constants supplied by the brief (TPU v5e-class chip)."""
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per link (brief: ~50 GB/s)
+
+
+TPU_V5E = TPUSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """Three-term roofline for one compiled (arch x shape x mesh) cell.
+
+    All inputs are per-device quantities (XLA cost_analysis on an SPMD
+    executable reports the per-device partitioned program).
+    """
+    flops: float                 # HLO flops per device
+    hbm_bytes: float             # HLO bytes accessed per device
+    collective_bytes: float      # summed collective operand bytes per device
+    spec: TPUSpec = TPU_V5E
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / self.spec.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / self.spec.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / self.spec.ici_bw
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time estimate: the dominant term (perfect overlap
+        of the other two is the optimistic bound we climb toward)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def step_time_serial_s(self) -> float:
+        """Pessimistic no-overlap bound."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    def roofline_fraction(self, model_flops_per_device: float) -> float:
+        """Fraction of peak sustained on *useful* model FLOPs if the step
+        runs at the dominant-term time: the §Perf score."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return (model_flops_per_device / t) / self.spec.peak_flops
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.collective_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound": self.bound,
+            "step_time_s": self.step_time_s,
+        }
+
+
+def model_flops_training(n_params: float, n_tokens: float) -> float:
+    """6*N*D rule (fwd 2ND + bwd 4ND) for dense training; for MoE pass
+    active params."""
+    return 6.0 * n_params * n_tokens
+
+def model_flops_inference(n_params: float, n_tokens: float) -> float:
+    """2*N*D for a forward pass (prefill) or per decoded token set."""
+    return 2.0 * n_params * n_tokens

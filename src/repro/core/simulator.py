@@ -1,0 +1,298 @@
+"""Strip-level cycle-approximate simulator of Ara / Ara-Opt.
+
+The paper evaluates an RTL implementation; RTL is not reproducible here, so
+we model the machine at vector-instruction (strip) granularity with the
+microarchitectural mechanisms the paper identifies, each switchable per the
+2^3 ablation (Table I):
+
+  M — memory path.  Baseline is demand-driven: a load's DRAM latency is
+      hidden only while the request stream is continuous; when the VLSU's
+      result queue fills because VRF write-back is hazard-gated, back-
+      pressure propagates to transaction generation ("bus-handshake stalls
+      propagate back to address expansion", §IV.A) and the stream gaps,
+      exposing latency.  Coupled address expansion adds per-burst overhead
+      and read/write transactions interfere (turnaround).  Ara-Opt decouples
+      the front end (overheads hidden, r/w separated) and next-VL prefetch
+      turns warm unit-stride streams into prefetch-buffer hits.
+
+  C — dependence & issue.  Baseline releases WAR read-occupancy only at
+      *instruction completion* plus an overhead, and pays a conservative
+      per-instruction issue gap.  Ara-Opt releases at *read-done* (source
+      operands drained into operand queues) and issues with the dynamic
+      release-aware gap.
+
+  O — operand delivery.  Baseline routes producer->consumer values through
+      the VRF (write-back + re-read: chain delay d_chain), suffers VRF
+      bank-conflict stretch (paper §VI.C: gemm 14% -> 5%), and has shallow
+      operand/result queues (small run-ahead).  Ara-Opt forwards results
+      (d_fwd), cuts conflicts, and deepens queues (dual-source).
+
+Timing semantics follow the ideal-chaining model of §II.C: RAW consumers
+start once the producer's first results exist (chaining) and can finish no
+earlier than the producer finishes plus the propagation delay.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.isa import (KernelTrace, MachineConfig, OpKind, OptConfig,
+                            Stride, VInstr)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    """Microarchitectural timing parameters.
+
+    `*_base` values model baseline Ara and are calibrated once against the
+    paper's Fig. 3 / Fig. 4 (core/calibration.py); opt-side values are fixed
+    small constants.  VRF conflict rates come directly from the paper
+    (§VI.C: gemm bank-conflict ratio 14% -> 5%).
+    """
+    mem_latency: float = 38.0          # demand-load latency (cycles)
+    prefetch_hit: float = 4.0          # prefetch-buffer hit latency
+    tx_ovh_base: float = 1.0           # per-burst overhead, coupled front end
+    tx_ovh_opt: float = 0.1            # decoupled front end
+    idx_ovh_base: float = 2.0          # per-element overhead, indexed access
+    idx_ovh_opt: float = 1.8           # gathers defeat next-VL prefetch:
+    div_factor: float = 8.0            # non-pipelined divide cycles/element
+    rw_turnaround_base: float = 10.0   # read<->write bus switch penalty
+    rw_turnaround_opt: float = 1.0
+    store_commit_base: float = 24.0    # write-commit latency holding the
+    store_commit_opt: float = 0.0      # unified baseline r/w path (§IV.A)
+    issue_gap_base: float = 3.0        # cycles between issues (conservative)
+    issue_gap_opt: float = 1.0         # dynamic release-aware issue
+    war_release_ovh: float = 6.0       # extra cycles after completion (base)
+    d_chain_base: float = 12.0         # produce->writeback->reread delay
+    d_fwd: float = 2.0                 # multi-source forwarding delay
+    conflict_base: float = 0.14        # VRF bank-conflict stretch (paper)
+    conflict_opt: float = 0.05
+    queue_adv_base: float = 48.0       # result/operand queue run-ahead (cyc)
+    queue_adv_opt: float = 96.0        # deep dual-source queues
+
+
+@dataclasses.dataclass
+class InstrTiming:
+    start: float
+    first_out: float
+    complete: float
+    read_done: float                   # when source-operand reads finish
+
+
+@dataclasses.dataclass
+class SimResult:
+    kernel: str
+    cycles: float
+    flops: int
+    bytes: int
+    timings: list[InstrTiming]
+    busy_fpu: float = 0.0
+    busy_bus: float = 0.0
+
+    @property
+    def gflops(self) -> float:
+        # 1 GHz machine: flops/cycle == GFLOPS.
+        return self.flops / max(self.cycles, 1e-9)
+
+    @property
+    def lane_utilization(self) -> float:
+        return self.busy_fpu / max(self.cycles, 1e-9)
+
+    @property
+    def bus_utilization(self) -> float:
+        return self.busy_bus / max(self.cycles, 1e-9)
+
+
+class AraSimulator:
+    """Simulate a kernel trace under a given optimization configuration."""
+
+    def __init__(self, mc: MachineConfig = MachineConfig(),
+                 params: SimParams = SimParams()):
+        self.mc = mc
+        self.p = params
+
+    # -- per-config parameter views -----------------------------------------
+    def _view(self, opt: OptConfig):
+        p = self.p
+        return dict(
+            tx_ovh=p.tx_ovh_opt if opt.memory else p.tx_ovh_base,
+            idx_ovh=p.idx_ovh_opt if opt.memory else p.idx_ovh_base,
+            rw_turn=p.rw_turnaround_opt if opt.memory else p.rw_turnaround_base,
+            store_commit=(p.store_commit_opt if opt.memory
+                          else p.store_commit_base),
+            issue_gap=p.issue_gap_opt if opt.control else p.issue_gap_base,
+            d_chain=p.d_fwd if opt.operand else p.d_chain_base,
+            conflict=1.0 + (p.conflict_opt if opt.operand else p.conflict_base),
+            queue_adv=p.queue_adv_opt if opt.operand else p.queue_adv_base,
+        )
+
+    def run(self, trace: KernelTrace, opt: OptConfig) -> SimResult:
+        mc, p = self.mc, self.p
+        v = self._view(opt)
+        epc = mc.elems_per_cycle
+        bpc = mc.axi_bytes_per_cycle
+
+        issue_t = 0.0                       # in-order dispatch pointer
+        # Baseline: one issue path — loads queue *behind* stores that are
+        # still waiting for their data (r/w not separated, §IV.A).
+        # Ara-Opt: reads and writes issue on separate AXI channels.
+        split_rw = opt.memory
+        bus_free = 0.0                      # shared (baseline) / read chan
+        wbus_free = 0.0                     # write channel (opt only)
+        addr_free = 0.0                     # VLSU front-end serialization
+        bus_last_kind: OpKind | None = None
+        fpu_free = 0.0
+        sldu_free = 0.0
+        writer: dict[str, InstrTiming] = {}      # last writer per register
+        reader_release: dict[str, float] = {}    # latest WAR release per reg
+        timings: list[InstrTiming] = []
+        busy_fpu = busy_bus = 0.0
+
+        for ins in trace.instrs:
+            # ---- dependence constraints (lane side) --------------------
+            raw_start = issue_t
+            raw_complete = 0.0
+            for s in ins.srcs:
+                w = writer.get(s)
+                if w is not None:
+                    raw_start = max(raw_start, w.first_out + v["d_chain"])
+                    raw_complete = max(raw_complete, w.complete + v["d_chain"])
+            war_gate = 0.0
+            if ins.dst is not None:
+                rel = reader_release.get(ins.dst)
+                if rel is not None:
+                    war_gate = max(war_gate, rel)          # WAR
+                w = writer.get(ins.dst)
+                if w is not None:
+                    war_gate = max(war_gate, w.first_out)  # WAW (in order)
+
+            # ---- execute on resource ----------------------------------
+            if ins.kind is OpKind.LOAD:
+                nbytes = ins.bytes
+                if ins.stride is Stride.INDEXED:
+                    # Indexed loads need their index vector first (RAW).
+                    dur_bus = ins.vl * (ins.sew / bpc) + ins.vl * v["idx_ovh"]
+                else:
+                    nburst = max(1, math.ceil(nbytes / mc.burst_bytes))
+                    dur_bus = nbytes / bpc + nburst * v["tx_ovh"]
+                turn = v["rw_turn"] if (bus_last_kind is OpKind.STORE) else 0.0
+                # The sequencer does not hand a load to the VLSU until its
+                # WAR/WAW hazards release (§IV.B conservative blocking) —
+                # under baseline release policy that is predecessor
+                # *completion* + overhead; under C it is read-done, which
+                # the operand/result queues (queue_adv) pull earlier.
+                # Demand data always arrives `mem_latency` after its
+                # request; next-VL prefetch (M) turns warm unit-stride
+                # streams into prefetch-buffer hits, cutting the latency
+                # out of the dependence recurrence.
+                req_start = max(issue_t, raw_start, addr_free,
+                                bus_free + turn, war_gate)
+                if opt.memory and ins.stride is Stride.UNIT:
+                    lat = p.mem_latency if ins.first_strip else p.prefetch_hit
+                elif opt.memory and ins.stride is Stride.STRIDED:
+                    lat = (p.mem_latency if ins.first_strip else
+                           0.5 * (p.mem_latency + p.prefetch_hit))
+                else:
+                    lat = p.mem_latency
+                data_done = req_start + lat + dur_bus
+                writeback_gate = war_gate
+                first_out = max(req_start + lat + mc.burst_bytes / bpc,
+                                writeback_gate)
+                complete = max(data_done, writeback_gate + ins.vl / epc)
+                read_done = req_start            # loads read no lane vregs
+                busy_start = req_start
+                bus_free = req_start + dur_bus
+                addr_free = (req_start + (0.0 if opt.memory else dur_bus))
+                bus_last_kind = OpKind.LOAD
+                busy_bus += dur_bus
+
+            elif ins.kind is OpKind.STORE:
+                nbytes = ins.bytes
+                if ins.stride is Stride.INDEXED:
+                    dur_bus = ins.vl * (ins.sew / bpc) + ins.vl * v["idx_ovh"]
+                else:
+                    nburst = max(1, math.ceil(nbytes / mc.burst_bytes))
+                    dur_bus = nbytes / bpc + nburst * v["tx_ovh"]
+                if split_rw:
+                    busy_start = max(raw_start, war_gate, addr_free,
+                                     wbus_free)
+                    wbus_free = busy_start + dur_bus
+                    # Separate issue path, SHARED DRAM bandwidth: the write
+                    # still consumes read-channel-visible bandwidth at its
+                    # drain time (no ordering block, no free bandwidth).
+                    bus_free = max(bus_free, busy_start) + dur_bus
+                else:
+                    turn = v["rw_turn"] if (bus_last_kind is OpKind.LOAD) \
+                        else 0.0
+                    busy_start = max(raw_start, war_gate, addr_free,
+                                     bus_free + turn)
+                    # Unified path: the store holds the issue path until its
+                    # data drains + commit — subsequent loads queue behind.
+                    bus_free = busy_start + dur_bus + v["store_commit"]
+                # A store *completes* (retires, hazard-wise) only when the
+                # memory system acknowledges the write — a full memory
+                # round trip after the last data beat.  Baseline WAR
+                # release waits for this (C releases at read-done instead).
+                complete = max(busy_start + dur_bus + p.mem_latency,
+                               raw_complete)
+                first_out = complete
+                # Store reads its source into the store queue at lane rate,
+                # bounded by queue depth vs. bus drain.
+                read_done = max(busy_start + ins.vl / epc,
+                                busy_start + dur_bus - v["queue_adv"])
+                addr_free = (busy_start + (0.0 if opt.memory else dur_bus))
+                bus_last_kind = OpKind.STORE
+                busy_bus += dur_bus
+
+            elif ins.kind in (OpKind.COMPUTE, OpKind.REDUCE, OpKind.SLIDE):
+                dur = (ins.vl / epc) * v["conflict"]
+                if ins.name.startswith("vfdiv"):
+                    # Non-pipelined divider: inherent serialization neither
+                    # baseline nor Ara-Opt can hide.
+                    dur = (ins.vl / epc) * p.div_factor
+                if ins.kind is OpKind.REDUCE:
+                    dur += math.ceil(math.log2(max(ins.vl, 2))) * mc.fu_latency
+                unit_free = sldu_free if ins.kind is OpKind.SLIDE else fpu_free
+                busy_start = max(raw_start, war_gate, unit_free)
+                complete = max(busy_start + mc.fu_latency + dur, raw_complete)
+                if ins.kind is OpKind.REDUCE:
+                    first_out = complete                # scalar at the end
+                else:
+                    first_out = busy_start + mc.fu_latency
+                read_done = max(busy_start + ins.vl / epc,
+                                complete - mc.fu_latency - v["queue_adv"])
+                occupancy_end = max(busy_start + dur, complete - mc.fu_latency)
+                if ins.kind is OpKind.SLIDE:
+                    sldu_free = occupancy_end
+                else:
+                    fpu_free = occupancy_end
+                    busy_fpu += ins.vl / epc            # useful compute time
+            else:                                        # pragma: no cover
+                raise ValueError(f"unknown kind {ins.kind}")
+
+            t = InstrTiming(start=busy_start, first_out=first_out,
+                            complete=complete, read_done=read_done)
+            timings.append(t)
+
+            # ---- update hazard state ----------------------------------
+            # Dispatch is throughput-limited (issue_gap) but NOT head-of-
+            # line blocked on execution start: Ara's sequencer hands
+            # instructions to per-unit queues and chaining paces them.
+            issue_t = issue_t + v["issue_gap"]
+            if ins.dst is not None:
+                writer[ins.dst] = t
+            for s in ins.srcs:
+                release = (t.read_done if opt.control
+                           else t.complete + p.war_release_ovh)
+                reader_release[s] = max(reader_release.get(s, 0.0), release)
+
+        total = max((t.complete for t in timings), default=0.0)
+        return SimResult(kernel=trace.name, cycles=total,
+                         flops=trace.total_flops, bytes=trace.total_bytes,
+                         timings=timings, busy_fpu=busy_fpu, busy_bus=busy_bus)
+
+    # ------------------------------------------------------------------
+    def speedup(self, trace: KernelTrace, opt: OptConfig) -> float:
+        base = self.run(trace, OptConfig.baseline())
+        new = self.run(trace, opt)
+        return base.cycles / new.cycles

@@ -1,0 +1,357 @@
+"""Hand-optimized-assembly style instruction traces for the paper's kernels.
+
+Each generator emits the strip-mined vector instruction stream a hand-tuned
+RVV kernel would execute on Ara (paper §VI.A: scal, axpy, dotp, gemv, symv,
+ger, gemm, trsm, syrk, spmv, dwt), with the register-reuse patterns that give
+rise to the WAR/WAW hazards and memory-stream structure the paper attributes
+bottlenecks to.
+
+Register convention: LMUL=8 for 1-D streaming kernels (register groups v0,
+v8, v16, v24 — no rotation possible, so strip loops reuse registers and carry
+WAR hazards, as in Ara's hand-optimized kernels); LMUL=1..2 for matrix
+kernels (accumulator-rich).
+
+Default problem sizes follow Fig. 3: N=1024 for 1-D kernels, 32x128 gemv,
+32x32 symv/trsm/syrk/spmv, 128x128 ger and gemm.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+from repro.core.isa import (KernelTrace, MachineConfig, OpKind, Stride,
+                            VInstr, strips, vlmax_for)
+
+Trace = KernelTrace
+
+
+def _mk(name, kind, vl, *, dst=None, srcs=(), stride=Stride.UNIT, fpe=0,
+        stream="", first=False, sew=4):
+    return VInstr(name=name, kind=kind, vl=vl, sew=sew, dst=dst,
+                  srcs=tuple(srcs), stride=stride, flops=fpe * vl,
+                  stream=stream, first_strip=first)
+
+
+# ---------------------------------------------------------------------------
+# 1-D streaming kernels (LMUL=8)
+# ---------------------------------------------------------------------------
+
+def scal(n: int = 1024, mc: MachineConfig = MachineConfig()) -> Trace:
+    """x = a*x, in place: vle v0 ; vfmul v0,v0,fa ; vse v0.
+
+    At LMUL=8 the whole loop lives in one register group, so every strip
+    carries WAR (next vle vs. this vse's read) and WAW (vle vs. vfmul)
+    hazards — the paper's strongest dependence-release showcase
+    (Table I: scal C = 1.36)."""
+    vlmax = vlmax_for(4, mc.vlen_bits, 8)
+    ins = []
+    for i, vl in enumerate(strips(n, vlmax)):
+        ins.append(_mk("vle32", OpKind.LOAD, vl, dst="v0", stream="x",
+                       first=(i == 0)))
+        ins.append(_mk("vfmul", OpKind.COMPUTE, vl, dst="v0", srcs=["v0"],
+                       fpe=1))
+        ins.append(_mk("vse32", OpKind.STORE, vl, srcs=["v0"], stream="xo"))
+    return Trace("scal", tuple(ins), total_flops=n, total_bytes=8 * n,
+                 problem=f"N={n}")
+
+
+def axpy(n: int = 1024, mc: MachineConfig = MachineConfig()) -> Trace:
+    """y = a*x + y with double-buffered x/y register pairs (the four LMUL=8
+    groups allow 2-strip rotation, so WAR hazards mostly decouple and the
+    remaining baseline loss is memory-side — Table I: axpy C = 1.05,
+    M = 1.22)."""
+    vlmax = vlmax_for(4, mc.vlen_bits, 8)
+    ins = []
+    for i, vl in enumerate(strips(n, vlmax)):
+        vx = "v0" if i % 2 == 0 else "v16"
+        vy = "v8" if i % 2 == 0 else "v24"
+        ins.append(_mk("vle32", OpKind.LOAD, vl, dst=vx, stream="x",
+                       first=(i == 0)))
+        ins.append(_mk("vle32", OpKind.LOAD, vl, dst=vy, stream="y",
+                       first=(i == 0)))
+        ins.append(_mk("vfmacc", OpKind.COMPUTE, vl, dst=vy,
+                       srcs=[vx, vy], fpe=2))
+        ins.append(_mk("vse32", OpKind.STORE, vl, srcs=[vy], stream="yo"))
+    return Trace("axpy", tuple(ins), total_flops=2 * n, total_bytes=12 * n,
+                 problem=f"N={n}")
+
+
+def dotp(n: int = 1024, mc: MachineConfig = MachineConfig()) -> Trace:
+    """s = x.y : per strip vle,vle,vfmacc into v16 accumulator; final
+    vfredsum.  The accumulator RAW chain + final reduction serialize the
+    tail (paper: dotp gains are limited by accumulation dependences)."""
+    vlmax = vlmax_for(4, mc.vlen_bits, 8)
+    ins = []
+    for i, vl in enumerate(strips(n, vlmax)):
+        vx = "v0" if i % 2 == 0 else "v24"
+        ins.append(_mk("vle32", OpKind.LOAD, vl, dst=vx, stream="x",
+                       first=(i == 0)))
+        ins.append(_mk("vle32", OpKind.LOAD, vl, dst="v8", stream="y",
+                       first=(i == 0)))
+        ins.append(_mk("vfmacc", OpKind.COMPUTE, vl, dst="v16",
+                       srcs=[vx, "v8", "v16"], fpe=2))
+    ins.append(_mk("vfredsum", OpKind.REDUCE, min(n, vlmax), dst="f0",
+                   srcs=["v16"], fpe=1))
+    return Trace("dotp", tuple(ins), total_flops=2 * n, total_bytes=8 * n,
+                 problem=f"N={n}")
+
+
+# ---------------------------------------------------------------------------
+# BLAS-2 kernels
+# ---------------------------------------------------------------------------
+
+def gemv(m: int = 32, n: int = 128, mc: MachineConfig = MachineConfig()) -> Trace:
+    """y = A x (m rows of length n): per row, strip dot-product + reduce.
+    x is loaded once (kept in v24 across rows when it fits)."""
+    vlmax = vlmax_for(4, mc.vlen_bits, 4)
+    ins = []
+    x_fits = n <= vlmax
+    if x_fits:
+        ins.append(_mk("vle32", OpKind.LOAD, n, dst="v24", stream="x",
+                       first=True))
+    for r in range(m):
+        va = "v0" if r % 2 == 0 else "v8"
+        vacc = "v16" if r % 2 == 0 else "v20"
+        for i, vl in enumerate(strips(n, vlmax)):
+            ins.append(_mk("vle32", OpKind.LOAD, vl, dst=va,
+                           stream="A", first=(r == 0 and i == 0)))
+            if not x_fits:
+                ins.append(_mk("vle32", OpKind.LOAD, vl, dst="v12",
+                               stream="x", first=(r == 0 and i == 0)))
+            ins.append(_mk("vfmul" if i == 0 else "vfmacc", OpKind.COMPUTE,
+                           vl, dst=vacc,
+                           srcs=[va, "v24" if x_fits else "v12"] +
+                                ([] if i == 0 else [vacc]),
+                           fpe=2))
+        ins.append(_mk("vfredsum", OpKind.REDUCE, min(n, vlmax), dst="f0",
+                       srcs=[vacc], fpe=1))
+    flops = 2 * m * n
+    bytes_ = 4 * (m * n + n + 2 * m)          # A + x + y read/write
+    return Trace("gemv", tuple(ins), flops, bytes_, problem=f"{m}x{n}")
+
+
+def symv(n: int = 32, mc: MachineConfig = MachineConfig()) -> Trace:
+    """y = A x, A symmetric (n x n): row-wise dot products over full rows
+    (small n => short vectors, reduction-dominated)."""
+    vlmax = vlmax_for(4, mc.vlen_bits, 4)
+    ins = []
+    ins.append(_mk("vle32", OpKind.LOAD, n, dst="v24", stream="x",
+                   first=True))
+    for r in range(n):
+        va = "v0" if r % 2 == 0 else "v8"
+        vacc = "v16" if r % 2 == 0 else "v20"
+        ins.append(_mk("vle32", OpKind.LOAD, n, dst=va, stream="A",
+                       first=(r == 0)))
+        ins.append(_mk("vfmul", OpKind.COMPUTE, n, dst=vacc,
+                       srcs=[va, "v24"], fpe=2))
+        ins.append(_mk("vfredsum", OpKind.REDUCE, n, dst="f0",
+                       srcs=[vacc], fpe=1))
+    flops = 2 * n * n
+    bytes_ = 4 * (n * n + n + 2 * n)
+    return Trace("symv", tuple(ins), flops, bytes_, problem=f"{n}x{n}")
+
+
+def ger(m: int = 128, n: int = 128, mc: MachineConfig = MachineConfig()) -> Trace:
+    """A += x y^T : y kept resident (v24); per row: vle A-row, vfmacc with
+    scalar x_i, vse A-row.  Streaming row updates with register reuse —
+    the 2-D analogue of axpy (paper: ger behaves like regular streaming)."""
+    vlmax = vlmax_for(4, mc.vlen_bits, 4)
+    ins = [_mk("vle32", OpKind.LOAD, min(n, vlmax), dst="v24", stream="y",
+               first=True)]
+    for r in range(m):
+        va = "v0" if r % 2 == 0 else "v8"       # row double-buffering
+        for i, vl in enumerate(strips(n, vlmax)):
+            ins.append(_mk("vle32", OpKind.LOAD, vl, dst=va, stream="A",
+                           first=(r == 0 and i == 0)))
+            ins.append(_mk("vfmacc", OpKind.COMPUTE, vl, dst=va,
+                           srcs=[va, "v24"], fpe=2))
+            ins.append(_mk("vse32", OpKind.STORE, vl, srcs=[va],
+                           stream="Ao"))
+    flops = 2 * m * n
+    bytes_ = 4 * (2 * m * n + m + n)
+    return Trace("ger", tuple(ins), flops, bytes_, problem=f"{m}x{n}")
+
+
+# ---------------------------------------------------------------------------
+# BLAS-3 kernels
+# ---------------------------------------------------------------------------
+
+def gemm(m: int = 128, n: int = 128, k: int = 128,
+         mc: MachineConfig = MachineConfig(), rows_per_block: int = 8) -> Trace:
+    """C = A B with an outer-product register-blocked schedule: for each
+    column strip (LMUL=2) and block of `rows_per_block` C rows kept in
+    accumulators, stream B rows and issue one vfmacc per C row
+    (scalar a[i,k] broadcast by the scalar core, free under the Ideal
+    Dispatcher).  B-row loads are reused across the rows of a block."""
+    lmul = 2
+    vlmax = vlmax_for(4, mc.vlen_bits, lmul)
+    ins = []
+    nblocks = math.ceil(m / rows_per_block)
+    for jstrip, vl in enumerate(strips(n, vlmax)):
+        for ib in range(nblocks):
+            rows = min(rows_per_block, m - ib * rows_per_block)
+            for kk in range(k):
+                vb = "v28" if kk % 2 == 0 else "v30"   # B double-buffer
+                ins.append(_mk("vle32", OpKind.LOAD, vl, dst=vb,
+                               stream="B",
+                               first=(jstrip == 0 and ib == 0 and kk == 0)))
+                for r in range(rows):
+                    acc = f"v{2 * r}"
+                    ins.append(_mk("vfmacc", OpKind.COMPUTE, vl, dst=acc,
+                                   srcs=[vb, acc] if kk else [vb],
+                                   fpe=2))
+            for r in range(rows):
+                ins.append(_mk("vse32", OpKind.STORE, vl,
+                               srcs=[f"v{2 * r}"], stream="Co"))
+    flops = 2 * m * n * k
+    # Memory traffic of this schedule: B streamed once per row-block,
+    # C stored once, A via scalar broadcasts (k*m scalar loads).
+    bytes_ = 4 * (nblocks * k * n + m * n + m * k)
+    return Trace("gemm", tuple(ins), flops, bytes_, problem=f"{m}x{n}x{k}")
+
+
+def syrk(n: int = 32, k: int = 32, mc: MachineConfig = MachineConfig(),
+         rows_per_block: int = 8) -> Trace:
+    """C = A A^T (lower triangle): gemm-style register-blocked schedule —
+    blocks of C rows accumulate while A^T rows stream once per block."""
+    vlmax = vlmax_for(4, mc.vlen_bits, 2)
+    vl = min(n, vlmax)
+    ins = []
+    nblocks = math.ceil(n / rows_per_block)
+    for ib in range(nblocks):
+        rows = min(rows_per_block, n - ib * rows_per_block)
+        for kk in range(k):
+            vb = "v28" if kk % 2 == 0 else "v30"
+            ins.append(_mk("vle32", OpKind.LOAD, vl, dst=vb,
+                           stream="A", first=(ib == 0 and kk == 0)))
+            for r in range(rows):
+                acc = f"v{2 * r}"
+                ins.append(_mk("vfmacc", OpKind.COMPUTE, vl, dst=acc,
+                               srcs=[vb, acc] if kk else [vb], fpe=2))
+        for r in range(rows):
+            ins.append(_mk("vse32", OpKind.STORE, vl, srcs=[f"v{2 * r}"],
+                           stream="Co"))
+    flops = n * (n + 1) * k                 # 2 flops * n(n+1)/2 * k
+    bytes_ = 4 * (nblocks * k * n + n * n + n * k)
+    return Trace("syrk", tuple(ins), flops, bytes_, problem=f"{n}x{k}")
+
+
+def trsm(n: int = 32, mc: MachineConfig = MachineConfig()) -> Trace:
+    """Triangular solve with n RHS columns: forward substitution; row r
+    depends on all previous rows — the loop-carried RAW chain limits
+    recoverable overlap (paper: trsm gains ~1.2x)."""
+    vlmax = vlmax_for(4, mc.vlen_bits, 2)
+    vl = min(n, vlmax)
+    ins = []
+    for r in range(n):
+        vb = "v8" if r % 2 == 0 else "v16"
+        ins.append(_mk("vle32", OpKind.LOAD, vl, dst=vb, stream="B",
+                       first=(r == 0)))
+        # x_r = (b_r - sum_{j<r} a_rj x_j) / a_rr : model the update as a
+        # chain of vfnmsac against the running solution block + a divide.
+        # The division is long-latency/non-pipelined on Ara's FPU, which is
+        # why trsm's recoverable overlap is small (paper: 1.20x).
+        if r > 0:
+            ins.append(_mk("vfnmsac", OpKind.COMPUTE, vl, dst=vb,
+                           srcs=[vb, "v0"], fpe=2))
+        ins.append(_mk("vfdiv", OpKind.COMPUTE, vl, dst="v0",
+                       srcs=[vb], fpe=1))
+        ins.append(_mk("vse32", OpKind.STORE, vl, srcs=["v0"], stream="Xo"))
+    flops = n * n * 2
+    bytes_ = 4 * (n * n // 2 + 2 * n * n // max(n, 1) * n)
+    return Trace("trsm", tuple(ins), flops, max(bytes_, 4 * 3 * n * n // 2),
+                 problem=f"{n}x{n}")
+
+
+# ---------------------------------------------------------------------------
+# Irregular / complex access kernels
+# ---------------------------------------------------------------------------
+
+def spmv(n: int = 32, density: float = 0.3,
+         mc: MachineConfig = MachineConfig()) -> Trace:
+    """CSR SpMV: per row, indexed gather of x, vfmacc, reduce.  Indexed
+    accesses defeat next-VL prefetch (paper: spmv speedup ~1.2x from
+    decoupling only)."""
+    nnz_row = max(1, int(n * density))
+    ins = []
+    for r in range(n):
+        e = r % 2 == 0
+        vv, vi, vg, vacc = (("v8", "v12", "v0", "v16") if e else
+                            ("v10", "v14", "v4", "v20"))
+        ins.append(_mk("vle32", OpKind.LOAD, nnz_row, dst=vv,
+                       stream="val", first=(r == 0)))
+        ins.append(_mk("vle32", OpKind.LOAD, nnz_row, dst=vi,
+                       stream="idx", first=(r == 0)))
+        ins.append(_mk("vluxei32", OpKind.LOAD, nnz_row, dst=vg,
+                       srcs=[vi], stride=Stride.INDEXED, stream="xg",
+                       first=(r == 0)))
+        ins.append(_mk("vfmul", OpKind.COMPUTE, nnz_row, dst=vacc,
+                       srcs=[vg, vv], fpe=2))
+        ins.append(_mk("vfredsum", OpKind.REDUCE, nnz_row, dst="f0",
+                       srcs=[vacc], fpe=1))
+    nnz = n * nnz_row
+    flops = 2 * nnz
+    bytes_ = 4 * (3 * nnz + 2 * n)
+    return Trace("spmv", tuple(ins), flops, bytes_,
+                 problem=f"{n}x{n},d={density}")
+
+
+def dwt(n: int = 1024, mc: MachineConfig = MachineConfig()) -> Trace:
+    """1-D Haar-style discrete wavelet transform: per level, strided loads
+    of even/odd samples, butterfly compute, two stores; halving sizes give
+    a mix of long and short vectors plus slide traffic."""
+    vlmax = vlmax_for(4, mc.vlen_bits, 4)
+    ins = []
+    level = 0
+    size = n
+    while size >= 8:
+        half = size // 2
+        for i, vl in enumerate(strips(half, vlmax)):
+            first = (i == 0)
+            e = i % 2 == 0
+            v0, v8, v16, v24 = (("v0", "v8", "v16", "v24") if e else
+                                ("v4", "v12", "v20", "v28"))
+            ins.append(_mk("vlse32", OpKind.LOAD, vl, dst=v0,
+                           stride=Stride.STRIDED, stream=f"e{level}",
+                           first=first))
+            ins.append(_mk("vlse32", OpKind.LOAD, vl, dst=v8,
+                           stride=Stride.STRIDED, stream=f"o{level}",
+                           first=first))
+            ins.append(_mk("vfadd", OpKind.COMPUTE, vl, dst=v16,
+                           srcs=[v0, v8], fpe=1))
+            ins.append(_mk("vfsub", OpKind.COMPUTE, vl, dst=v24,
+                           srcs=[v0, v8], fpe=1))
+            ins.append(_mk("vfmul", OpKind.COMPUTE, vl, dst=v16,
+                           srcs=[v16], fpe=1))
+            ins.append(_mk("vfmul", OpKind.COMPUTE, vl, dst=v24,
+                           srcs=[v24], fpe=1))
+            ins.append(_mk("vse32", OpKind.STORE, vl, srcs=[v16],
+                           stream=f"a{level}"))
+            ins.append(_mk("vse32", OpKind.STORE, vl, srcs=[v24],
+                           stream=f"d{level}"))
+        size = half
+        level += 1
+    total = sum(i.flops for i in ins)
+    bytes_ = sum(i.bytes for i in ins)
+    return Trace("dwt", tuple(ins), total, bytes_, problem=f"N={n}")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+KERNELS: dict[str, Callable[..., Trace]] = {
+    "scal": scal, "axpy": axpy, "dotp": dotp, "gemv": gemv, "symv": symv,
+    "ger": ger, "gemm": gemm, "trsm": trsm, "syrk": syrk, "spmv": spmv,
+    "dwt": dwt,
+}
+
+#: Fig. 3 default problem sizes.
+DEFAULT_TRACES: dict[str, Callable[[], Trace]] = {
+    "scal": lambda: scal(1024), "axpy": lambda: axpy(1024),
+    "dotp": lambda: dotp(1024), "gemv": lambda: gemv(32, 128),
+    "symv": lambda: symv(32), "ger": lambda: ger(128, 128),
+    "gemm": lambda: gemm(128, 128, 128), "trsm": lambda: trsm(32),
+    "syrk": lambda: syrk(32, 32), "spmv": lambda: spmv(32),
+    "dwt": lambda: dwt(1024),
+}

@@ -1,0 +1,130 @@
+"""Data pipeline: deterministic synthetic streams + prefetching.
+
+The host-side prefetch queue is the data-layer instance of the paper's
+next-VL prefetch: batch g+1 is materialized (and, on real hardware,
+host->device transferred) while step g computes, so the accelerator's
+"memory-side data supply" never gaps.  `state()`/`restore()` make the
+stream exactly resumable from a checkpoint (fault tolerance).
+
+Sources:
+  * "uniform" — i.i.d. tokens (loss floor = ln V; shape/scale testing).
+  * "markov"  — a fixed random bigram chain (learnable; training demos and
+    convergence tests).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class SyntheticLM:
+    """Deterministic, seekable token stream sharded across hosts."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq_len: int,
+                 seed: int = 0, kind: str = "markov",
+                 process_index: int = 0, process_count: int = 1):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq_len
+        self.seed = seed
+        self.kind = kind
+        self.pidx = process_index
+        self.pcount = process_count
+        self._step = 0
+        if kind == "markov":
+            rng = np.random.default_rng(seed)
+            v = cfg.vocab_size
+            logits = rng.standard_normal((v, v)) * 2.0
+            self._trans = np.exp(logits - logits.max(1, keepdims=True))
+            self._trans /= self._trans.sum(1, keepdims=True)
+            self._cum = np.cumsum(self._trans, axis=1)
+
+    # -- resumability -----------------------------------------------------
+    def state(self) -> dict:
+        return {"step": self._step, "seed": self.seed, "kind": self.kind}
+
+    def restore(self, state: dict) -> None:
+        assert state["seed"] == self.seed and state["kind"] == self.kind, \
+            "restoring a checkpoint from a different data configuration"
+        self._step = int(state["step"])
+
+    # -- generation ---------------------------------------------------------
+    def _gen(self, step: int) -> dict:
+        # Each (step, host) pair is an independent deterministic stream —
+        # hosts never overlap (disjoint shards of the global batch).
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 65_537 + self.pidx)
+        v = self.cfg.vocab_size
+        b, s = self.batch, self.seq
+        if self.kind == "uniform":
+            toks = rng.integers(0, v, size=(b, s + 1), dtype=np.int32)
+        else:
+            toks = np.empty((b, s + 1), np.int32)
+            toks[:, 0] = rng.integers(0, v, size=b)
+            u = rng.random((b, s))
+            for t in range(s):
+                rows = self._cum[toks[:, t]]               # (b, v)
+                toks[:, t + 1] = (rows < u[:, t, None]).sum(axis=1)
+                np.clip(toks[:, t + 1], 0, v - 1, out=toks[:, t + 1])
+        batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+        if self.cfg.modality == "audio":
+            frames = rng.standard_normal((b, s, self.cfg.d_model)) * 0.02
+            batch = {"frames": frames.astype(np.float32),
+                     "targets": toks[:, 1:]}
+        elif self.cfg.modality == "vlm":
+            img = rng.standard_normal(
+                (b, self.cfg.n_img_tokens, self.cfg.d_model)) * 0.02
+            batch["img_embeds"] = img.astype(np.float32)
+        return batch
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        out = self._gen(self._step)
+        self._step += 1
+        return out
+
+
+class Prefetcher:
+    """Depth-k background prefetch queue (next-VL prefetch, data layer)."""
+
+    def __init__(self, source: SyntheticLM, depth: int = 2):
+        self.source = source
+        self.depth = depth
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        while not self._stop.is_set():
+            try:
+                item = next(self.source)
+            except StopIteration:                     # pragma: no cover
+                break
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def __next__(self) -> dict:
+        return self._q.get()
+
+    def __iter__(self):
+        return self
+
+    def state(self) -> dict:
+        # Unconsumed prefetched batches are replayed after restore.
+        return {"step": self.source._step - self._q.qsize(),
+                "seed": self.source.seed, "kind": self.source.kind}
+
+    def close(self):
+        self._stop.set()

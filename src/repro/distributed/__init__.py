@@ -1,0 +1,6 @@
+"""Distribution: sharding rules, collectives, compression, context parallel."""
+from repro.distributed.sharding import (ashard, named_shardings, param_specs,
+                                        resolve_spec, use_mesh)
+
+__all__ = ["ashard", "named_shardings", "param_specs", "resolve_spec",
+           "use_mesh"]

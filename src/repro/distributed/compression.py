@@ -1,0 +1,93 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+Int8 block-quantized all-reduce with error feedback: each pod reduces its
+local (ICI) gradients at full precision, quantizes to int8 with per-block
+fp32 scales, all-reduces the int8 payload (accumulated in int32) across the
+"pod" axis, and dequantizes.  The quantization residual is carried to the
+next step (error feedback), which restores O(full-precision) convergence.
+
+DCN bandwidth is the scarcest resource at multi-pod scale — this trades a
+~4x payload reduction against a bounded, feedback-corrected error, directly
+shrinking the §Roofline collective term of the pod axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x: jax.Array) -> tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), pad
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (any shape) -> (int8 blocks, fp32 scales)."""
+    blocks, _ = _pad_to_block(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
+    out = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return out[:n].reshape(shape).astype(dtype)
+
+
+def quantization_error(x: jax.Array) -> jax.Array:
+    q, s = quantize(x)
+    return x - dequantize(q, s, x.shape, x.dtype)
+
+
+def compressed_psum(x: jax.Array, axis_name: str,
+                    error: jax.Array | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Inside shard_map over `axis_name`: int8-payload mean-reduce with
+    error feedback.  Returns (mean-reduced value, new local error).
+
+    Implemented as all-gather of the int8 payload + per-block fp32 scales
+    followed by an exact local dequant-reduce (each member's blocks are
+    decoded with its own scale), so the only loss is each member's own
+    quantization residual — which error feedback carries to the next step.
+    Wire payload: ~1.02 bytes/element vs 4 (fp32): ~4x DCN traffic cut.
+    """
+    n = jax.lax.psum(1, axis_name)
+    xc = x + (error if error is not None else 0.0)
+    q, scale = quantize(xc)
+    q_all = jax.lax.all_gather(q, axis_name)           # (n, blocks, BLOCK)
+    s_all = jax.lax.all_gather(scale, axis_name)       # (n, blocks)
+    recon = jnp.sum(q_all.astype(jnp.float32) * s_all[..., None], axis=0)
+    numel = 1
+    for s in x.shape:
+        numel *= s
+    out = recon.reshape(-1)[:numel].reshape(x.shape).astype(x.dtype) / n
+    # Local residual (what our contribution lost): feedback for next step.
+    new_error = xc - dequantize(q, scale, x.shape, x.dtype)
+    return out, new_error
+
+
+def tree_quantize(tree: Any) -> Any:
+    return jax.tree.map(lambda x: quantize(x), tree)
+
+
+def compressed_bytes(tree: Any) -> tuple[int, int]:
+    """(raw fp32 bytes, compressed payload bytes) for a gradient pytree."""
+    raw = comp = 0
+    for leaf in jax.tree.leaves(tree):
+        n = leaf.size
+        raw += n * 4
+        nblocks = -(-n // BLOCK)
+        comp += n * 1 + nblocks * 4
+    return raw, comp

@@ -1,0 +1,86 @@
+"""Context-parallel (sequence-sharded) decode attention for long_500k.
+
+With global_batch=1 and a 500k-token KV cache, batch parallelism is useless;
+instead the KV cache is sharded along the *sequence* dimension over the
+"data" axis and each chip computes a partial-softmax triple (m, l, o) over
+its local KV shard.  The combine is the same tail-drain algebra as
+kernels/decode_attention.combine_partials, expressed with psum — the
+distributed instance of the paper's multi-lane + tail-combine decomposition.
+
+This is explicit shard_map (not GSPMD-inferred) so the collective schedule
+is exactly three small psums over (B, H)-sized tensors instead of a
+sequence all-gather: collective bytes drop from O(S·H·D) to O(H·D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+NEG_INF = -1e30
+
+
+def _local_partials(q, k, v, first_pos, kv_len, scale):
+    """q: (B,H,D); k/v: (B,S_loc,KV,D) local shard starting at first_pos."""
+    b, s_loc, kvh, d = k.shape
+    h = q.shape[1]
+    rep = h // kvh
+    kf = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vf = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    pos = first_pos + jnp.arange(s_loc)
+    valid = pos[None, None, :] < kv_len[:, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                  # (B, H)
+    msafe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p = jnp.where(valid, jnp.exp(s - msafe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)                                  # (B, H)
+    o = jnp.einsum("bhs,bshd->bhd", p, vf.astype(jnp.float32))
+    return m, l, o
+
+
+def cp_decode_attention(q, k, v, kv_len, *, mesh: Mesh, axis: str = "data",
+                        head_axis: str | None = "model",
+                        scale: float | None = None) -> jax.Array:
+    """Sequence-sharded decode attention.
+
+    q: (B, H, D); k/v: (B, S, H, D) with S sharded over `axis` (context
+    parallelism) and, when H divides the `head_axis` size, heads sharded
+    over `head_axis` (tensor parallelism — heads are independent, so the
+    partial-softmax combine still only reduces over `axis`).  kv_len: (B,).
+    Returns (B, H, D) sharded like q.
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    s_total = k.shape[1]
+    n_shards = mesh.shape[axis]
+    s_loc = s_total // n_shards
+    h = q.shape[1]
+    use_heads = (head_axis is not None and head_axis in mesh.axis_names
+                 and h % mesh.shape[head_axis] == 0)
+    haxis = head_axis if use_heads else None
+
+    def local(q, k, v, kv_len):
+        idx = jax.lax.axis_index(axis)
+        first = idx * s_loc
+        m, l, o = _local_partials(q, k, v, first, kv_len, scale)
+        # Tail combine across sequence shards only (psum algebra ==
+        # kernels.decode_attention.combine_partials).
+        m_g = jax.lax.pmax(m, axis)
+        w = jnp.exp(jnp.where(m <= NEG_INF / 2, NEG_INF, m) - m_g)
+        w = jnp.where(m <= NEG_INF / 2, 0.0, w)
+        l_g = jax.lax.psum(l * w, axis)
+        o_g = jax.lax.psum(o * w[..., None], axis)
+        return (o_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(q.dtype)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, haxis, None), P(None, axis, haxis, None),
+                  P(None, axis, haxis, None), P()),
+        out_specs=P(None, haxis, None),
+        check_rep=False,
+    )(q, k, v, kv_len)

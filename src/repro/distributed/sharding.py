@@ -1,0 +1,201 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Mesh axes:
+  "pod"   — DCN axis between pods: pure data parallelism (only gradient
+            all-reduce crosses it).
+  "data"  — ICI axis: batch data parallelism + FSDP/ZeRO parameter and
+            optimizer-state sharding (the `d_model` dim of weights).
+  "model" — ICI axis: tensor parallelism (heads / ff / vocab) and expert
+            parallelism.
+
+Models annotate activations with *logical* axis names via `ashard`; the
+launcher installs a mesh + rule set with `use_mesh`.  Without an active
+mesh every annotation is a no-op, so the same model code runs in unit tests
+(1 device), smoke tests, and the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical activation/param axis -> mesh axis (None = replicated).
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,             # context parallelism overrides per call site
+    "seq_cp": "data",        # sequence-sharded KV cache (long-context decode)
+    "act_embed": None,
+    "heads": "model",
+    "kv_heads": "model",     # dropped per-arch when kv_heads % model != 0
+    "head_dim": None,
+    "embed": "data",         # FSDP: d_model dim of weight matrices
+    "ff": "model",           # tensor parallelism
+    "vocab": "model",
+    "expert": "model",       # expert parallelism
+    "kv_lora": None,
+    "conv": None,
+    "state": None,
+}
+
+
+class _Active(threading.local):
+    def __init__(self):
+        self.mesh: Mesh | None = None
+        self.rules: dict[str, Any] | None = None
+
+
+_ACTIVE = _Active()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict[str, Any] | None = None):
+    """Install a mesh + logical rules for `ashard` / spec resolution."""
+    prev = (_ACTIVE.mesh, _ACTIVE.rules)
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # Drop mesh axes the mesh doesn't actually have (single-pod mesh has no
+    # "pod" axis).
+    def _filter(v):
+        if isinstance(v, tuple):
+            kept = tuple(a for a in v if a in mesh.axis_names)
+            return kept if kept else None
+        return v if v in mesh.axis_names else None
+    merged = {k: _filter(v) for k, v in merged.items()}
+    _ACTIVE.mesh, _ACTIVE.rules = mesh, merged
+    try:
+        yield
+    finally:
+        _ACTIVE.mesh, _ACTIVE.rules = prev
+
+
+def active_mesh() -> Mesh | None:
+    return _ACTIVE.mesh
+
+
+def resolve_spec(logical: tuple[str | None, ...]) -> P:
+    rules = _ACTIVE.rules or {}
+    axes = []
+    used: set[str] = set()
+    for name in logical:
+        mesh_axis = rules.get(name) if name else None
+        # A mesh axis may appear at most once in a spec.
+        if isinstance(mesh_axis, tuple):
+            mesh_axis = tuple(a for a in mesh_axis if a not in used) or None
+            if mesh_axis:
+                used.update(mesh_axis)
+        elif mesh_axis is not None:
+            if mesh_axis in used:
+                mesh_axis = None
+            else:
+                used.add(mesh_axis)
+        axes.append(mesh_axis)
+    return P(*axes)
+
+
+def ashard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Constrain an activation's sharding by logical axis names (no-op when
+    no mesh is active or under scan tracing of non-addressable shapes)."""
+    mesh = _ACTIVE.mesh
+    if mesh is None:
+        return x
+    spec = resolve_spec(tuple(logical))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding by pytree path.
+# ---------------------------------------------------------------------------
+
+# Ordered (regex, logical axes per dim, by-ndim) table.  First match wins.
+# The logical tuple is right-aligned to the trailing dims of the leaf so
+# stacked (scanned) params with leading layer dims work unchanged.
+_PARAM_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    (r"embed_table", ("vocab", "embed")),
+    (r"lm_head", ("embed", "vocab")),
+    (r"(wq_b|wq\b|q_proj)", ("embed", "heads", "head_dim")),
+    (r"(wk\b|k_proj|wv\b|v_proj)", ("embed", "kv_heads", "head_dim")),
+    (r"(wo\b|o_proj)", ("heads", "head_dim", "embed")),
+    (r"wkv_b", ("kv_lora", "heads", "head_dim")),
+    (r"(wq_a|wkv_a)", ("embed", "kv_lora")),
+    (r"experts.*(w_in|w_gate)", ("expert", "embed", "ff")),
+    (r"experts.*w_out", ("expert", "ff", "embed")),
+    (r"(w_in|w_gate|gate_proj|up_proj)", ("embed", "ff")),
+    (r"(w_out|down_proj)", ("ff", "embed")),
+    (r"router", ("embed", "expert")),
+    (r"(in_proj|x_proj)", ("embed", "ff")),
+    (r"out_proj", ("ff", "embed")),
+    (r"conv1d", (None, "ff")),
+    (r"(norm|scale|bias|alpha|dt_bias|a_log)", (None,)),
+]
+
+
+def logical_axes_for(path: str, ndim: int) -> tuple[str | None, ...]:
+    """Infer logical axes for a parameter from its tree path."""
+    for pattern, logical in _PARAM_RULES:
+        if re.search(pattern, path):
+            if ndim >= len(logical):
+                return (None,) * (ndim - len(logical)) + tuple(logical)
+            return tuple(logical[-ndim:]) if ndim else ()
+    return (None,) * ndim
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def axis_size(mesh: Mesh, ax) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= sizes[a]
+        return n
+    return sizes[ax]
+
+
+def safe_spec(shape: tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop axes that don't divide their dim: explicit pjit shardings
+    require divisibility (kv_heads=2 / heads=36 / vocab=49155 / experts=40
+    over a 16-way axis fall back to replication; the padding-waste
+    alternative is discussed in EXPERIMENTS.md §Roofline)."""
+    full = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    fixed = [ax if (ax is None or (dim % axis_size(mesh, ax) == 0
+                                   and dim >= axis_size(mesh, ax))) else None
+             for dim, ax in zip(shape, full)]
+    return P(*fixed)
+
+
+def param_specs(params_shape: Any) -> Any:
+    """PartitionSpec tree for a (possibly abstract) param tree, resolved
+    against the active rules."""
+    mesh = _ACTIVE.mesh
+
+    def leaf_spec(path, leaf):
+        if mesh is None:
+            return P()
+        logical = logical_axes_for(_path_str(path), len(leaf.shape))
+        return safe_spec(leaf.shape, resolve_spec(logical), mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def named_shardings(tree_of_specs: Any, mesh: Mesh | None = None) -> Any:
+    mesh = mesh or _ACTIVE.mesh
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the perf-critical compute paths, with pure-jnp
+oracles (ref.py) and jit'd wrappers (ops.py)."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,112 @@
+"""Split-KV flash-decode — multi-lane parallelism + tail combine.
+
+Decode attention (one query token vs. a long KV cache) has no query-axis
+parallelism, so the kernel splits the KV sequence across grid "lanes"
+(KV chunks), each producing a partial (m, l, o) triple, then drains a
+one-time combine tail — prologue / steady-state / tail exactly as the
+paper's chaining model decomposes it (§II.C).  On a real v5e the chunks map
+to parallel cores/megacore; sequence-sharded decode across chips reuses the
+same combine algebra via shard_map (distributed/context_parallel.py).
+
+q: (B, H, D); k/v: (B, S, H, D) -> out (B, H, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _partial_kernel(q_ref, k_ref, v_ref, kvlen_ref, m_ref, l_ref, o_ref, *,
+                    bkv: int, scale: float):
+    chunk = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                  # (H, D)
+    k = k_ref[0].astype(jnp.float32)                  # (H, bkv, D)
+    v = v_ref[0].astype(jnp.float32)                  # (H, bkv, D)
+    # Per-head scores: (H, bkv) = q (H, D) . k (H, bkv, D).
+    s = jax.lax.dot_general(q, k, (((1,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32) * scale
+    pos = chunk * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < kvlen_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=1, keepdims=True)             # (H, 1)
+    # Guard fully-masked chunks (exp would be exp(NEG_INF - NEG_INF)).
+    safe_m = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p = jnp.where(valid, jnp.exp(s - safe_m), 0.0)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    o = jax.lax.dot_general(p, v, (((1,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)  # (H, D)
+    m_ref[0, 0] = m
+    l_ref[0, 0] = l
+    o_ref[0, 0] = o
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array | int | None = None, *,
+                     scale: float | None = None, bkv: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """Flash-decode: parallel partials over KV chunks + combine tail."""
+    b, h, d = q.shape
+    _, s, hk, _ = k.shape
+    assert hk == h, "fold GQA groups before calling (see ops.gqa_decode)"
+    if scale is None:
+        scale = d ** -0.5
+    if kv_len is None:
+        kv_len = jnp.full((b,), s, jnp.int32)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+
+    bkv_ = min(bkv, s)
+    nchunks = pl.cdiv(s, bkv_)
+    pad = nchunks * bkv_ - s
+    if pad:
+        # Zero-pad to a block multiple: padded positions are masked by the
+        # kv_len test (zeros, not interpret-mode NaNs, so 0*pad stays 0).
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    kf = k.transpose(0, 2, 1, 3)                       # (B, H, S, D)
+    vf = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_partial_kernel, bkv=bkv_, scale=scale)
+    m, l, o = pl.pallas_call(
+        kernel,
+        grid=(b, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i, j: (i, 0, 0)),
+            # One KV chunk per grid step, all heads.
+            pl.BlockSpec((1, h, bkv_, d), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, h, bkv_, d), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, h, 1), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, h, 1), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, h, d), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nchunks, h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, nchunks, h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, nchunks, h, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, kf, vf, kv_len)
+    return combine_partials(m, l, o).astype(q.dtype)
+
+
+def combine_partials(m: jax.Array, l: jax.Array, o: jax.Array) -> jax.Array:
+    """Tail drain: renormalize and merge per-chunk partial softmax triples.
+
+    m/l: (B, C, H, 1), o: (B, C, H, D).  The same algebra combines
+    sequence-sharded partials across chips (psum form) — see
+    distributed/context_parallel.py.
+    """
+    m_g = jnp.max(m, axis=1, keepdims=True)            # (B, 1, H, 1)
+    w = jnp.exp(m - m_g)                               # (B, C, H, 1)
+    l_g = jnp.sum(l * w, axis=1)                       # (B, H, 1)
+    o_g = jnp.sum(o * w, axis=1)                       # (B, H, D)
+    return o_g / jnp.maximum(l_g, 1e-30)

@@ -1,0 +1,138 @@
+"""Flash attention (prefill) — streaming softmax as multi-lane chaining.
+
+The softmax-attention chain QK^T -> softmax -> PV is the framework's
+archetype of the paper's dependent instruction chain: the online-softmax
+recurrence lets the PV "instruction" chain off the QK "instruction" one KV
+block at a time instead of waiting for the full score matrix — the same
+first-results-available overlap as vector chaining, with KV blocks playing
+the role of element groups.
+
+VMEM residency: running (m, l, acc) statistics are the dual-source operand
+queue — one source is the HBM KV stream, the other the VMEM-resident
+accumulator; neither round-trips HBM (§IV.C's write-back/reread path is what
+a naive attention does when it materializes S = QK^T).
+
+Grid: (batch*heads, q_blocks, kv_blocks); kv is the innermost (sequential)
+axis so the scratch carries across kv steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  nkv: int, bq: int, bkv: int, causal: bool, scale: float,
+                  q_offset: int, logit_softcap: float):
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # (bq, d)
+        k = k_ref[0].astype(jnp.float32)              # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)              # (bkv, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if logit_softcap > 0.0:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        if causal:
+            rows = q_idx * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bkv), 0) + q_offset
+            cols = kv_idx * bkv + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bkv), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]                           # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (bq, bkv)
+        alpha = jnp.exp(m_prev - m_new)               # (bq, 1)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # Skip fully-masked KV blocks (block-level early-exit: the
+        # "dynamic local issue" analogue — don't occupy the unit with work
+        # that cannot contribute).
+        first_row = q_idx * bq + q_offset
+        pl.when((kv_idx * bkv) <= (first_row + bq - 1))(_compute)
+    else:
+        _compute()
+
+    @pl.when(kv_idx == nkv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    logit_softcap: float = 0.0, bq: int = 128,
+                    bkv: int = 128, interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D) with H % Hkv == 0 (GQA: q
+    heads are folded onto their kv head).  Returns (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert h % hkv == 0
+    groups = h // hkv
+    if scale is None:
+        scale = d ** -0.5
+    # Fold batch/head; replicate kv heads across their query group.
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), groups, axis=1
+                    ).reshape(b * h, skv, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), groups, axis=1
+                    ).reshape(b * h, skv, d)
+
+    bq_ = min(bq, sq)
+    bkv_ = min(bkv, skv)
+    nq = pl.cdiv(sq, bq_)
+    nkv = pl.cdiv(skv, bkv_)
+    q_offset = skv - sq if causal else 0
+
+    kernel = functools.partial(
+        _flash_kernel, nkv=nkv, bq=bq_, bkv=bkv_, causal=causal,
+        scale=scale, q_offset=q_offset, logit_softcap=logit_softcap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq_, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bkv_, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bkv_, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq_, 1), jnp.float32),   # running denom
+            pltpu.VMEM((bq_, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+def attention_flops_bytes(b, sq, skv, h, d, dtype=jnp.bfloat16,
+                          flash: bool = True) -> tuple[int, int]:
+    """Napkin math for §Perf: naive attention materializes S and P
+    (2*b*h*sq*skv extra reads+writes each)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    flops = 4 * b * h * sq * skv * d
+    io = (b * sq * h * d * 2 + b * skv * h * d * 2) * itemsize
+    if not flash:
+        io += 4 * b * h * sq * skv * itemsize
+    return flops, io

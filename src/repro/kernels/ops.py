@@ -1,0 +1,99 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Every wrapper auto-selects ``interpret=True`` off-TPU so the same call sites
+run on this CPU container (validated against ref.py) and compile natively
+on a real TPU.  Model code calls these; nothing else in the framework
+imports pallas directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gemm as _gemm
+from repro.kernels import ssd as _ssd
+from repro.kernels import streamer as _streamer
+
+
+@functools.cache
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --- streamer ---------------------------------------------------------------
+
+def fused_chain(x, y, w):
+    return _streamer.fused_chain(x, y, w, interpret=_interpret_default())
+
+
+def unfused_chain(x, y, w):
+    return _streamer.unfused_chain(x, y, w, interpret=_interpret_default())
+
+
+def axpy(alpha, x, y):
+    return _streamer.axpy(alpha, x, y, interpret=_interpret_default())
+
+
+# --- gemm -------------------------------------------------------------------
+
+def gemm(x, y, bias=None, activation="none", **kw):
+    return _gemm.gemm(x, y, bias, activation,
+                      interpret=_interpret_default(), **kw)
+
+
+def gemm_unfused_epilogue(x, y, bias, activation="gelu", **kw):
+    return _gemm.gemm_unfused_epilogue(
+        x, y, bias, activation, interpret=_interpret_default(), **kw)
+
+
+# --- attention --------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal=True, scale=None, logit_softcap=0.0,
+                    bq=128, bkv=128):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, scale=scale, logit_softcap=logit_softcap,
+        bq=bq, bkv=bkv, interpret=_interpret_default())
+
+
+def decode_attention(q, k, v, kv_len=None, *, scale=None, bkv=512):
+    return _dec.decode_attention(q, k, v, kv_len, scale=scale, bkv=bkv,
+                                 interpret=_interpret_default())
+
+
+def gqa_decode(q, k, v, kv_len=None, **kw):
+    """GQA decode: q (B, Hq, D), k/v (B, S, Hkv, D) with Hq % Hkv == 0."""
+    b, hq, d = q.shape
+    hkv = k.shape[2]
+    groups = hq // hkv
+    kf = jnp.repeat(k, groups, axis=2)
+    vf = jnp.repeat(v, groups, axis=2)
+    return decode_attention(q, kf, vf, kv_len, **kw)
+
+
+# --- ssd --------------------------------------------------------------------
+
+def ssd(x, dt, a, b, c, *, chunk=128):
+    return _ssd.ssd(x, dt, a, b, c, chunk=chunk,
+                    interpret=_interpret_default())
+
+
+def ssd_batched(x, dt, a, b, c, *, chunk=128):
+    """Batched SSD: x (B, L, H, P), dt (B, L, H), a (H,), b/c (B, L, G, N).
+    Expands groups, folds (B, H) into the kernel's program axis."""
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    xf = x.transpose(0, 2, 1, 3).reshape(bsz * h, l, p)
+    dtf = dt.transpose(0, 2, 1).reshape(bsz * h, l)
+    af = jnp.tile(a, bsz)
+    bf = jnp.repeat(b, rep, axis=2).transpose(0, 2, 1, 3).reshape(
+        bsz * h, l, n)
+    cf = jnp.repeat(c, rep, axis=2).transpose(0, 2, 1, 3).reshape(
+        bsz * h, l, n)
+    y, hT = ssd(xf, dtf, af, bf, cf, chunk=chunk)
+    y = y.reshape(bsz, h, l, p).transpose(0, 2, 1, 3)
+    return y, hT.reshape(bsz, h, n, p)

@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth a kernel is tested against
+(tests/kernels/*): no tiling, no pipelining, numerically straightforward.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --- streamer ---------------------------------------------------------------
+
+def chain_ref(x: jax.Array, y: jax.Array, w: jax.Array) -> jax.Array:
+    """The paper's Fig. 1 chain vle->vfmul->vfadd->vse: out = x*y + w."""
+    return x * y + w
+
+
+def axpy_ref(alpha, x: jax.Array, y: jax.Array) -> jax.Array:
+    return alpha * x + y
+
+
+def scal_ref(alpha, x: jax.Array) -> jax.Array:
+    return alpha * x
+
+
+# --- gemm -------------------------------------------------------------------
+
+def gemm_ref(x: jax.Array, y: jax.Array, bias: jax.Array | None = None,
+             activation: str = "none") -> jax.Array:
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    elif activation == "silu":
+        out = jax.nn.silu(out)
+    elif activation != "none":
+        raise ValueError(activation)
+    return out.astype(x.dtype)
+
+
+# --- attention --------------------------------------------------------------
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+            causal: bool = True, scale: float | None = None,
+            logit_softcap: float = 0.0) -> jax.Array:
+    """Reference attention.  q: (B, Sq, H, D); k/v: (B, Skv, H, D)."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logit_softcap > 0.0:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    if causal:
+        qi = jnp.arange(sq)[:, None] + (skv - sq)
+        ki = jnp.arange(skv)[None, :]
+        mask = qi >= ki
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array | int | None = None,
+                         scale: float | None = None) -> jax.Array:
+    """Single-token decode attention.  q: (B, H, D); k/v: (B, S, H, D).
+    Positions >= kv_len are masked (cache padding)."""
+    b, s, h, d = k.shape
+    if scale is None:
+        scale = d ** -0.5
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if kv_len is not None:
+        mask = jnp.arange(s)[None, None, :] < jnp.asarray(kv_len).reshape(-1, 1, 1)
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# --- Mamba-2 SSD ------------------------------------------------------------
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array, h0: jax.Array | None = None
+            ) -> tuple[jax.Array, jax.Array]:
+    """Sequential state-space-duality scan (the semantics SSD computes).
+
+    x : (L, H, P)   inputs per head
+    dt: (L, H)      positive step sizes
+    a : (H,)        negative scalar decay per head (A in Mamba-2)
+    b : (L, G, N)   input projections (G groups; H % G == 0)
+    c : (L, G, N)   output projections
+    h0: (H, P, N)   optional initial state
+    returns (y: (L, H, P), h_final: (H, P, N))
+    """
+    l, h, p = x.shape
+    g, n = b.shape[1], b.shape[2]
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=1)        # (L, H, N)
+    ch = jnp.repeat(c, rep, axis=1)
+    if h0 is None:
+        h0 = jnp.zeros((h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp              # (H,P), (H,), (H,N), (H,N)
+        decay = jnp.exp(a * dtt)           # (H,)
+        dbx = jnp.einsum("hp,hn,h->hpn", xt.astype(jnp.float32),
+                         bt.astype(jnp.float32), dtt.astype(jnp.float32))
+        state = decay[:, None, None] * state + dbx
+        yt = jnp.einsum("hpn,hn->hp", state, ct.astype(jnp.float32))
+        return state, yt
+
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (x, dt, bh, ch))
+    return ys.astype(x.dtype), hT

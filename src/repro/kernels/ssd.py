@@ -1,0 +1,123 @@
+"""Mamba-2 SSD (state-space duality) chunked kernel.
+
+SSD *is* the paper's chaining model applied to a recurrence: the sequence is
+strip-mined into chunks (element groups); within a chunk the computation is
+a dense, MXU-friendly "steady state" (causal-masked C B^T attention-like
+matmuls); across chunks a small (P x N) state is carried — the chained
+operand that lets chunk g+1 start from chunk g's first results without
+re-reading the sequence.  The state lives in VMEM scratch across grid steps
+(never round-trips HBM): multi-source forwarding for the recurrence.
+
+Per (batch*head) program, grid axis 1 walks chunks sequentially:
+
+  within chunk (steady state):
+      L[t,s]   = exp(cum_a[t] - cum_a[s]) * (t >= s)
+      y_intra  = ((C K^T) .* L) @ (dt * x)
+  across chunks (chaining):
+      y_inter  = exp(cum_a[t]) * (C @ h_prev)
+      h_new    = exp(total_a) * h_prev + K^T_decayed @ (dt * x)
+
+Shapes: x (BH, L, P), dt (BH, L, 1), a (BH, 1, 1) scalar decay, b/c
+(BH, L, N).  GQA-style groups are expanded by the ops wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref,
+                *, nchunks: int, bl: int):
+    # NB: pallas passes refs as (inputs..., outputs..., scratch...): the
+    # carried state h_ref is the trailing scratch.
+    chunk = pl.program_id(1)
+
+    @pl.when(chunk == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (bl, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (bl, 1)
+    a = a_ref[0, 0, 0].astype(jnp.float32)    # scalar (negative)
+    bmat = b_ref[0].astype(jnp.float32)       # (bl, N)
+    cmat = c_ref[0].astype(jnp.float32)       # (bl, N)
+
+    adt = a * dt                              # (bl, 1)
+    cum = jnp.cumsum(adt, axis=0)             # (bl, 1) inclusive
+    seg = cum - adt                           # exclusive cumsum
+    total = cum[bl - 1, 0]                    # sum over chunk
+
+    # Intra-chunk: causal decay mask L[t, s] = exp(cum[t] - cum[s]), t>=s.
+    lmask = jnp.exp(cum - cum.T)              # (bl, bl) via broadcast
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bl, bl), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bl, bl), 1)
+    lmask = jnp.where(rows >= cols, lmask, 0.0)
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    dtx = dt * x                              # (bl, P)
+    y_intra = jax.lax.dot((scores * lmask), dtx,
+                          preferred_element_type=jnp.float32)
+
+    # Inter-chunk: contribution of the carried state.
+    h = h_ref[...]                            # (N, P)
+    y_inter = jnp.exp(cum) * jax.lax.dot(cmat, h,
+                                         preferred_element_type=jnp.float32)
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # State update: decay-weighted chunk summary + decayed previous state.
+    decay_to_end = jnp.exp(total - cum)       # (bl, 1)
+    bw = bmat * decay_to_end                  # (bl, N)
+    h_new = jnp.exp(total) * h + jax.lax.dot_general(
+        bw, dtx, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)   # (N, P)
+    h_ref[...] = h_new
+
+    @pl.when(chunk == nchunks - 1)
+    def _emit_state():
+        hout_ref[0] = h_new
+
+
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+        c: jax.Array, *, chunk: int = 128,
+        interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (BH, L, P); dt: (BH, L); a: (BH,); b/c: (BH, L, N).
+    Returns (y: (BH, L, P), h_final: (BH, N, P)).  L % chunk == 0 is
+    required (pad upstream); chunk should be a multiple of 8.
+    """
+    bh, l, p = x.shape
+    n = b.shape[-1]
+    bl = min(chunk, l)
+    assert l % bl == 0, (l, bl)
+    nchunks = l // bl
+    dt3 = dt.reshape(bh, l, 1)
+    a3 = a.reshape(bh, 1, 1)
+
+    kernel = functools.partial(_ssd_kernel, nchunks=nchunks, bl=bl)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(bh, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, bl, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bl, 1), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bl, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bl, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bl, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, n, p), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, l, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt3, a3, b, c)
+    return y, h_final

@@ -1,0 +1,132 @@
+"""Streaming element-wise chain kernels — the paper's Fig. 1 on a TPU.
+
+The paper's exemplar chain ``vle32 -> vfmul -> vfadd -> vse32`` maps to the
+TPU as a streaming kernel over HBM-resident vectors:
+
+* **Baseline (paper's produce->write-back->reread path)**: one kernel per
+  vector op.  The intermediate ``x*y`` round-trips through HBM between the
+  mul kernel and the add kernel — exactly the VRF write-back/reread
+  inefficiency of §IV.C, at HBM scale.
+
+* **Ara-Opt analogue (multi-source forwarding + next-VL prefetch)**: a
+  single fused kernel.  The Pallas grid pipeline prefetches block g+1 from
+  HBM into VMEM while block g computes (next-VL prefetch; the BlockSpec
+  index_map is the address-stream descriptor), and the mul result is
+  forwarded to the add in VREGs without ever leaving the core (multi-source
+  forwarding).
+
+Block shape: (rows, lanes) with lanes a multiple of 128 (VPU lane width) and
+rows a multiple of 8 (f32 sublane) — MXU/VPU-aligned VMEM tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = (8, 512)
+
+
+def _chain_kernel(x_ref, y_ref, w_ref, o_ref):
+    # vfmul -> vfadd fused: the product stays in vector registers.
+    o_ref[...] = x_ref[...] * y_ref[...] + w_ref[...]
+
+
+def _mul_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] * y_ref[...]
+
+
+def _add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+def _grid_and_specs(shape: tuple[int, int], block: tuple[int, int]):
+    rows, cols = shape
+    br, bc = block
+    br, bc = min(br, rows), min(bc, cols)
+    grid = (pl.cdiv(rows, br), pl.cdiv(cols, bc))
+    spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    return grid, spec
+
+
+def _as2d(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    """Reshape an arbitrary array to 2-D (rows, 128k) for lane alignment."""
+    orig = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = 128 if n % 128 == 0 else n
+    return flat.reshape(n // cols, cols), orig
+
+
+def fused_chain(x: jax.Array, y: jax.Array, w: jax.Array,
+                block: tuple[int, int] = DEFAULT_BLOCK,
+                interpret: bool = True) -> jax.Array:
+    """out = x*y + w in ONE kernel (forwarding + prefetch)."""
+    x2, orig = _as2d(x)
+    y2, _ = _as2d(y)
+    w2, _ = _as2d(w)
+    grid, spec = _grid_and_specs(x2.shape, block)
+    out = pl.pallas_call(
+        _chain_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, y2, w2)
+    return out.reshape(orig)
+
+
+def unfused_chain(x: jax.Array, y: jax.Array, w: jax.Array,
+                  block: tuple[int, int] = DEFAULT_BLOCK,
+                  interpret: bool = True) -> jax.Array:
+    """out = x*y + w as TWO kernels with an HBM round-trip between them —
+    the baseline 'write-back then reread' operand path."""
+    x2, orig = _as2d(x)
+    y2, _ = _as2d(y)
+    w2, _ = _as2d(w)
+    grid, spec = _grid_and_specs(x2.shape, block)
+    call = functools.partial(pl.pallas_call, grid=grid,
+                             out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+                             interpret=interpret)
+    t = call(_mul_kernel, in_specs=[spec, spec], out_specs=spec)(x2, y2)
+    out = call(_add_kernel, in_specs=[spec, spec], out_specs=spec)(t, w2)
+    return out.reshape(orig)
+
+
+def axpy(alpha: jax.Array | float, x: jax.Array, y: jax.Array,
+         block: tuple[int, int] = DEFAULT_BLOCK,
+         interpret: bool = True) -> jax.Array:
+    """alpha*x + y with alpha in SMEM-like scalar prefetch position."""
+    x2, orig = _as2d(x)
+    y2, _ = _as2d(y)
+    grid, spec = _grid_and_specs(x2.shape, block)
+    alpha_arr = jnp.asarray(alpha, x.dtype).reshape(1)
+    out = pl.pallas_call(
+        _axpy_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i, j: (0,)), spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(alpha_arr, x2, y2)
+    return out.reshape(orig)
+
+
+def hbm_roundtrip_bytes(shape: tuple[int, ...], dtype=jnp.float32,
+                        fused: bool = True) -> int:
+    """Analytic HBM traffic of the two variants — the M/O-term napkin math
+    used in EXPERIMENTS.md §Perf (fused: 4 streams; unfused: 6 streams)."""
+    n = 1
+    for s in shape:
+        n *= s
+    itemsize = jnp.dtype(dtype).itemsize
+    streams = 4 if fused else 6
+    return streams * n * itemsize

@@ -1,0 +1,190 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+DOC = """Scan-corrected cost extrapolation for §Roofline.
+
+XLA's cost_analysis counts while/scan bodies ONCE regardless of trip count
+(verified empirically), so the production compile (scan-over-layers,
+microbatch scan, chunked-attention scan) underreports FLOPs/bytes/
+collective bytes.  This module recovers true totals by lowering *unrolled*
+reduced-depth variants and solving the linear structure:
+
+    cost(L, c) = const + L * (layer_const + alpha * c)
+
+where L = layer count and c = inner chunk size (attention KV chunk or SSD
+chunk; the body of a chunk-scan costs ~alpha*c and executes S/c times, so
+the true per-layer cost is layer_const + alpha * S).  Three measurements —
+(L1, c1), (2*L1, c1), (L1, c2) — identify all terms.  Decode cells have no
+chunk scan: two measurements suffice.
+
+The analysis variants run with remat off and microbatches=1; the production
+compile (dryrun.py) retains remat+scan and is the memory-fit proof.
+"""
+
+import argparse
+import json
+import pathlib
+from typing import Any
+
+from repro.configs import ARCHS, SHAPES, skip_reason
+from repro.core.roofline import RooflineTerms
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / \
+    "dryrun"
+
+METRICS = ("flops", "hbm_bytes", "coll_total", "coll_ar", "coll_ag",
+           "coll_rs", "coll_a2a", "coll_cp")
+
+
+def _measure(arch: str, shape_name: str, multi_pod: bool,
+             n_layers: int, chunk_field: str | None, chunk: int | None,
+             extra_overrides: dict | None = None) -> dict[str, float]:
+    from repro.launch.dryrun import lower_cell
+    overrides: dict[str, Any] = {}
+    if extra_overrides:
+        overrides.update(extra_overrides)
+    # Analysis knobs (and the chunk-variation measurement) override any
+    # experiment-level settings of the same fields.
+    overrides.update({"n_layers": n_layers, "scan_layers": False,
+                      "remat": False, "microbatches": 1})
+    if chunk_field and chunk:
+        overrides[chunk_field] = chunk
+    rec = lower_cell(arch, shape_name, multi_pod, overrides)
+    if rec["status"] != "ok":
+        raise RuntimeError(f"analysis lowering failed: {rec}")
+    by_type = rec["collectives"]["bytes_by_type"]
+    return {
+        "flops": rec["cost"]["flops_per_device"],
+        "hbm_bytes": rec["cost"]["hbm_bytes_per_device"],
+        "coll_total": rec["collectives"]["total_bytes"],
+        "coll_ar": by_type.get("all-reduce", 0.0),
+        "coll_ag": by_type.get("all-gather", 0.0),
+        "coll_rs": by_type.get("reduce-scatter", 0.0),
+        "coll_a2a": by_type.get("all-to-all", 0.0),
+        "coll_cp": by_type.get("collective-permute", 0.0),
+    }
+
+
+def _chunk_field(cfg, shape_name: str) -> tuple[str | None, int, int]:
+    """Which inner chunk scan (if any) needs extrapolation for this cell.
+    `cfg` must already carry any experiment overrides so the variation
+    happens around the configured chunk size."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return None, 0, 0
+    if "ssd" in cfg.pattern:
+        c1 = cfg.ssm_chunk
+        return "ssm_chunk", c1, min(2 * c1, shape.seq_len)
+    # Attention archs: the chunked softmax scan triggers when S > chunk.
+    if shape.seq_len > cfg.attn_chunk:
+        c1 = cfg.attn_chunk
+        return "attn_chunk", c1, min(2 * c1, shape.seq_len)
+    return None, 0, 0
+
+
+def analyze(arch: str, shape_name: str, multi_pod: bool = False,
+            extra_overrides: dict | None = None) -> dict:
+    import dataclasses
+    cfg = ARCHS[arch]
+    if extra_overrides:
+        cfg_over = {k: v for k, v in extra_overrides.items()
+                    if k != "microbatches"}
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"status": "skipped", "reason": reason}
+
+    plen = len(cfg.pattern)
+    lead = cfg.first_dense_layers
+    l1 = lead + plen
+    l2 = lead + 2 * plen
+    cfield, c1, c2 = _chunk_field(cfg, shape_name)
+    seq = shape.seq_len
+
+    m_l1 = _measure(arch, shape_name, multi_pod, l1, cfield, c1 or None,
+                    extra_overrides)
+    m_l2 = _measure(arch, shape_name, multi_pod, l2, cfield, c1 or None,
+                    extra_overrides)
+    per_layer = {k: (m_l2[k] - m_l1[k]) / plen for k in METRICS}
+    const = {k: m_l1[k] - plen * per_layer[k] for k in METRICS}
+
+    if cfield == "ssm_chunk" and 4 * c1 <= seq:
+        # SSD's intra-chunk body has a *quadratic* chunk term (the (T,T)
+        # decay-masked score matrices): body(c) = gamma*c + beta*c^2, so
+        # true per-layer chunk cost = (S/c)*body(c) = gamma*S + beta*S*c.
+        # Three measurements identify gamma and beta.
+        m_c2 = _measure(arch, shape_name, multi_pod, l1, cfield, 2 * c1,
+                        extra_overrides)
+        m_c4 = _measure(arch, shape_name, multi_pod, l1, cfield, 4 * c1,
+                        extra_overrides)
+        for k in METRICS:
+            d1 = m_c2[k] - m_l1[k]
+            d2 = m_c4[k] - m_c2[k]
+            beta = (d2 - 2 * d1) / (6 * plen * c1 * c1)
+            gamma = d1 / (plen * c1) - 3 * beta * c1
+            per_layer[k] = per_layer[k] + gamma * (seq - c1) + \
+                beta * (seq * c1 - c1 * c1)
+    elif cfield and c2 > c1:
+        m_c2 = _measure(arch, shape_name, multi_pod, l1, cfield, c2,
+                        extra_overrides)
+        # Linear body (attention: the query block is fixed, the kv-chunk
+        # body scales ~c): alpha per layer per unit chunk; true per-layer
+        # adds alpha*(S - c1).
+        alpha = {k: (m_c2[k] - m_l1[k]) / (plen * (c2 - c1))
+                 for k in METRICS}
+        per_layer = {k: per_layer[k] + alpha[k] * (seq - c1)
+                     for k in METRICS}
+
+    n_scan_layers = cfg.n_layers - lead
+    total = {k: const[k] + n_scan_layers * per_layer[k] for k in METRICS}
+    # Training remat recomputes the forward inside the backward: +1 fwd.
+    remat_factor = 4.0 / 3.0 if (shape.kind == "train" and cfg.remat) else 1.0
+    total_remat = {k: total[k] * (remat_factor if k == "flops" else 1.0)
+                   for k in METRICS}
+    return {
+        "status": "ok",
+        "per_layer": per_layer,
+        "const": const,
+        "total": total,
+        "remat_flops_factor": remat_factor,
+        "total_remat": total_remat,
+    }
+
+
+def roofline_from_analysis(analysis: dict, model_flops_per_device: float
+                           ) -> dict:
+    t = analysis["total_remat"]
+    terms = RooflineTerms(flops=t["flops"], hbm_bytes=t["hbm_bytes"],
+                          collective_bytes=t["coll_total"])
+    out = terms.to_dict()
+    out["useful_flops_ratio"] = (model_flops_per_device / t["flops"]
+                                 if t["flops"] else 0.0)
+    out["roofline_fraction"] = terms.roofline_fraction(
+        model_flops_per_device)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single-pod",
+                    choices=["single-pod", "multi-pod"])
+    ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", default="")
+    args = ap.parse_args()
+    overrides = json.loads(args.override) if args.override else None
+    res = analyze(args.arch, args.shape, args.mesh == "multi-pod",
+                  overrides)
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    tag = f"__{args.tag}" if args.tag else ""
+    name = f"{args.arch}__{args.shape}__{args.mesh}{tag}.analysis.json"
+    (outdir / name).write_text(json.dumps(res, indent=2))
+    print(json.dumps({"status": res["status"]}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any jax import (device count
+# locks at first init), which is why they precede even the module docstring
+# — a __future__ import cannot be used in this file.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real train_step / serve_step with production
+shardings on the 16x16 (single-pod) and 2x16x16 (multi-pod) host-device
+meshes, compiles it (SPMD partitioner + scheduler run for real), and
+records:
+  * compiled.memory_analysis()  — per-device bytes (proves it fits),
+  * compiled.cost_analysis()    — per-device HLO FLOPs / bytes accessed,
+  * collective bytes parsed from the compiled HLO (hlo_analysis.py),
+  * the three §Roofline terms + MODEL_FLOPS ratio.
+
+Run one cell:   python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+Run the sweep:  python -m repro.launch.sweep   (subprocess per cell)
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, ShapeSpec, SHAPES, skip_reason
+from repro.configs.base import ModelConfig
+from repro.core.roofline import (RooflineTerms, TPU_V5E,
+                                 model_flops_inference,
+                                 model_flops_training)
+from repro.distributed.sharding import (named_shardings, param_specs,
+                                        resolve_spec, safe_spec, use_mesh)
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import loss_fn
+from repro.models.transformer import decode_step, init_cache, init_model, \
+    logits_fn
+from repro.train import optimizer as opt
+from repro.train.step import StepConfig, TrainState, init_state, \
+    make_train_step
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / \
+    "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct stand-ins — no allocation, the pattern
+# required by the brief).
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind in ("train",):
+        batch: dict[str, Any] = {"targets": tok}
+        if cfg.modality == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   jnp.bfloat16)
+        else:
+            batch["tokens"] = tok
+            if cfg.modality == "vlm":
+                batch["img_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.modality == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   jnp.bfloat16)
+        else:
+            batch["tokens"] = tok
+            if cfg.modality == "vlm":
+                batch["img_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against an s-long cache
+    return {"tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Any:
+    """NamedShardings for the input batch (batch dim over pod+data)."""
+    def spec_for(path_shape):
+        nd = len(path_shape.shape)
+        spec = resolve_spec(("batch",) + (None,) * (nd - 1))
+        return NamedSharding(mesh, safe_spec(path_shape.shape, spec, mesh))
+    return jax.tree.map(spec_for, input_specs(cfg, shape))
+
+
+def _cache_sharding(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                    cache_abs) -> Any:
+    """Decode-cache shardings.  batch over (pod, data) normally; for
+    long_500k (batch=1) the KV sequence dim is context-parallel over
+    'data' instead (logical axis seq_cp)."""
+    seq_cp = shape.global_batch < mesh.shape.get("data", 1)
+
+    def leaf(path, leaf_abs):
+        names = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        nd = len(leaf_abs.shape)
+        stacked = "scan" in names           # leading n_rep dim
+        base = 1 if stacked else 0
+        logical: list[str | None] = [None] * nd
+        if nd > base:
+            logical[base] = None if seq_cp else "batch"
+        # KV/linear caches: (B, S, KV, D) or (B, S, R): seq dim = base+1
+        is_seq_cache = any(n in ("k", "v", "ckv", "krope") for n in names)
+        if is_seq_cache and nd >= base + 2 and seq_cp:
+            logical[base + 1] = "seq_cp"
+        if is_seq_cache and nd == base + 4:
+            logical[base + 2] = "kv_heads"
+        if any(n == "ssm" for n in names) and nd >= base + 2:
+            logical[base + 1] = "heads"     # SSM state: shard heads
+        spec = safe_spec(leaf_abs.shape, resolve_spec(tuple(logical)), mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_abs)
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def _microbatches(cfg: ModelConfig, shape: ShapeSpec, mesh) -> int:
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    per_dev_batch = max(shape.global_batch // dp, 1)
+    # Keep per-device microbatch around 2 sequences at 4k.
+    mb = max(1, min(per_dev_batch // 2, 8))
+    while shape.global_batch % (mb * dp) and mb > 1:
+        mb -= 1
+    return mb
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               opt_overrides: dict | None = None,
+               microbatches: int | None = None) -> dict:
+    cfg = ARCHS[arch]
+    if opt_overrides:
+        overrides = dict(opt_overrides)
+        microbatches = overrides.pop("microbatches", microbatches)
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi-pod" if multi_pod else "single-pod",
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    record: dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi-pod" if multi_pod else "single-pod",
+        "chips": chips, "status": "error",
+    }
+    rules = None
+    if cfg.sharding_mode == "serve_tp":
+        # Serving-oriented layout: parameters live TP-sharded over "model"
+        # only (no FSDP dim) so decode steps never all-gather weights —
+        # the §Perf fix for decode's dominant collective.
+        rules = {"embed": None}
+    elif cfg.sharding_mode == "fsdp":
+        # Pure-FSDP alternative to Megatron-TP (§Perf lever): params fully
+        # sharded over (data, model), batch/tokens sharded over BOTH ICI
+        # axes; no tensor-parallel activation collectives — weight
+        # all-gathers instead.
+        rules = {"embed": ("data", "model"), "heads": None,
+                 "kv_heads": None, "ff": None, "vocab": None,
+                 "expert": None, "batch": ("pod", "data", "model")}
+    t0 = time.time()
+    with use_mesh(mesh, rules):
+        params_abs = jax.eval_shape(
+            functools.partial(init_model, cfg=cfg), jax.random.PRNGKey(0))
+        p_specs = param_specs(params_abs)
+        p_sh = named_shardings(p_specs, mesh)
+        batch_abs = input_specs(cfg, shape)
+        b_sh = batch_specs(cfg, shape, mesh)
+
+        if shape.kind == "train":
+            mb = microbatches or _microbatches(cfg, shape, mesh)
+            record["microbatches"] = mb
+            step_cfg = StepConfig(microbatches=mb)
+            train_step = make_train_step(cfg, step_cfg)
+            state_abs = jax.eval_shape(init_state, params_abs)
+            state_sh = TrainState(
+                params=p_sh,
+                opt=opt.AdamWState(
+                    step=NamedSharding(mesh, P()),
+                    m=p_sh, v=jax.tree.map(lambda s: s, p_sh)),
+                rng=NamedSharding(mesh, P()))
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(state_sh, b_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_abs, batch_abs)
+            record["tokens_per_step"] = shape.global_batch * shape.seq_len
+            model_flops = model_flops_training(
+                cfg.active_param_count(), record["tokens_per_step"])
+        elif shape.kind == "prefill":
+            fwd = functools.partial(logits_fn, cfg=cfg, mode="prefill")
+            lowered = jax.jit(
+                fwd, in_shardings=(p_sh, b_sh), out_shardings=None,
+            ).lower(params_abs, batch_abs)
+            record["tokens_per_step"] = shape.global_batch * shape.seq_len
+            model_flops = model_flops_inference(
+                cfg.active_param_count(), record["tokens_per_step"])
+        else:  # decode
+            cache_abs = jax.eval_shape(
+                functools.partial(init_cache, cfg, shape.global_batch,
+                                  shape.seq_len))
+            c_sh = _cache_sharding(cfg, shape, mesh, cache_abs)
+            tok_sh = NamedSharding(mesh, safe_spec(
+                (shape.global_batch,), resolve_spec(("batch",)), mesh))
+            dstep = functools.partial(decode_step, cfg=cfg)
+            lowered = jax.jit(
+                dstep,
+                in_shardings=(p_sh, c_sh, tok_sh, tok_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,),
+            ).lower(params_abs, cache_abs,
+                    jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+                    jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32))
+            record["tokens_per_step"] = shape.global_batch
+            model_flops = model_flops_inference(
+                cfg.active_param_count(), shape.global_batch)
+
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            record["memory"] = {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                "code_bytes": int(mem.generated_code_size_in_bytes),
+            }
+            live = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                    + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+            record["memory"]["live_bytes_per_device"] = int(live)
+            record["memory"]["fits_16gb_hbm"] = bool(live < 16e9)
+
+        cost = compiled.cost_analysis() or {}
+        flops = float(cost.get("flops", 0.0))
+        hbm = float(cost.get("bytes accessed", 0.0))
+        coll = collective_bytes(compiled.as_text())
+        record["cost"] = {"flops_per_device": flops,
+                          "hbm_bytes_per_device": hbm}
+        record["collectives"] = coll
+
+        terms = RooflineTerms(flops=flops, hbm_bytes=hbm,
+                              collective_bytes=coll["total_bytes"])
+        record["roofline"] = terms.to_dict()
+        record["model_flops_total"] = model_flops
+        record["model_flops_per_device"] = model_flops / chips
+        record["useful_flops_ratio"] = (
+            model_flops / chips / flops if flops else 0.0)
+        record["roofline_fraction"] = terms.roofline_fraction(
+            model_flops / chips)
+        record["status"] = "ok"
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single-pod",
+                    choices=["single-pod", "multi-pod"])
+    ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", default="",
+                    help="JSON ModelConfig overrides (perf experiments)")
+    args = ap.parse_args()
+    overrides = json.loads(args.override) if args.override else None
+    rec = lower_cell(args.arch, args.shape, args.mesh == "multi-pod",
+                     overrides)
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    tag = f"__{args.tag}" if args.tag else ""
+    name = f"{args.arch}__{args.shape}__{args.mesh}{tag}.json"
+    (outdir / name).write_text(json.dumps(rec, indent=2))
+    print(json.dumps({k: rec.get(k) for k in
+                      ("arch", "shape", "mesh", "status", "compile_s",
+                       "roofline_fraction")}, indent=None))
+    if rec["status"] not in ("ok", "skipped"):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

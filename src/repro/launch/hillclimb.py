@@ -1,0 +1,82 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+DOC = """§Perf hillclimb runner: hypothesis -> change -> re-lower -> re-analyse.
+
+Each iteration is a ModelConfig override set applied to one (arch x shape)
+cell; the scan-corrected three-term roofline is recomputed and appended to
+experiments/perf/<cell>.jsonl.  EXPERIMENTS.md §Perf narrates these logs.
+
+    python -m repro.launch.hillclimb --arch qwen2.5-3b --shape train_4k \
+        --tag fsdp --override '{"sharding_mode": "fsdp"}' \
+        --hypothesis "TP all-reduce bytes dominate; pure FSDP swaps ..."
+"""
+
+import argparse
+import json
+import pathlib
+import time
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.costmodel import analyze, roofline_from_analysis
+
+REPO = pathlib.Path(__file__).resolve().parents[3]
+PERF_DIR = REPO / "experiments" / "perf"
+
+
+def run_iteration(arch: str, shape: str, tag: str, overrides: dict | None,
+                  hypothesis: str = "") -> dict:
+    from repro.launch.dryrun import lower_cell
+    cfg = ARCHS[arch]
+    t0 = time.time()
+    analysis = analyze(arch, shape, multi_pod=False,
+                       extra_overrides=overrides)
+    rec = {"arch": arch, "shape": shape, "tag": tag,
+           "overrides": overrides or {}, "hypothesis": hypothesis,
+           "elapsed_s": round(time.time() - t0, 1),
+           "status": analysis["status"]}
+    if analysis["status"] == "ok":
+        # model flops per device (production definition, from lower_cell's
+        # bookkeeping without compiling the full production graph).
+        shape_spec = SHAPES[shape]
+        chips = 256
+        if shape_spec.kind == "train":
+            mf = 6.0 * cfg.active_param_count() * \
+                shape_spec.global_batch * shape_spec.seq_len
+        elif shape_spec.kind == "prefill":
+            mf = 2.0 * cfg.active_param_count() * \
+                shape_spec.global_batch * shape_spec.seq_len
+        else:
+            mf = 2.0 * cfg.active_param_count() * shape_spec.global_batch
+        rec["roofline"] = roofline_from_analysis(analysis, mf / chips)
+        rec["totals"] = analysis["total_remat"]
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    log = PERF_DIR / f"{arch}__{shape}.jsonl"
+    with open(log, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--override", default="")
+    ap.add_argument("--hypothesis", default="")
+    args = ap.parse_args()
+    overrides = json.loads(args.override) if args.override else None
+    rec = run_iteration(args.arch, args.shape, args.tag, overrides,
+                        args.hypothesis)
+    out = {k: rec.get(k) for k in ("tag", "status", "elapsed_s")}
+    if "roofline" in rec:
+        r = rec["roofline"]
+        out.update({k: round(r[k], 6) for k in
+                    ("compute_s", "memory_s", "collective_s")})
+        out["bound"] = r["bound"]
+        out["roofline_fraction"] = round(r["roofline_fraction"], 5)
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Collective accounting from compiled HLO text (§Roofline inputs).
+
+XLA's cost_analysis does not expose collective bytes, so we parse the
+compiled module: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op's result shape is summed (async
+``-start`` ops counted once; ``-done`` skipped).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*([^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def _bytes_of_type_str(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-type result bytes (per-device program => per-device
+    wire-side approximation)."""
+    out: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue                        # async completion: counted at start
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        type_str, op, _ = m.groups()
+        b = _bytes_of_type_str(type_str)
+        out[op] += b
+        counts[op] += 1
+    return {"bytes_by_type": dict(out),
+            "counts_by_type": dict(counts),
+            "total_bytes": float(sum(out.values()))}
+
+
+def op_histogram(hlo_text: str, top: int = 15) -> list[tuple[str, int]]:
+    """Crude op-name histogram of the compiled module (perf debugging:
+    counts duplicated fusions, remat recompute, relayouts)."""
+    ops = re.findall(r"=\s*\S+\s+([a-z][\w-]*)\(", hlo_text)
+    hist: dict[str, int] = defaultdict(int)
+    for o in ops:
+        hist[o] += 1
+    return sorted(hist.items(), key=lambda kv: -kv[1])[:top]

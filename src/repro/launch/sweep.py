@@ -1,0 +1,101 @@
+"""Dry-run sweep driver: one subprocess per cell (isolation: an OOM or
+crash in one cell cannot kill the sweep; each gets a fresh XLA).
+
+Per (arch x shape):
+  * production compile on the single-pod 16x16 mesh        (dryrun.py)
+  * production compile on the multi-pod 2x16x16 mesh       (dryrun.py)
+  * scan-corrected cost extrapolation, single-pod          (costmodel.py)
+
+Results land in experiments/dryrun/*.json; benchmarks/dryrun_table.py and
+EXPERIMENTS.md §Roofline read them.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parents[3]
+OUT = REPO / "experiments" / "dryrun"
+
+
+def _run(mod: str, arch: str, shape: str, mesh: str, timeout: int,
+         tag: str = "", override: str = "") -> dict:
+    cmd = [sys.executable, "-m", mod, "--arch", arch, "--shape", shape,
+           "--mesh", mesh, "--out", str(OUT)]
+    if tag:
+        cmd += ["--tag", tag]
+    if override:
+        cmd += ["--override", override]
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+        ok = proc.returncode == 0
+        msg = (proc.stdout.strip().splitlines() or [""])[-1] if ok else \
+            (proc.stderr.strip().splitlines() or [""])[-1]
+    except subprocess.TimeoutExpired:
+        ok, msg = False, f"timeout>{timeout}s"
+    return {"ok": ok, "elapsed": round(time.time() - t0, 1), "msg": msg}
+
+
+def main() -> None:
+    from repro.configs import ARCHS, SHAPES, skip_reason
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="*", default=sorted(ARCHS))
+    ap.add_argument("--shapes", nargs="*", default=list(SHAPES))
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--skip-analysis", action="store_true")
+    ap.add_argument("--skip-multipod", action="store_true")
+    ap.add_argument("--only-missing", action="store_true")
+    args = ap.parse_args()
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    log = open(OUT / "sweep.log", "a")
+
+    def emit(rec):
+        line = json.dumps(rec)
+        print(line, flush=True)
+        log.write(line + "\n")
+        log.flush()
+
+    for arch in args.archs:
+        cfg = ARCHS[arch]
+        for shape in args.shapes:
+            reason = skip_reason(cfg, SHAPES[shape])
+            if reason:
+                # Record the skip as a first-class result.
+                for mesh in ("single-pod", "multi-pod"):
+                    p = OUT / f"{arch}__{shape}__{mesh}.json"
+                    p.write_text(json.dumps({
+                        "arch": arch, "shape": shape, "mesh": mesh,
+                        "status": "skipped", "reason": reason}, indent=2))
+                emit({"cell": f"{arch}/{shape}", "skipped": reason})
+                continue
+            plan = [("repro.launch.dryrun", "single-pod", "")]
+            if not args.skip_multipod:
+                plan.append(("repro.launch.dryrun", "multi-pod", ""))
+            if not args.skip_analysis:
+                plan.append(("repro.launch.costmodel", "single-pod", ""))
+            for mod, mesh, tag in plan:
+                suffix = ".analysis" if "costmodel" in mod else ""
+                target = OUT / f"{arch}__{shape}__{mesh}{suffix}.json"
+                if args.only_missing and target.exists():
+                    prev = json.loads(target.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        continue
+                res = _run(mod, arch, shape, mesh, args.timeout, tag)
+                emit({"cell": f"{arch}/{shape}/{mesh}",
+                      "mod": mod.split(".")[-1], **res})
+    log.close()
+
+
+if __name__ == "__main__":
+    main()

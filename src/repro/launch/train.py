@@ -1,0 +1,87 @@
+"""End-to-end training driver.
+
+CPU-scale real runs (examples use this) and the production-mesh path used
+on real hardware.  On this container, run e.g.:
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen2.5-3b --preset smoke --steps 100
+
+Presets:
+  smoke — reduced config, runs on 1 CPU (CI / demo).
+  full  — the assigned config on the production mesh (real TPU pods; on
+          CPU it will lower but be impractically slow to execute).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import pathlib
+
+import jax
+
+from repro.configs import ARCHS, reduced
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import SyntheticLM
+from repro.models import init_model
+from repro.train import optimizer as opt
+from repro.train.loop import LoopConfig, run
+from repro.train.step import StepConfig, init_state, make_train_step
+
+REPO = pathlib.Path(__file__).resolve().parents[3]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b", choices=sorted(ARCHS))
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=0,
+                    help="override layer count (smoke preset)")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log", default="")
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.preset == "smoke":
+        cfg = reduced(cfg)
+        if args.layers:
+            cfg = dataclasses.replace(cfg, n_layers=args.layers)
+
+    params = init_model(jax.random.PRNGKey(args.seed), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params:,} "
+          f"batch={args.batch} seq={args.seq}")
+
+    sched = opt.cosine_schedule(args.lr, warmup=max(args.steps // 20, 1),
+                                total=args.steps)
+    step_cfg = StepConfig(microbatches=args.microbatches,
+                          adamw=opt.AdamWConfig(lr=args.lr),
+                          schedule=sched)
+    train_step = jax.jit(make_train_step(cfg, step_cfg), donate_argnums=(0,))
+    state = init_state(params, seed=args.seed)
+
+    data = SyntheticLM(cfg, batch=args.batch, seq_len=args.seq,
+                       seed=args.seed)
+    ckpt_dir = args.ckpt_dir or str(REPO / "experiments" / "train" /
+                                    cfg.name)
+    ckpt = CheckpointManager(ckpt_dir, keep=2)
+    res = run(train_step, state, data, ckpt,
+              LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         log_every=10),
+              log_path=args.log or None)
+    first, last = res.history[0], res.history[-1]
+    print(f"step {first['step']}: loss={first['loss']:.4f}  ->  "
+          f"step {last['step']}: loss={last['loss']:.4f}")
+    print(f"mean step time {sum(h['time_s'] for h in res.history) / len(res.history):.3f}s; "
+          f"stragglers={res.straggler_steps}; resumed_from={res.resumed_from}")
+
+
+if __name__ == "__main__":
+    main()

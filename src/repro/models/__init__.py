@@ -1,0 +1,7 @@
+"""Composable model definitions for the assigned architectures."""
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_model, logits_fn)
+from repro.models.lm import cross_entropy, loss_fn
+
+__all__ = ["decode_step", "forward", "init_cache", "init_model",
+           "logits_fn", "cross_entropy", "loss_fn"]

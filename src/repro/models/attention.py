@@ -1,0 +1,356 @@
+"""Attention mixers: GQA/MQA (global + sliding-window) and DeepSeek MLA,
+with prefill/decode KV-cache paths.
+
+Two core implementations, selected by ``cfg.attn_impl``:
+
+* ``naive``   — materializes the score matrix (the baseline operand path:
+  S round-trips HBM, like the paper's VRF write-back/reread).
+* ``chunked`` — online-softmax over KV chunks via ``lax.scan`` (flash-style
+  chaining; XLA keeps running (m, l, acc) statistics live, bounding memory).
+  This is the jnp twin of kernels/flash_attention.py and is shardable under
+  GSPMD, which the Pallas kernel (TPU runtime only) is not on this host.
+
+``cfg.use_pallas=True`` routes to the Pallas kernels on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ashard
+from repro.kernels import ops as kops
+from repro.models.layers import (apply_norm, apply_rope, cdtype, init_norm,
+                                 pdtype, _normal)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    dt = pdtype(cfg)
+    p = {
+        "wq": _normal(ks[0], (d, h, hd), dt),
+        "wk": _normal(ks[1], (d, kv, hd), dt),
+        "wv": _normal(ks[2], (d, kv, hd), dt),
+        "wo": _normal(ks[3], (h, hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dt)
+        p["bk"] = jnp.zeros((kv, hd), dt)
+        p["bv"] = jnp.zeros((kv, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(ks[4], cfg, hd)
+        p["k_norm"] = init_norm(ks[5], cfg, hd)
+    return p
+
+
+def init_mla(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    dt = pdtype(cfg)
+    return {
+        "wq_a": _normal(ks[0], (d, cfg.q_lora_rank), dt),
+        "q_norm": init_norm(ks[1], cfg, cfg.q_lora_rank),
+        "wq_b": _normal(ks[2], (cfg.q_lora_rank, h, qk), dt),
+        "wkv_a": _normal(ks[3], (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+                         dt),
+        "kv_norm": init_norm(ks[4], cfg, cfg.kv_lora_rank),
+        "wkv_b": _normal(ks[5], (cfg.kv_lora_rank, h,
+                                 cfg.qk_nope_head_dim + cfg.v_head_dim), dt),
+        "wo": _normal(ks[6], (h, cfg.v_head_dim, d), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+def _gqa_scores_mask(sq, skv, offset, causal, window):
+    """(sq, skv) additive mask: causal and/or sliding window."""
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= qpos >= kpos
+    if window is not None and window > 0:
+        ok &= qpos - kpos < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attend_naive(q, k, v, *, causal, window, scale, softcap, offset=0):
+    """q: (B, Sq, H, Dk); k: (B, Skv, KV, Dk); v: (B, Skv, KV, Dv)."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    dv = v.shape[3]
+    rep = h // kvh
+    qg = q.reshape(b, sq, kvh, rep, dh)
+    s = jnp.einsum("bqkrd,bskd->bkrqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + _gqa_scores_mask(sq, k.shape[1], offset, causal, window)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrqs,bskd->bqkrd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def attend_chunked(q, k, v, *, causal, window, scale, softcap, offset=0,
+                   chunk=1024):
+    """Online-softmax over KV chunks (flash-style chaining in jnp)."""
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    rep = h // kvh
+    nchunk = -(-skv // chunk)
+    pad = nchunk * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunk, chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunk, chunk, kvh, dv).transpose(1, 0, 2, 3, 4)
+    qg = q.reshape(b, sq, kvh, rep, dh).astype(jnp.float32)
+    qpos = jnp.arange(sq) + offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, idx = inp                            # (B, C, KV, D), idx
+        s = jnp.einsum("bqkrd,bskd->bkrqs", qg, kb.astype(jnp.float32))
+        s = s * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = idx * chunk + jnp.arange(chunk)
+        ok = kpos[None, :] < skv
+        if causal:
+            ok &= qpos[:, None] >= kpos[None, :]
+        if window is not None and window > 0:
+            ok &= (qpos[:, None] - kpos[None, :]) < window
+        s = s + jnp.where(ok, 0.0, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        msafe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - msafe[..., None])
+        alpha = jnp.exp(jnp.where(m <= NEG_INF / 2, NEG_INF, m) - msafe)
+        alpha = jnp.where(m <= NEG_INF / 2, 0.0, alpha)
+        l = alpha * l + jnp.sum(p, axis=-1)
+        acc = alpha[..., None] * acc + jnp.einsum(
+            "bkrqs,bskd->bkrqd", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kvh, rep, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, rep, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, rep, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(nchunk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def attend(q, k, v, cfg: ModelConfig, *, causal, window, scale,
+           softcap=0.0, offset=0):
+    if cfg.use_pallas and window is None and offset in (0, k.shape[1] - q.shape[1]):
+        return kops.flash_attention(q, k, v, causal=causal, scale=scale,
+                                    logit_softcap=softcap)
+    if cfg.attn_impl == "naive" or k.shape[1] <= cfg.attn_chunk:
+        return attend_naive(q, k, v, causal=causal, window=window,
+                            scale=scale, softcap=softcap, offset=offset)
+    return attend_chunked(q, k, v, causal=causal, window=window, scale=scale,
+                          softcap=softcap, offset=offset, chunk=cfg.attn_chunk)
+
+
+# ---------------------------------------------------------------------------
+# GQA mixer (global or sliding-window)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, theta):
+    dt = cdtype(cfg)
+    q = jnp.einsum("...d,dhk->...hk", x, p["wq"].astype(dt))
+    k = jnp.einsum("...d,dhk->...hk", x, p["wk"].astype(dt))
+    v = jnp.einsum("...d,dhk->...hk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), \
+            v + p["bv"].astype(dt)
+    if "q_norm" in p:
+        q = apply_norm(p["q_norm"], q, cfg)
+        k = apply_norm(p["k_norm"], k, cfg)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg: ModelConfig, *, window: int | None,
+                theta: float, positions=None):
+    """Full-sequence forward (training / prefill).  x: (B, S, d)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions, theta)
+    q = ashard(q, "batch", "seq", "heads", None)
+    k = ashard(k, "batch", "seq", "kv_heads", None)
+    v = ashard(v, "batch", "seq", "kv_heads", None)
+    scale = cfg.head_dim ** -0.5
+    o = attend(q, k, v, cfg, causal=cfg.causal, window=window, scale=scale,
+               softcap=cfg.logit_softcap)
+    o = ashard(o, "batch", "seq", "heads", None)
+    out = jnp.einsum("...hk,hkd->...d", o, p["wo"].astype(cdtype(cfg)))
+    return out, (k, v)
+
+
+def gqa_decode(p, x, cache, cfg: ModelConfig, *, window: int | None,
+               theta: float, pos):
+    """Single-token decode.  x: (B, 1, d); cache: dict(k, v) ring or linear
+    buffers (B, S_max, KV, D); pos: (B,) current write position."""
+    b = x.shape[0]
+    positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, theta)
+    k_cache, v_cache = cache["k"], cache["v"]
+    s_max = k_cache.shape[1]
+    if window is not None and window > 0 and s_max == window:
+        slot = (pos % window)[:, None]                 # ring buffer
+    else:
+        slot = pos[:, None]
+    bidx = jnp.arange(b)[:, None]
+    k_cache = k_cache.at[bidx, slot].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, slot].set(v_new.astype(v_cache.dtype))
+
+    scale = cfg.head_dim ** -0.5
+    kv_len = jnp.minimum(pos + 1, s_max)
+    # Ring buffers hold the most recent `window` positions — every live slot
+    # is attendable, so validity masking by kv_len suffices.
+    q1 = q[:, 0]                                       # (B, H, D)
+    if cfg.use_cp_decode and window is None:
+        # Context-parallel decode: KV stays sequence-sharded; three small
+        # psums replace GSPMD's full-cache all-gather (§Perf hillclimb).
+        from repro.distributed.context_parallel import cp_decode_attention
+        from repro.distributed.sharding import active_mesh
+        mesh = active_mesh()
+        if mesh is not None and "data" in mesh.axis_names:
+            rep = cfg.n_rep
+            kf = jnp.repeat(k_cache, rep, axis=2) if rep > 1 else k_cache
+            vf = jnp.repeat(v_cache, rep, axis=2) if rep > 1 else v_cache
+            o = cp_decode_attention(q1, kf, vf, kv_len, mesh=mesh,
+                                    axis="data", scale=scale)
+            o = o.astype(cdtype(cfg))[:, None]
+            out = jnp.einsum("...hk,hkd->...d", o,
+                             p["wo"].astype(cdtype(cfg)))
+            return out, {"k": k_cache, "v": v_cache}
+    rep = cfg.n_rep
+    kf = jnp.repeat(k_cache, rep, axis=2) if rep > 1 else k_cache
+    vf = jnp.repeat(v_cache, rep, axis=2) if rep > 1 else v_cache
+    logits = jnp.einsum("bhd,bshd->bhs", q1.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * scale
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    valid = jnp.arange(s_max)[None, None, :] < kv_len[:, None, None]
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhs,bshd->bhd", probs, vf.astype(jnp.float32))
+    o = o.astype(cdtype(cfg))[:, None]                 # (B, 1, H, D)
+    out = jnp.einsum("...hk,hkd->...d", o, p["wo"].astype(cdtype(cfg)))
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, s_max: int,
+                   window: int | None, dtype=jnp.bfloat16):
+    s = min(s_max, window) if (window and window > 0) else s_max
+    shape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLA mixer (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_forward(p, x, cfg: ModelConfig, positions=None):
+    """Training/prefill MLA.  Returns (out, latent_cache)."""
+    b, s, _ = x.shape
+    dt = cdtype(cfg)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    nope, rope_d, vd = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                        cfg.v_head_dim)
+
+    cq = apply_norm(p["q_norm"], jnp.einsum(
+        "...d,dr->...r", x, p["wq_a"].astype(dt)), cfg)
+    q = jnp.einsum("...r,rhk->...hk", cq, p["wq_b"].astype(dt))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("...d,dr->...r", x, p["wkv_a"].astype(dt))
+    c_kv, k_rope = kv_a[..., :cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
+    c_kv = apply_norm(p["kv_norm"], c_kv, cfg)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)
+
+    kv = jnp.einsum("...r,rhk->...hk", c_kv, p["wkv_b"].astype(dt))
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:-1], rope_d))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (nope + rope_d) ** -0.5
+    o = attend(q_full, k, v, cfg, causal=cfg.causal, window=None,
+               scale=scale, softcap=0.0)
+    out = jnp.einsum("...hk,hkd->...d", o, p["wo"].astype(dt))
+    return out, (c_kv, k_rope[..., 0, :])
+
+
+def mla_decode(p, x, cache, cfg: ModelConfig, *, pos):
+    """Absorbed-projection MLA decode: attention runs in the latent space so
+    the cache stays (S, kv_lora + rope) — the paper-style small 'operand
+    queue' (no per-step K/V reconstruction).  x: (B, 1, d)."""
+    b = x.shape[0]
+    dt = cdtype(cfg)
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    positions = pos[:, None]
+
+    cq = apply_norm(p["q_norm"], jnp.einsum(
+        "...d,dr->...r", x, p["wq_a"].astype(dt)), cfg)
+    q = jnp.einsum("...r,rhk->...hk", cq, p["wq_b"].astype(dt))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)[:, 0]   # (B,H,r)
+
+    kv_a = jnp.einsum("...d,dr->...r", x, p["wkv_a"].astype(dt))
+    c_new, kr_new = kv_a[..., :cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
+    c_new = apply_norm(p["kv_norm"], c_new, cfg)
+    kr_new = apply_rope(kr_new[..., None, :], positions, cfg.rope_theta)
+
+    ckv, krope = cache["ckv"], cache["krope"]
+    s_max = ckv.shape[1]
+    bidx = jnp.arange(b)[:, None]
+    slot = pos[:, None]
+    ckv = ckv.at[bidx, slot].set(c_new.astype(ckv.dtype))
+    krope = krope.at[bidx, slot].set(kr_new[:, :, 0].astype(krope.dtype))
+
+    # Absorb W_kv_b into the query / output sides.
+    wkv_b = p["wkv_b"].astype(dt)                      # (r, H, nope+v)
+    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)[:, 0]   # (B, H, r)
+
+    s_nope = jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                        ckv.astype(jnp.float32))
+    s_rope = jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                        krope.astype(jnp.float32))
+    scale = (nope + rope_d) ** -0.5
+    logits = (s_nope + s_rope) * scale
+    kv_len = jnp.minimum(pos + 1, s_max)
+    valid = jnp.arange(s_max)[None, None, :] < kv_len[:, None, None]
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhk->bhk", o_lat.astype(dt), w_uv)     # (B, H, v)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(dt))[:, None]
+    return out, {"ckv": ckv, "krope": krope}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, s_max: int,
+                   dtype=jnp.bfloat16):
+    return {"ckv": jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, s_max, cfg.qk_rope_head_dim), dtype)}

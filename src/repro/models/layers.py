@@ -1,0 +1,143 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings (pure-pytree params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ashard
+from repro.kernels import ops as kops
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _normal(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# --- norms -------------------------------------------------------------------
+
+def init_norm(key, cfg: ModelConfig, dim: int | None = None):
+    dim = dim or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((dim,), jnp.float32),
+                "bias": jnp.zeros((dim,), jnp.float32)}
+    return {"scale": jnp.zeros((dim,), jnp.float32)}      # (gemma)rmsnorm
+
+
+def apply_norm(p, x, cfg: ModelConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        norm = xf * jax.lax.rsqrt(var + eps)
+        out = norm * (1.0 + p["scale"])    # zero-init scale == weight 1
+    return out.astype(x.dtype)
+
+
+# --- rotary ------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) or (..., H, D) with matching positions (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    angles = jnp.expand_dims(angles, axis=-2)          # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- activations -------------------------------------------------------------
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+# --- MLP / GLU ---------------------------------------------------------------
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int | None = None):
+    d, dff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    if cfg.ffn == "mlp":                                 # plain 2-matrix MLP
+        p = {"w_in": _normal(ks[0], (d, dff), dt),
+             "w_out": _normal(ks[1], (dff, d), dt)}
+        if cfg.mlp_bias:
+            p["b_in"] = jnp.zeros((dff,), dt)
+            p["b_out"] = jnp.zeros((d,), dt)
+        return p
+    return {"w_gate": _normal(ks[0], (d, dff), dt),
+            "w_in": _normal(ks[1], (d, dff), dt),
+            "w_out": _normal(ks[2], (dff, d), dt)}
+
+
+def apply_ffn(p, x, cfg: ModelConfig):
+    act = activation(cfg.act)
+    dt = cdtype(cfg)
+    x = x.astype(dt)
+    if "w_gate" in p:                                   # GLU
+        gate = act(jnp.einsum("...d,df->...f", x, p["w_gate"].astype(dt)))
+        up = jnp.einsum("...d,df->...f", x, p["w_in"].astype(dt))
+        h = ashard(gate * up, "batch", "seq", "ff")
+        return jnp.einsum("...f,fd->...d", h, p["w_out"].astype(dt))
+    h = jnp.einsum("...d,df->...f", x, p["w_in"].astype(dt))
+    if "b_in" in p:
+        h = h + p["b_in"].astype(dt)
+    h = ashard(act(h), "batch", "seq", "ff")
+    out = jnp.einsum("...f,fd->...d", h, p["w_out"].astype(dt))
+    if "b_out" in p:
+        out = out + p["b_out"].astype(dt)
+    return out
+
+
+# --- embeddings --------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig):
+    return {"embed_table": _normal(key, (cfg.vocab_size, cfg.d_model),
+                                   pdtype(cfg), scale=0.02)}
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig):
+    x = jnp.take(p["embed_table"].astype(cdtype(cfg)), tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdtype(cfg))
+    return x
+
+
+def init_lm_head(key, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    return {"lm_head": _normal(key, (cfg.d_model, cfg.vocab_size),
+                               pdtype(cfg))}
+
+
+def lm_logits(params, x, cfg: ModelConfig):
+    """Final projection in fp32 (CE numerics)."""
+    xf = x.astype(jnp.float32)
+    if cfg.tie_embeddings:
+        w = params["embedding"]["embed_table"].astype(jnp.float32).T
+    else:
+        w = params["head"]["lm_head"].astype(jnp.float32)
+    logits = jnp.einsum("...d,dv->...v", xf, w)
+    if cfg.final_logit_softcap > 0:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return ashard(logits, "batch", "seq", "vocab")

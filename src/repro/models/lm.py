@@ -1,0 +1,40 @@
+"""LM losses and the train-step forward."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import logits_fn
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: jax.Array | None = None,
+                  z_loss: float = 1e-4) -> tuple[jax.Array, dict]:
+    """Token-level CE in fp32 with optional z-loss regularizer."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss > 0:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((jnp.argmax(logits, -1) == targets) * mask).sum() / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": denom}
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """batch: tokens/frames (+ img_embeds), targets, optional mask."""
+    logits, _ = logits_fn(params, batch, cfg, mode="train")
+    mask = batch.get("mask")
+    if cfg.modality == "vlm" and mask is None:
+        # No loss on the image prefix.
+        b, s = batch["targets"].shape
+        mask = (jnp.arange(s)[None, :] >= cfg.n_img_tokens).astype(
+            jnp.float32) * jnp.ones((b, 1), jnp.float32)
+    loss, metrics = cross_entropy(logits, batch["targets"], mask)
+    return loss, metrics

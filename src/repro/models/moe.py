@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based sorted dispatch.
+
+Expert-parallel design: expert weight tensors carry a leading `expert`
+logical axis (sharded over the mesh "model" axis).  Dispatch gathers each
+expert's tokens into an (E, C, d) buffer — the all-to-all this induces under
+GSPMD is the EP collective accounted in §Roofline.
+
+The dispatch is the gather/scatter analogue of the paper's descriptor-driven
+memory front end: expert assignments are "address descriptors", and sorting
+tokens by expert converts scattered access into the streaming pattern the
+hardware (MXU batched GEMM) wants.
+
+Token overflow beyond capacity C = ceil(T*k/E * capacity_factor) is dropped
+(GShard-style), with the router's combine weights renormalized over
+surviving assignments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ashard
+from repro.models.layers import _normal, activation, cdtype, pdtype
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    dt = pdtype(cfg)
+    p = {
+        "router": _normal(ks[0], (d, e), jnp.float32),
+        "experts": {
+            "w_gate": _normal(ks[1], (e, d, f), dt),
+            "w_in": _normal(ks[2], (e, d, f), dt),
+            "w_out": _normal(ks[3], (e, f, d), dt),
+        },
+    }
+    if cfg.n_shared_experts:
+        from repro.models.layers import init_ffn
+        p["shared"] = init_ffn(ks[4], cfg,
+                               d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(tokens * cfg.moe_top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)          # round up to 8 for TPU tiling
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (B, S, d).  Differentiable sorted-capacity dispatch."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.moe_top_k
+    cap = _capacity(t, cfg)
+    dt = cdtype(cfg)
+    xf = x.reshape(t, d)
+
+    # --- routing ---------------------------------------------------------
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, k)          # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # --- sorted dispatch ---------------------------------------------------
+    flat_expert = expert_idx.reshape(-1)                # (T*k,)
+    order = jnp.argsort(flat_expert)                    # stable
+    sorted_expert = flat_expert[order]
+    # Position of each assignment within its expert's group.
+    ones = jnp.ones_like(sorted_expert)
+    pos_in_expert = jnp.cumsum(ones) - 1
+    seg_start = jnp.searchsorted(sorted_expert, jnp.arange(e))
+    pos_in_expert = pos_in_expert - seg_start[sorted_expert]
+    keep = pos_in_expert < cap
+    slot = sorted_expert * cap + pos_in_expert          # (T*k,) in [0, E*C)
+    slot = jnp.where(keep, slot, e * cap)               # overflow -> dropped
+
+    token_of = order // k                               # source token index
+    # Scatter token vectors into the (E*C + 1, d) dispatch buffer.
+    buf = jnp.zeros((e * cap + 1, d), dt)
+    buf = buf.at[slot].set(xf[token_of].astype(dt), mode="drop")
+    xe = buf[: e * cap].reshape(e, cap, d)
+    xe = ashard(xe, "expert", None, None)
+
+    # --- expert computation (batched over the expert axis) ----------------
+    act = activation(cfg.act)
+    we = p["experts"]
+    g = act(jnp.einsum("ecd,edf->ecf", xe, we["w_gate"].astype(dt)))
+    u = jnp.einsum("ecd,edf->ecf", xe, we["w_in"].astype(dt))
+    ye = jnp.einsum("ecf,efd->ecd", g * u, we["w_out"].astype(dt))
+    ye = ashard(ye, "expert", None, None)
+
+    # --- combine -----------------------------------------------------------
+    yflat = ye.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None], yflat[jnp.clip(slot, 0, e * cap - 1)],
+                         0.0)                            # (T*k, d)
+    weights = gate.reshape(-1)[order] * keep             # dropped -> 0
+    out = jnp.zeros((t, d), dt).at[token_of].add(
+        gathered * weights[:, None].astype(dt))
+    out = out.reshape(b, s, d)
+
+    if "shared" in p:
+        from repro.models.layers import apply_ffn
+        out = out + apply_ffn(p["shared"], x, cfg)
+    return out
+
+
+def router_stats(p, x, cfg: ModelConfig) -> dict:
+    """Load-balance diagnostics (tests + serving metrics)."""
+    b, s, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+    counts = jnp.zeros((cfg.n_experts,), jnp.int32).at[idx.reshape(-1)].add(1)
+    return {"expert_counts": counts,
+            "max_prob": probs.max(),
+            "entropy": -(probs * jnp.log(probs + 1e-9)).sum(-1).mean()}

@@ -1,0 +1,43 @@
+"""Modality frontend stubs (per the brief: [audio]/[vlm] entries specify the
+transformer BACKBONE only; the frontend supplies precomputed embeddings).
+
+These produce the *input batches* — deterministic synthetic frame/patch
+embeddings shaped exactly as the real frontends (HuBERT conv stem / CLIP
+vision tower) would emit — so input_specs() and the data pipeline share one
+source of truth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def audio_frames(key, batch: int, seq: int, cfg: ModelConfig):
+    """Stub for the HuBERT 7-layer conv feature encoder output:
+    (B, T_frames, d_model) frame embeddings at 50 Hz."""
+    return 0.02 * jax.random.normal(key, (batch, seq, cfg.d_model),
+                                    jnp.float32)
+
+
+def vision_patches(key, batch: int, cfg: ModelConfig):
+    """Stub for the CLIP-ViT patch tower output projected to d_model:
+    (B, n_img_tokens, d_model)."""
+    return 0.02 * jax.random.normal(key, (batch, cfg.n_img_tokens,
+                                          cfg.d_model), jnp.float32)
+
+
+def make_batch(key, cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """A full synthetic input batch for any modality."""
+    ks = jax.random.split(key, 3)
+    tokens = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size)
+    targets = jnp.roll(tokens, -1, axis=1)
+    out = {"targets": targets}
+    if cfg.modality == "audio":
+        out["frames"] = audio_frames(ks[1], batch, seq, cfg)
+    else:
+        out["tokens"] = tokens
+        if cfg.modality == "vlm":
+            out["img_embeds"] = vision_patches(ks[2], batch, cfg)
+    return out

@@ -1,0 +1,104 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent mixer.
+
+The RG-LRU linear recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t *
+x_t) is chaining in its purest form: each element group's state is the
+chained operand of the next.  Training uses an associative scan (parallel
+prologue/steady/tail — log-depth fill, then one group per step); decode
+carries the (B, W) state, a cache smaller than any KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _normal, cdtype, pdtype
+
+_C = 8.0          # temperature on the recurrence gate (Griffin)
+_MAX_A = -8.0     # a_param init so a ~ sigmoid in a stable range
+
+
+def init_rglru_block(key, cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 6)
+    dt = pdtype(cfg)
+    return {
+        "in_proj": _normal(ks[0], (d, w), dt),          # recurrence branch
+        "gate_proj": _normal(ks[1], (d, w), dt),        # gelu gate branch
+        "conv1d": _normal(ks[2], (cfg.conv_kernel, w), dt, scale=0.5),
+        "conv_bias": jnp.zeros((w,), dt),
+        "w_rgate": _normal(ks[3], (w, w), dt),          # r_t (recurrence)
+        "w_igate": _normal(ks[4], (w, w), dt),          # i_t (input)
+        "a_param": jnp.full((w,), _MAX_A, jnp.float32),
+        "out_proj": _normal(ks[5], (w, d), dt),
+    }
+
+
+def _rglru_scan(x, r, i, a_param):
+    """x/r/i: (B, L, W) float32.  Associative scan over (a, b) pairs."""
+    log_a = _C * jax.nn.log_sigmoid(a_param) * jax.nn.sigmoid(r)
+    a = jnp.exp(log_a)                                   # (B, L, W)
+    gated = x * jax.nn.sigmoid(i)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return b_s, a_s          # h_t (with h_0 = 0), cumulative decay
+
+
+def rglru_forward(p, xin, cfg: ModelConfig):
+    """xin: (B, S, d) -> (out, cache)."""
+    dt = cdtype(cfg)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", xin,
+                                  p["gate_proj"].astype(dt)))
+    x = jnp.einsum("bsd,dw->bsw", xin, p["in_proj"].astype(dt))
+    k = p["conv1d"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    l = x.shape[1]
+    x = sum(xp[:, j:j + l] * p["conv1d"][j].astype(dt) for j in range(k))
+    x = x + p["conv_bias"].astype(dt)
+    conv_state = xp[:, -(k - 1):]
+
+    xf = x.astype(jnp.float32)
+    r = jnp.einsum("bsw,wv->bsv", xf, p["w_rgate"].astype(jnp.float32))
+    i = jnp.einsum("bsw,wv->bsv", xf, p["w_igate"].astype(jnp.float32))
+    h, _ = _rglru_scan(xf, r, i, p["a_param"])
+    y = (h.astype(dt) * gate)
+    out = jnp.einsum("bsw,wd->bsd", y, p["out_proj"].astype(dt))
+    cache = {"rnn": h[:, -1], "conv": conv_state}
+    return out, cache
+
+
+def rglru_decode(p, xin, cache, cfg: ModelConfig):
+    """xin: (B, 1, d); cache {rnn: (B, W) f32, conv: (B, K-1, W)}."""
+    dt = cdtype(cfg)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", xin,
+                                  p["gate_proj"].astype(dt)))
+    x = jnp.einsum("bsd,dw->bsw", xin, p["in_proj"].astype(dt))
+    k = p["conv1d"].shape[0]
+    xp = jnp.concatenate([cache["conv"].astype(dt), x], axis=1)  # (B, K, W)
+    x1 = sum(xp[:, j:j + 1] * p["conv1d"][j].astype(dt) for j in range(k))
+    x1 = x1 + p["conv_bias"].astype(dt)
+    conv_state = xp[:, 1:]
+
+    xf = x1[:, 0].astype(jnp.float32)                   # (B, W)
+    r = xf @ p["w_rgate"].astype(jnp.float32)
+    i = xf @ p["w_igate"].astype(jnp.float32)
+    log_a = _C * jax.nn.log_sigmoid(p["a_param"]) * jax.nn.sigmoid(r)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (xf * jax.nn.sigmoid(i))
+    h = a * cache["rnn"] + b
+    y = (h[:, None].astype(dt) * gate)
+    out = jnp.einsum("bsw,wd->bsd", y, p["out_proj"].astype(dt))
+    return out, {"rnn": h, "conv": conv_state}
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return {"rnn": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.rnn_width),
+                              dtype)}

@@ -1,0 +1,192 @@
+"""Mamba-2 (SSD) mixer block — jnp chunked implementation + decode step.
+
+The chunked algorithm is the paper's chaining model made literal: the
+sequence is strip-mined into chunks (element groups); each chunk's interior
+is dense MXU work (steady state) and a small (H, N, P) state chains across
+chunks (the forwarded operand).  ``cfg.use_pallas=True`` routes the scan to
+kernels/ssd.py on TPU; the jnp twin below is GSPMD-shardable and is what the
+dry-run lowers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ashard
+from repro.kernels import ops as kops
+from repro.models.layers import _normal, apply_norm, cdtype, init_norm, pdtype
+
+
+def init_ssd_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 6)
+    dt = pdtype(cfg)
+    return {
+        # order: [z (gate) | x | B | C | dt]
+        "in_proj": _normal(ks[0], (d, 2 * di + 2 * g * n + h), dt),
+        "conv1d": _normal(ks[1], (cfg.conv_kernel, conv_dim), dt, scale=0.5),
+        "conv_bias": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log)
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),   # softplus bias
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": init_norm(ks[3], cfg, di),
+        "out_proj": _normal(ks[4], (di, d), dt),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, L, C); w: (K, C) depthwise.  Returns (y, new_state).
+
+    state: (B, K-1, C) trailing context for decode continuity."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    # Depthwise causal conv as a sum of shifted scalings (K is tiny: 4).
+    l = x.shape[1]
+    y = sum(xp[:, i:i + l] * w[i] for i in range(k))
+    y = y + b
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return y, new_state
+
+
+def _ssd_chunked_jnp(x, dt, a, b, c, chunk: int):
+    """Chunked SSD scan (same math as kernels/ssd.py, GSPMD-friendly).
+
+    x: (B, L, H, P); dt: (B, L, H); a: (H,); b/c: (B, L, G, N).
+    Returns (y: (B, L, H, P), h_final: (B, H, N, P))."""
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lp = l + pad
+    nch = lp // chunk
+    xe = ashard(x.reshape(bsz, nch, chunk, h, p),
+                "batch", None, None, "heads", None)
+    dte = ashard(dt.reshape(bsz, nch, chunk, h), "batch", None, None, "heads")
+    be = ashard(jnp.repeat(b, rep, axis=2).reshape(bsz, nch, chunk, h, n),
+                "batch", None, None, "heads", None)
+    ce = ashard(jnp.repeat(c, rep, axis=2).reshape(bsz, nch, chunk, h, n),
+                "batch", None, None, "heads", None)
+
+    adt = a[None, None, None, :] * dte                  # (B, nc, T, H)
+    cum = jnp.cumsum(adt, axis=2)
+    total = cum[:, :, -1]                               # (B, nc, H)
+    dtx = dte[..., None] * xe                           # (B, nc, T, H, P)
+
+    # Intra-chunk (dense, causal-decay masked).
+    lmask = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    lmask = jnp.where(tri[None, None, :, :, None], lmask, 0.0)
+    scores = jnp.einsum("bgthn,bgshn->bgtsh", ce, be)
+    y_intra = jnp.einsum("bgtsh,bgshp->bgthp", scores * lmask, dtx)
+
+    # Chunk summaries -> cross-chunk scan of the (H, N, P) state.
+    decay_end = jnp.exp(total[:, :, None, :] - cum)     # (B, nc, T, H)
+    summary = jnp.einsum("bgthn,bgthp->bghnp", be * decay_end[..., None], dtx)
+
+    def scan_fn(hprev, inp):
+        summ, tot = inp                                 # (B,H,N,P), (B,H)
+        hnew = jnp.exp(tot)[..., None, None] * hprev + summ
+        return hnew, hprev
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    hT, hprevs = jax.lax.scan(
+        scan_fn, h0,
+        (summary.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         total.transpose(1, 0, 2).astype(jnp.float32)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)            # (B, nc, H, N, P)
+
+    # Inter-chunk contribution.
+    y_inter = jnp.einsum("bgthn,bghnp->bgthp",
+                         ce * jnp.exp(cum)[..., None], hprevs)
+    y = (y_intra + y_inter).reshape(bsz, lp, h, p)[:, :l]
+    return y.astype(x.dtype), hT
+
+
+def ssd_forward(p, xin, cfg: ModelConfig):
+    """Full-sequence forward.  xin: (B, S, d) -> (out, cache)."""
+    bsz, s, _ = xin.shape
+    dt_ = cdtype(cfg)
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    hp = cfg.ssm_headdim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, p["in_proj"].astype(dt_))
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv1d"].astype(dt_),
+                                   p["conv_bias"].astype(dt_))
+    xbc = jax.nn.silu(xbc)
+    x, b, c = jnp.split(xbc, [di, di + g * n], axis=-1)
+    x = ashard(x.reshape(bsz, s, h, hp), "batch", "seq", "heads", None)
+    b = b.reshape(bsz, s, g, n)
+    c = c.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    if cfg.use_pallas:
+        y, hT = kops.ssd_batched(x, dt, a, b, c, chunk=cfg.ssm_chunk)
+        hT = jnp.asarray(hT)
+    else:
+        y, hT = _ssd_chunked_jnp(x, dt, a, b, c, cfg.ssm_chunk)
+    y = y + p["d_skip"][None, None, :, None] * x        # D skip connection
+    y = y.reshape(bsz, s, di)
+    y = apply_norm(p["out_norm"], y, cfg) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y.astype(dt_), p["out_proj"].astype(dt_))
+    cache = {"conv": conv_state, "ssm": hT.astype(jnp.float32)}
+    return out, cache
+
+
+def ssd_decode(p, xin, cache, cfg: ModelConfig):
+    """Single-token decode.  xin: (B, 1, d); cache {conv: (B, K-1, C),
+    ssm: (B, H, N, P)}."""
+    bsz = xin.shape[0]
+    dt_ = cdtype(cfg)
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    hp = cfg.ssm_headdim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, p["in_proj"].astype(dt_))
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv1d"].astype(dt_),
+                                   p["conv_bias"].astype(dt_),
+                                   state=cache["conv"])
+    xbc = jax.nn.silu(xbc)
+    x, b, c = jnp.split(xbc[:, 0], [di, di + g * n], axis=-1)
+    x = x.reshape(bsz, h, hp)
+    b = b.reshape(bsz, g, n)
+    c = c.reshape(bsz, g, n)
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=1)                     # (B, H, N)
+    ch = jnp.repeat(c, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    hstate = cache["ssm"]                               # (B, H, N, P)
+    decay = jnp.exp(a * dt)                             # (B, H)
+    dbx = jnp.einsum("bhn,bhp,bh->bhnp", bh.astype(jnp.float32),
+                     x.astype(jnp.float32), dt)
+    hstate = decay[..., None, None] * hstate + dbx
+    y = jnp.einsum("bhnp,bhn->bhp", hstate, ch.astype(jnp.float32))
+    y = y + p["d_skip"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(bsz, 1, di).astype(dt_)
+    y = apply_norm(p["out_norm"], y, cfg) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y.astype(dt_), p["out_proj"].astype(dt_))
+    return out, {"conv": conv_state, "ssm": hstate}
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_state,
+                          cfg.ssm_headdim), jnp.float32),
+    }

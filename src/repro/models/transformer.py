@@ -1,0 +1,297 @@
+"""Composable transformer stack: pattern-cycled blocks, scan-over-layers.
+
+Layer patterns (cfg.pattern) are cycled across the depth — e.g. gemma3's
+("local",)*5 + ("attn",) 5:1 pattern, griffin's ("rglru", "rglru", "local")
+1:2, deepseek's all-("mla",).  The stack scans over *pattern repetitions*
+(each scan step applies one full pattern) so the compiled HLO contains each
+distinct block body exactly once — essential for 40-62 layer models at
+512-device SPMD compile time.
+
+Leading layers that differ (deepseek-v2's first dense-FFN layer) are
+unrolled before the scan; remainder layers (depth % pattern length) are
+unrolled after it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ashard
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_ffn, apply_norm, cdtype,
+                                 embed_tokens, init_embedding, init_ffn,
+                                 init_lm_head, init_norm, lm_logits)
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+def _theta_for(cfg: ModelConfig, kind: str) -> float:
+    if kind == "attn" and cfg.rope_theta_global is not None:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+def _window_for(cfg: ModelConfig, kind: str) -> int | None:
+    return cfg.sliding_window if kind == "local" else None
+
+
+def init_block(key, cfg: ModelConfig, kind: str, ffn_kind: str):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": init_norm(ks[0], cfg)}
+    if kind in ("attn", "local"):
+        p["mixer"] = attn.init_attention(ks[1], cfg)
+    elif kind == "mla":
+        p["mixer"] = attn.init_mla(ks[1], cfg)
+    elif kind == "ssd":
+        p["mixer"] = ssm_mod.init_ssd_block(ks[1], cfg)
+    elif kind == "rglru":
+        p["mixer"] = rglru_mod.init_rglru_block(ks[1], cfg)
+    else:
+        raise ValueError(kind)
+    if ffn_kind != "none":
+        p["norm2"] = init_norm(ks[2], cfg)
+        if ffn_kind == "moe":
+            p["ffn"] = moe_mod.init_moe(ks[3], cfg)
+        else:
+            p["ffn"] = init_ffn(ks[3], cfg)
+    return p
+
+
+def apply_block(p, x, cfg: ModelConfig, kind: str, ffn_kind: str, *,
+                mode: str = "train", cache=None, pos=None, positions=None):
+    """Returns (x, new_cache).  mode: train | prefill | decode."""
+    h = apply_norm(p["norm1"], x, cfg)
+    new_cache = None
+    if kind in ("attn", "local"):
+        window = _window_for(cfg, kind)
+        theta = _theta_for(cfg, kind)
+        if mode == "decode":
+            out, new_cache = attn.gqa_decode(p["mixer"], h, cache, cfg,
+                                             window=window, theta=theta,
+                                             pos=pos)
+        else:
+            out, kv = attn.gqa_forward(p["mixer"], h, cfg, window=window,
+                                       theta=theta, positions=positions)
+            new_cache = {"k": kv[0], "v": kv[1]} if mode == "prefill" else None
+    elif kind == "mla":
+        if mode == "decode":
+            out, new_cache = attn.mla_decode(p["mixer"], h, cache, cfg,
+                                             pos=pos)
+        else:
+            out, lat = attn.mla_forward(p["mixer"], h, cfg,
+                                        positions=positions)
+            new_cache = ({"ckv": lat[0], "krope": lat[1]}
+                         if mode == "prefill" else None)
+    elif kind == "ssd":
+        if mode == "decode":
+            out, new_cache = ssm_mod.ssd_decode(p["mixer"], h, cache, cfg)
+        else:
+            out, c = ssm_mod.ssd_forward(p["mixer"], h, cfg)
+            new_cache = c if mode == "prefill" else None
+    elif kind == "rglru":
+        if mode == "decode":
+            out, new_cache = rglru_mod.rglru_decode(p["mixer"], h, cache, cfg)
+        else:
+            out, c = rglru_mod.rglru_forward(p["mixer"], h, cfg)
+            new_cache = c if mode == "prefill" else None
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if "ffn" in p:
+        h = apply_norm(p["norm2"], x, cfg)
+        if ffn_kind == "moe":
+            x = x + moe_mod.apply_moe(p["ffn"], h, cfg)
+        else:
+            x = x + apply_ffn(p["ffn"], h, cfg)
+    return ashard(x, "batch", "seq", "act_embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stack layout
+# ---------------------------------------------------------------------------
+
+def stack_layout(cfg: ModelConfig):
+    """(lead kinds, scan repetitions, tail kinds)."""
+    plen = len(cfg.pattern)
+    lead = [(cfg.mixer_at(i), cfg.ffn_at(i))
+            for i in range(cfg.first_dense_layers)]
+    rest = cfg.n_layers - len(lead)
+    n_rep = rest // plen if cfg.scan_layers else 0
+    tail_start = len(lead) + n_rep * plen
+    tail = [(cfg.mixer_at(i), cfg.ffn_at(i))
+            for i in range(tail_start, cfg.n_layers)]
+    scan_kinds = [(cfg.mixer_at(len(lead) + j), cfg.ffn_at(len(lead) + j))
+                  for j in range(plen)] if n_rep else []
+    return lead, n_rep, scan_kinds, tail
+
+
+def init_model(key, cfg: ModelConfig):
+    lead, n_rep, scan_kinds, tail = stack_layout(cfg)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    if cfg.modality != "audio":
+        params["embedding"] = init_embedding(keys[0], cfg)
+    else:
+        params["embedding"] = init_embedding(keys[0], cfg)  # output units
+    params["lead"] = {
+        str(i): init_block(jax.random.fold_in(keys[1], i), cfg, k, f)
+        for i, (k, f) in enumerate(lead)}
+    if n_rep:
+        def init_rep(k):
+            sub = jax.random.split(k, len(scan_kinds))
+            return {str(pos): init_block(sub[pos], cfg, kind, f)
+                    for pos, (kind, f) in enumerate(scan_kinds)}
+        params["scan"] = jax.vmap(init_rep)(jax.random.split(keys[2], n_rep))
+    params["tail"] = {
+        str(i): init_block(jax.random.fold_in(keys[3], i), cfg, k, f)
+        for i, (k, f) in enumerate(tail)}
+    params["final_norm"] = init_norm(keys[4], cfg)
+    params["head"] = init_lm_head(keys[5], cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    if cfg.modality == "audio":
+        x = batch["frames"].astype(cdtype(cfg))
+    else:
+        x = embed_tokens(params["embedding"], batch["tokens"], cfg)
+        if cfg.modality == "vlm" and "img_embeds" in batch:
+            n_img = batch["img_embeds"].shape[1]
+            img = batch["img_embeds"].astype(x.dtype)
+            x = jnp.concatenate([img, x[:, n_img:]], axis=1)
+    return ashard(x, "batch", "seq", "act_embed")
+
+
+def forward(params, batch, cfg: ModelConfig, *, mode: str = "train"):
+    """Returns (hidden, caches) — caches is None unless mode == 'prefill'."""
+    x = _embed_inputs(params, batch, cfg)
+    lead, n_rep, scan_kinds, tail = stack_layout(cfg)
+    collect = mode == "prefill"
+    caches: dict[str, Any] = {"lead": {}, "scan": None, "tail": {}}
+
+    for i, (kind, f) in enumerate(lead):
+        x, c = apply_block(params["lead"][str(i)], x, cfg, kind, f, mode=mode)
+        if collect:
+            caches["lead"][str(i)] = c
+
+    if n_rep:
+        def body(carry, rep_params):
+            h = carry
+            cs = {}
+            for pos, (kind, f) in enumerate(scan_kinds):
+                h, c = apply_block(rep_params[str(pos)], h, cfg, kind, f,
+                                   mode=mode)
+                cs[str(pos)] = c
+            return h, (cs if collect else 0)
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, scan_caches = jax.lax.scan(body, x, params["scan"])
+        if collect:
+            caches["scan"] = scan_caches
+
+    for i, (kind, f) in enumerate(tail):
+        x, c = apply_block(params["tail"][str(i)], x, cfg, kind, f, mode=mode)
+        if collect:
+            caches["tail"][str(i)] = c
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, (caches if collect else None)
+
+
+def logits_fn(params, batch, cfg: ModelConfig, *, mode: str = "train"):
+    hidden, caches = forward(params, batch, cfg, mode=mode)
+    return lm_logits(params, hidden, cfg), caches
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """One decode step.  tokens: (B,) int32; pos: (B,) positions.
+    Returns (logits (B, V), new_cache)."""
+    batch = {"tokens": tokens[:, None]}
+    x = embed_tokens(params["embedding"], batch["tokens"], cfg)
+    x = ashard(x, "batch", None, "act_embed")
+    lead, n_rep, scan_kinds, tail = stack_layout(cfg)
+    new_cache: dict[str, Any] = {"lead": {}, "scan": None, "tail": {}}
+
+    for i, (kind, f) in enumerate(lead):
+        x, c = apply_block(params["lead"][str(i)], x, cfg, kind, f,
+                           mode="decode", cache=cache["lead"][str(i)],
+                           pos=pos)
+        new_cache["lead"][str(i)] = c
+
+    if n_rep:
+        def body(carry, inp):
+            h = carry
+            rep_params, rep_cache = inp
+            cs = {}
+            for p_, (kind, f) in enumerate(scan_kinds):
+                h, c = apply_block(rep_params[str(p_)], h, cfg, kind, f,
+                                   mode="decode", cache=rep_cache[str(p_)],
+                                   pos=pos)
+                cs[str(p_)] = c
+            return h, cs
+
+        x, scan_caches = jax.lax.scan(body, x, (params["scan"],
+                                                cache["scan"]))
+        new_cache["scan"] = scan_caches
+
+    for i, (kind, f) in enumerate(tail):
+        x, c = apply_block(params["tail"][str(i)], x, cfg, kind, f,
+                           mode="decode", cache=cache["tail"][str(i)],
+                           pos=pos)
+        new_cache["tail"][str(i)] = c
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params, x, cfg)[:, 0]
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16):
+    """Zeroed decode caches matching the stack layout."""
+    lead, n_rep, scan_kinds, tail = stack_layout(cfg)
+
+    def one(kind):
+        if kind in ("attn",):
+            return attn.init_gqa_cache(cfg, batch, s_max, None, dtype)
+        if kind == "local":
+            return attn.init_gqa_cache(cfg, batch, s_max,
+                                       cfg.sliding_window, dtype)
+        if kind == "mla":
+            return attn.init_mla_cache(cfg, batch, s_max, dtype)
+        if kind == "ssd":
+            return ssm_mod.init_ssd_cache(cfg, batch, dtype)
+        if kind == "rglru":
+            return rglru_mod.init_rglru_cache(cfg, batch, dtype)
+        raise ValueError(kind)
+
+    cache: dict[str, Any] = {
+        "lead": {str(i): one(k) for i, (k, _) in enumerate(lead)},
+        "scan": None,
+        "tail": {str(i): one(k) for i, (k, _) in enumerate(tail)},
+    }
+    if n_rep:
+        def stack(c):
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_rep, *a.shape)).copy(), c)
+        cache["scan"] = {str(p): stack(one(k))
+                         for p, (k, _) in enumerate(scan_kinds)}
+    return cache

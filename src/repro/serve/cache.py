@@ -1,0 +1,66 @@
+"""Decode-cache construction: convert prefill caches into fixed-size decode
+buffers (linear for global attention, ring for sliding windows, state
+tensors for SSD/RG-LRU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import init_cache, stack_layout
+
+
+def _place_linear(buf, seq):
+    """buf: (B, S_max, ...); seq: (B, S_p, ...) -> write at [0, S_p)."""
+    sp = seq.shape[1]
+    return buf.at[:, :sp].set(seq.astype(buf.dtype))
+
+
+def _place_ring(buf, seq, window: int):
+    """Ring buffer: position p lives at slot p % window."""
+    sp = seq.shape[1]
+    keep = min(sp, window)
+    tail = seq[:, sp - keep:]
+    pos = jnp.arange(sp - keep, sp) % window
+    return buf.at[:, pos].set(tail.astype(buf.dtype))
+
+
+def _convert_one(kind: str, cfg: ModelConfig, prefill_cache, buf):
+    if kind == "attn":
+        return {"k": _place_linear(buf["k"], prefill_cache["k"]),
+                "v": _place_linear(buf["v"], prefill_cache["v"])}
+    if kind == "local":
+        w = cfg.sliding_window
+        return {"k": _place_ring(buf["k"], prefill_cache["k"], w),
+                "v": _place_ring(buf["v"], prefill_cache["v"], w)}
+    if kind == "mla":
+        return {"ckv": _place_linear(buf["ckv"], prefill_cache["ckv"]),
+                "krope": _place_linear(buf["krope"], prefill_cache["krope"])}
+    if kind in ("ssd", "rglru"):
+        return jax.tree.map(lambda b, p: p.astype(b.dtype), buf,
+                            prefill_cache)
+    raise ValueError(kind)
+
+
+def build_decode_cache(cfg: ModelConfig, prefill_caches, batch: int,
+                       s_max: int, dtype=jnp.bfloat16):
+    """Map the stack-structured prefill caches onto zeroed decode buffers."""
+    buffers = init_cache(cfg, batch, s_max, dtype)
+    lead, n_rep, scan_kinds, tail = stack_layout(cfg)
+
+    out = {"lead": {}, "scan": None, "tail": {}}
+    for i, (kind, _) in enumerate(lead):
+        out["lead"][str(i)] = _convert_one(
+            kind, cfg, prefill_caches["lead"][str(i)],
+            buffers["lead"][str(i)])
+    if n_rep:
+        out["scan"] = {}
+        for p, (kind, _) in enumerate(scan_kinds):
+            out["scan"][str(p)] = jax.vmap(
+                lambda pc, b, kind=kind: _convert_one(kind, cfg, pc, b)
+            )(prefill_caches["scan"][str(p)], buffers["scan"][str(p)])
+    for i, (kind, _) in enumerate(tail):
+        out["tail"][str(i)] = _convert_one(
+            kind, cfg, prefill_caches["tail"][str(i)],
+            buffers["tail"][str(i)])
+    return out

@@ -1,0 +1,72 @@
+"""Serving engine: prefill + batched decode.
+
+The decode loop applies the paper's C-optimization at the serving layer:
+the next step's dispatch never waits on host-side postprocessing of the
+previous step (async dispatch — dependences released at the earliest
+semantically safe point), and the KV cache write is an in-place donated
+buffer update (no write-back/reread of the cache between steps).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import decode_step, logits_fn
+from repro.serve.cache import build_decode_cache
+
+
+class Engine:
+    """Single-model batched serving."""
+
+    def __init__(self, params, cfg: ModelConfig, s_max: int = 2048,
+                 cache_dtype=jnp.float32):
+        self.params = params
+        self.cfg = cfg
+        self.s_max = s_max
+        self.cache_dtype = cache_dtype
+        self._decode = jax.jit(
+            functools.partial(decode_step, cfg=cfg), donate_argnums=(1,))
+        self._prefill = jax.jit(
+            functools.partial(logits_fn, cfg=cfg, mode="prefill"))
+
+    def prefill(self, tokens: jax.Array, extra: dict | None = None):
+        """tokens: (B, S_p).  Returns (last_logits (B, V), cache, pos)."""
+        batch = {"tokens": tokens, **(extra or {})}
+        logits, prefill_caches = self._prefill(self.params, batch)
+        cache = build_decode_cache(self.cfg, prefill_caches,
+                                   tokens.shape[0], self.s_max,
+                                   self.cache_dtype)
+        pos = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+        return logits[:, -1], cache, pos
+
+    def step(self, cache, tokens: jax.Array, pos: jax.Array):
+        """One decode step for the whole batch (tokens: (B,), pos: (B,))."""
+        logits, cache = self._decode(self.params, cache, tokens, pos)
+        return logits, cache, pos + 1
+
+    def generate(self, prompt: jax.Array, max_new: int = 32,
+                 temperature: float = 0.0, key=None,
+                 extra: dict | None = None) -> jax.Array:
+        """Greedy / temperature sampling.  prompt: (B, S_p)."""
+        logits, cache, pos = self.prefill(prompt, extra)
+        outs = []
+        tok = self._sample(logits, temperature, key, 0)
+        for i in range(max_new):
+            outs.append(tok)
+            logits, cache, pos = self.step(cache, tok, pos)
+            if key is not None:
+                key = jax.random.fold_in(key, i)
+            tok = self._sample(logits, temperature, key, i + 1)
+        return jnp.stack(outs, axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature, key, i):
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            jax.random.fold_in(key, i), logits / temperature).astype(
+            jnp.int32)

@@ -1,0 +1,118 @@
+"""Fault-tolerant training loop.
+
+Production behaviors implemented (and exercised by tests/test_train_loop.py):
+  * checkpoint/restart: periodic async checkpoints carry model+optimizer
+    state, data-pipeline position, and RNG; `run()` auto-resumes from the
+    latest checkpoint, so a crash at any step replays identically;
+  * watchdog: a step exceeding `step_timeout_s` raises StepTimeout (on a
+    real cluster this triggers the restart path; tests inject it);
+  * straggler mitigation: per-step wall times feed an EWMA; steps slower
+    than `straggler_factor` x EWMA are counted and logged — the signal a
+    cluster scheduler uses to evict/replace slow hosts;
+  * failure injection: `crash_at_step` simulates a hard failure for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.train.step import TrainState
+
+
+class StepTimeout(RuntimeError):
+    pass
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    log_every: int = 10
+    step_timeout_s: float = 600.0
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.1
+    crash_at_step: int | None = None        # failure injection (tests)
+
+
+@dataclasses.dataclass
+class LoopResult:
+    state: Any
+    history: list[dict]
+    resumed_from: int | None
+    straggler_steps: int
+
+
+def run(train_step: Callable, state: TrainState, data: SyntheticLM,
+        ckpt: CheckpointManager, cfg: LoopConfig,
+        log_path: str | None = None, prefetch_depth: int = 2) -> LoopResult:
+    """Run (or resume) training.  `train_step(state, batch) -> (state,
+    metrics)` should already be jit'd with donation."""
+    resumed_from = None
+    start_step = 0
+    latest = ckpt.latest_step()
+    if latest is not None:
+        state, extra = ckpt.restore(latest, state)
+        data.restore(extra["data"])
+        start_step = int(extra["loop_step"])
+        resumed_from = latest
+
+    source = Prefetcher(data, depth=prefetch_depth)
+    history: list[dict] = []
+    ewma = None
+    stragglers = 0
+    logf = open(log_path, "a") if log_path else None
+    try:
+        for step in range(start_step, cfg.total_steps):
+            if cfg.crash_at_step is not None and step == cfg.crash_at_step:
+                raise InjectedFailure(f"injected failure at step {step}")
+            t0 = time.monotonic()
+            batch = next(source)
+            state, metrics = train_step(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.monotonic() - t0
+
+            if dt > cfg.step_timeout_s:
+                raise StepTimeout(f"step {step} took {dt:.1f}s")
+            if ewma is None:
+                ewma = dt
+            elif dt > cfg.straggler_factor * ewma:
+                stragglers += 1
+            ewma = (1 - cfg.ewma_alpha) * (ewma or dt) + cfg.ewma_alpha * dt
+
+            rec = {"step": step, "time_s": dt,
+                   **{k: float(np.asarray(v)) for k, v in metrics.items()}}
+            history.append(rec)
+            if logf and step % cfg.log_every == 0:
+                logf.write(json.dumps(rec) + "\n")
+                logf.flush()
+            if (step + 1) % cfg.ckpt_every == 0:
+                # The authoritative data position is batches *consumed*
+                # (one per step) — NOT the prefetcher's read-ahead cursor,
+                # which has already pulled `depth` future batches.
+                ckpt.save(step + 1, state,
+                          extra={"loop_step": step + 1,
+                                 "data": {**data.state(),
+                                          "step": step + 1}})
+    finally:
+        source.close()
+        if logf:
+            logf.close()
+    ckpt.save(cfg.total_steps, state,
+              extra={"loop_step": cfg.total_steps,
+                     "data": {**data.state(), "step": cfg.total_steps}})
+    ckpt.wait()
+    return LoopResult(state=state, history=history,
+                      resumed_from=resumed_from,
+                      straggler_steps=stragglers)

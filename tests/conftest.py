@@ -1,0 +1,26 @@
+import os
+import sys
+import pathlib
+
+# Tests must see exactly ONE device (the dry-run forces 512 only inside its
+# own subprocesses, per the brief).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SRC = str(REPO / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+def subprocess_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    return env

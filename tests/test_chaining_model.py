@@ -1,0 +1,86 @@
+"""Unit + property tests for the ideal multi-lane chaining model (Eq. 1-5)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chaining import (ChainSpec, Deviation, IDEAL, attribute,
+                                 ii_eff_from_rates, pipeline_efficiency,
+                                 pipeline_spec)
+
+
+def mk_spec(n_stages=4, d=3.0, fill=2.0, tail=5.0, vl=1024, lanes=4):
+    return ChainSpec(startup_delays=(d,) * (n_stages - 1), fill_time=fill,
+                     tail_time=tail, vl=vl, lanes=lanes)
+
+
+def test_eq1_prologue():
+    spec = mk_spec(n_stages=4, d=3.0, fill=2.0)
+    assert spec.prologue == 3 * 3.0 + 2.0
+
+
+def test_eq2_steady_state_ceiling():
+    assert mk_spec(vl=1024, lanes=4).steady_ideal == 256
+    assert mk_spec(vl=1025, lanes=4).steady_ideal == 257
+
+
+def test_eq3_total():
+    spec = mk_spec()
+    assert spec.t_ideal == spec.prologue + spec.steady_ideal + spec.tail_time
+
+
+def test_eq4_ideal_deviation_recovers_ideal():
+    spec = mk_spec()
+    assert IDEAL.t_real(spec) == spec.t_ideal
+    assert IDEAL.loss(spec) == 0.0
+
+
+@given(dp=st.floats(0, 100), ii=st.floats(1, 4), dt=st.floats(0, 100))
+@settings(max_examples=100, deadline=None)
+def test_eq5_loss_identity(dp, ii, dt):
+    """dT == T_real - T_ideal exactly (Eq. 5 is algebra, not approximation)."""
+    spec = mk_spec()
+    dev = Deviation(dp=dp, ii_eff=ii, dt=dt)
+    assert math.isclose(dev.loss(spec), dev.t_real(spec) - spec.t_ideal,
+                        rel_tol=1e-12, abs_tol=1e-9)
+
+
+@given(dp=st.floats(0, 50), ii=st.floats(1, 3), dt=st.floats(0, 50))
+@settings(max_examples=100, deadline=None)
+def test_real_never_faster_than_ideal(dp, ii, dt):
+    spec = mk_spec()
+    assert Deviation(dp, ii, dt).t_real(spec) >= spec.t_ideal - 1e-9
+
+
+@given(prologue_extra=st.floats(0, 20), steady_mult=st.floats(1, 2),
+       tail_extra=st.floats(0, 20))
+@settings(max_examples=50, deadline=None)
+def test_attribute_roundtrip(prologue_extra, steady_mult, tail_extra):
+    spec = mk_spec()
+    p_real = spec.prologue + prologue_extra
+    s_real = spec.steady_ideal * steady_mult
+    t_real_tail = spec.tail_time + tail_extra
+    total = p_real + s_real + t_real_tail
+    dev = attribute(spec, total, p_real, t_real_tail)
+    assert math.isclose(dev.t_real(spec), total, rel_tol=1e-9)
+    assert math.isclose(dev.ii_eff, steady_mult, rel_tol=1e-9)
+
+
+def test_pipeline_efficiency_limits():
+    assert pipeline_efficiency(1, 1) == 1.0
+    assert pipeline_efficiency(10**6, 4) == pytest.approx(1.0, abs=1e-4)
+    # GPipe-style bubble: M microbatches, S stages.
+    assert pipeline_efficiency(8, 4) == pytest.approx(8 / 11)
+
+
+def test_ii_eff_from_rates():
+    # Consumer at 8 elem/cyc, memory supplying only 4: II_eff = 2.
+    assert ii_eff_from_rates(8.0, [4.0]) == 2.0
+    assert ii_eff_from_rates(8.0, [8.0, 16.0]) == 1.0
+
+
+def test_pipeline_spec_is_chain():
+    spec = pipeline_spec(num_stages=3, per_stage_delay=2.0, num_items=64,
+                         item_time=1.0)
+    assert spec.prologue == 2 * 2.0 + 2.0
+    assert spec.steady_ideal == 64

@@ -1,0 +1,140 @@
+"""Distribution correctness: logical rules, spec safety, and multi-device
+semantics (subprocess with 8 forced host devices — the in-process test
+session must keep exactly 1 device)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from conftest import REPO, subprocess_env
+from repro.distributed.sharding import (DEFAULT_RULES, logical_axes_for,
+                                        resolve_spec, safe_spec, use_mesh)
+
+
+def test_logical_axes_inference():
+    assert logical_axes_for("embedding/embed_table", 2) == ("vocab", "embed")
+    assert logical_axes_for("scan/0/mixer/wq", 4)[-3:] == \
+        ("embed", "heads", "head_dim")
+    assert logical_axes_for("lead/0/ffn/experts/w_in", 3) == \
+        ("expert", "embed", "ff")
+    assert logical_axes_for("scan/1/norm1/scale", 1) == (None,)
+    assert logical_axes_for("head/lm_head", 2) == ("embed", "vocab")
+
+
+def test_resolve_spec_without_mesh_is_empty():
+    assert resolve_spec(("batch", "seq", None)) == P(None, None, None)
+
+
+def test_safe_spec_divisibility():
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (4, 8)
+    fm = FakeMesh()
+    # kv_heads=2 over model=8: dropped; heads=16 over 8: kept.
+    s = safe_spec((32, 2, 16), P(None, "model", None), fm)
+    assert s == P(None, None, None)
+    s = safe_spec((32, 16, 64), P("data", "model", None), fm)
+    assert s == P("data", "model", None)
+    # 36 heads over 8: not divisible -> dropped.
+    s = safe_spec((36,), P("model"), fm)
+    assert s == P(None)
+
+
+def test_duplicate_mesh_axis_suppressed():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (4, 8)
+    with use_mesh(jax.make_mesh((1, 1), ("data", "model"))):
+        spec = resolve_spec(("embed", "embed"))
+        assert tuple(spec).count("data") <= 1
+
+
+SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, {src!r})
+    import jax, jax.numpy as jnp, numpy as np, json
+
+    results = {{}}
+
+    # 1. context-parallel decode == reference
+    from repro.distributed.context_parallel import cp_decode_attention
+    from repro.kernels import ref
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (2, 8, 16))
+    k = jax.random.normal(ks[1], (2, 64, 2, 16))
+    v = jax.random.normal(ks[2], (2, 64, 2, 16))
+    kvlen = jnp.array([50, 64])
+    out = cp_decode_attention(q, k, v, kvlen, mesh=mesh, axis="data")
+    kr = jnp.repeat(k, 4, axis=2); vr = jnp.repeat(v, 4, axis=2)
+    exp = ref.decode_attention_ref(q, kr, vr, kvlen)
+    results["cp_err"] = float(jnp.max(jnp.abs(out - exp)))
+
+    # 2. compressed psum ~= exact mean over the axis
+    from repro.distributed.compression import compressed_psum
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    x = jax.random.normal(ks[3], (8, 500))
+    f = shard_map(lambda xs: compressed_psum(xs, "data")[0], mesh=mesh,
+                  in_specs=P("data", None), out_specs=P("data", None),
+                  check_rep=False)
+    got = f(x)
+    exp2 = jnp.broadcast_to(x.reshape(4, 2, 500).mean(0, keepdims=True),
+                            (4, 2, 500)).reshape(8, 500)
+    results["psum_rel_err"] = float(
+        jnp.max(jnp.abs(got - exp2)) / jnp.max(jnp.abs(exp2)))
+
+    # 3. sharded train step == single-device train step (tiny model)
+    from repro.configs import ARCHS, reduced
+    from repro.models import init_model
+    from repro.train.step import make_train_step, init_state, StepConfig
+    from repro.distributed.sharding import use_mesh, param_specs, \\
+        named_shardings
+    from repro.models.multimodal import make_batch
+    import dataclasses
+    cfg = dataclasses.replace(reduced(ARCHS["qwen2.5-3b"]), n_layers=2)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(jax.random.PRNGKey(1), cfg, batch=4, seq=16)
+    step = make_train_step(cfg, StepConfig())
+    state = init_state(params)
+    _, m_plain = jax.jit(step)(state, batch)
+
+    mesh2 = jax.make_mesh((4, 2), ("data", "model"))
+    with use_mesh(mesh2):
+        p_sh = named_shardings(param_specs(params), mesh2)
+        from jax.sharding import NamedSharding
+        state_sh = jax.device_put(state, jax.tree.map(
+            lambda s: s, jax.tree_util.tree_map(
+                lambda x: NamedSharding(mesh2, P()), state)))
+        # place params with their real shardings
+        placed_params = jax.tree.map(jax.device_put, state.params, p_sh)
+        state2 = state._replace(params=placed_params)
+        _, m_shard = jax.jit(step)(state2, batch)
+    results["loss_plain"] = float(m_plain["loss"])
+    results["loss_shard"] = float(m_shard["loss"])
+    print("RESULTS:" + json.dumps(results))
+""")
+
+
+@pytest.mark.slow
+def test_multidevice_semantics():
+    script = SUBPROCESS_SCRIPT.format(src=str(REPO / "src"))
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=600,
+                          env=subprocess_env())
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS:")]
+    assert line, proc.stdout
+    res = json.loads(line[0][len("RESULTS:"):])
+    assert res["cp_err"] < 5e-4
+    assert res["psum_rel_err"] < 0.02
+    assert abs(res["loss_plain"] - res["loss_shard"]) < 1e-3

@@ -1,0 +1,226 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py),
+plus hypothesis property tests on kernel invariants.  All kernels run in
+interpret mode on CPU (the TPU lowering path is identical code)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _keys(n):
+    return jax.random.split(KEY, n)
+
+
+# --- streamer ---------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [128, 1024, 4096, 5000, 65536])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_streamer_chain_shapes(n, dtype):
+    ks = _keys(3)
+    x = jax.random.normal(ks[0], (n,), dtype)
+    y = jax.random.normal(ks[1], (n,), dtype)
+    w = jax.random.normal(ks[2], (n,), dtype)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    expect = ref.chain_ref(x, y, w)
+    np.testing.assert_allclose(ops.fused_chain(x, y, w).astype(jnp.float32),
+                               expect.astype(jnp.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(
+        ops.unfused_chain(x, y, w).astype(jnp.float32),
+        expect.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+def test_fused_equals_unfused():
+    """The paper's O-optimization (fusion/forwarding) must be semantics-
+    preserving: fused and HBM-round-trip variants agree exactly."""
+    ks = _keys(3)
+    x, y, w = (jax.random.normal(k, (8192,)) for k in ks)
+    np.testing.assert_array_equal(np.asarray(ops.fused_chain(x, y, w)),
+                                  np.asarray(ops.fused_chain(x, y, w)))
+    # FMA contraction in the fused kernel vs separate mul+add rounding.
+    np.testing.assert_allclose(ops.fused_chain(x, y, w),
+                               ops.unfused_chain(x, y, w), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_streamer_roundtrip_accounting():
+    from repro.kernels.streamer import hbm_roundtrip_bytes
+    assert hbm_roundtrip_bytes((1024,), jnp.float32, fused=True) == 4 * 4096
+    assert hbm_roundtrip_bytes((1024,), jnp.float32, fused=False) == 6 * 4096
+
+
+# --- gemm -------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128), (256, 512, 128), (200, 300, 160), (64, 1000, 48),
+    (129, 257, 130),
+])
+def test_gemm_shapes(m, k, n):
+    ks = _keys(2)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    y = jax.random.normal(ks[1], (k, n), jnp.float32)
+    np.testing.assert_allclose(ops.gemm(x, y), ref.gemm_ref(x, y),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "gelu", "silu"])
+def test_gemm_fused_epilogue(act):
+    ks = _keys(3)
+    x = jax.random.normal(ks[0], (160, 256), jnp.float32)
+    y = jax.random.normal(ks[1], (256, 192), jnp.float32)
+    b = jax.random.normal(ks[2], (192,), jnp.float32)
+    np.testing.assert_allclose(ops.gemm(x, y, b, act),
+                               ref.gemm_ref(x, y, b, act),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_gemm_unfused_epilogue_matches_fused():
+    ks = _keys(3)
+    x = jax.random.normal(ks[0], (128, 128), jnp.float32)
+    y = jax.random.normal(ks[1], (128, 128), jnp.float32)
+    b = jax.random.normal(ks[2], (128,), jnp.float32)
+    np.testing.assert_allclose(ops.gemm_unfused_epilogue(x, y, b, "gelu"),
+                               ops.gemm(x, y, b, "gelu"),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_bf16():
+    ks = _keys(2)
+    x = jax.random.normal(ks[0], (128, 256), jnp.bfloat16)
+    y = jax.random.normal(ks[1], (256, 128), jnp.bfloat16)
+    out = ops.gemm(x, y)
+    expect = ref.gemm_ref(x, y)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               expect.astype(jnp.float32), rtol=2e-2,
+                               atol=2e-1)
+
+
+@given(m=st.integers(8, 96), k=st.integers(8, 96), n=st.integers(8, 96))
+@settings(max_examples=10, deadline=None)
+def test_gemm_property_random_shapes(m, k, n):
+    ks = _keys(2)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    y = jax.random.normal(ks[1], (k, n), jnp.float32)
+    np.testing.assert_allclose(ops.gemm(x, y, bm=32, bn=32, bk=32),
+                               ref.gemm_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+# --- flash attention --------------------------------------------------------
+
+@pytest.mark.parametrize("sq,skv,h,hkv,d", [
+    (128, 128, 4, 4, 64), (256, 256, 8, 2, 64), (128, 256, 4, 1, 128),
+    (64, 512, 8, 8, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(sq, skv, h, hkv, d, causal):
+    ks = _keys(3)
+    q = jax.random.normal(ks[0], (2, sq, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (2, skv, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (2, skv, hkv, d), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, bq=64, bkv=64)
+    kr = jnp.repeat(k, h // hkv, axis=2)
+    vr = jnp.repeat(v, h // hkv, axis=2)
+    np.testing.assert_allclose(out, ref.mha_ref(q, kr, vr, causal=causal),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_softcap():
+    ks = _keys(3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 128, 4, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, 4, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, logit_softcap=20.0,
+                              bq=64, bkv=64)
+    np.testing.assert_allclose(
+        out, ref.mha_ref(q, k, v, causal=True, logit_softcap=20.0),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_probability_property():
+    """Attention output must lie in the convex hull of V rows: max|out|
+    <= max|v| (softmax weights sum to 1)."""
+    ks = _keys(3)
+    q = 5.0 * jax.random.normal(ks[0], (1, 64, 2, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=False, bq=32, bkv=32)
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(v))) + 1e-4
+
+
+# --- decode attention -------------------------------------------------------
+
+@pytest.mark.parametrize("s,bkv", [(512, 128), (1024, 256), (768, 512)])
+def test_decode_attention_sweep(s, bkv):
+    ks = _keys(4)
+    q = jax.random.normal(ks[0], (2, 8, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, s, 8, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, s, 8, 64), jnp.float32)
+    kvlen = jnp.array([s // 2, s])
+    out = ops.decode_attention(q, k, v, kvlen, bkv=bkv)
+    np.testing.assert_allclose(out,
+                               ref.decode_attention_ref(q, k, v, kvlen),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_combine_is_exact():
+    """Split-KV combine must equal single-chunk attention (tail-drain
+    algebra is exact, not approximate)."""
+    ks = _keys(3)
+    q = jax.random.normal(ks[0], (1, 4, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 512, 4, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 512, 4, 32), jnp.float32)
+    out_1 = ops.decode_attention(q, k, v, None, bkv=512)   # single chunk
+    out_4 = ops.decode_attention(q, k, v, None, bkv=128)   # 4-way split
+    np.testing.assert_allclose(out_1, out_4, rtol=1e-5, atol=1e-5)
+
+
+# --- SSD ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("l,h,p,g,n,chunk", [
+    (128, 4, 32, 1, 16, 32), (256, 8, 16, 2, 32, 64), (64, 2, 64, 1, 8, 64),
+])
+def test_ssd_sweep(l, h, p, g, n, chunk):
+    ks = _keys(5)
+    x = jax.random.normal(ks[0], (2, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    b = jax.random.normal(ks[3], (2, l, g, n), jnp.float32)
+    c = jax.random.normal(ks[4], (2, l, g, n), jnp.float32)
+    y, hT = ops.ssd_batched(x, dt, a, b, c, chunk=chunk)
+    yr, hr = jax.vmap(lambda xx, dd, bb, cc: ref.ssd_ref(xx, dd, a, bb, cc))(
+        x, dt, b, c)
+    np.testing.assert_allclose(y, yr, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(hT, hr.transpose(0, 1, 3, 2), rtol=3e-4,
+                               atol=3e-4)
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size is an implementation detail: results must not depend on
+    it (the chaining decomposition is exact)."""
+    ks = _keys(5)
+    x = jax.random.normal(ks[0], (1, 128, 2, 16), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 128, 2)))
+    a = -jnp.exp(jax.random.normal(ks[2], (2,)))
+    b = jax.random.normal(ks[3], (1, 128, 1, 8), jnp.float32)
+    c = jax.random.normal(ks[4], (1, 128, 1, 8), jnp.float32)
+    y32, _ = ops.ssd_batched(x, dt, a, b, c, chunk=32)
+    y128, _ = ops.ssd_batched(x, dt, a, b, c, chunk=128)
+    np.testing.assert_allclose(y32, y128, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_decay_bounds():
+    """With A<0 and bounded inputs the state must stay bounded (stability
+    of the recurrence — the chained operand cannot blow up)."""
+    ks = _keys(5)
+    x = jnp.ones((1, 512, 2, 8), jnp.float32)
+    dt = jnp.full((1, 512, 2), 0.5)
+    a = jnp.array([-1.0, -0.5])
+    b = jnp.ones((1, 512, 1, 4)) * 0.5
+    c = jnp.ones((1, 512, 1, 4)) * 0.5
+    y, hT = ops.ssd_batched(x, dt, a, b, c, chunk=64)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(jnp.max(jnp.abs(hT))) < 100.0

@@ -1,0 +1,210 @@
+"""Optimizer, data pipeline, checkpoint, compression: unit + property."""
+import dataclasses
+import pathlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCHS, reduced
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.distributed import compression as comp
+from repro.train import optimizer as opt
+
+KEY = jax.random.PRNGKey(5)
+
+
+# --- optimizer -----------------------------------------------------------------
+
+def _numpy_adamw(params, grads, m, v, step, lr, b1, b2, eps, wd):
+    m = b1 * m + (1 - b1) * grads
+    v = b2 * v + (1 - b2) * grads ** 2
+    mh = m / (1 - b1 ** step)
+    vh = v / (1 - b2 ** step)
+    return params - lr * (mh / (np.sqrt(vh) + eps) + wd * params), m, v
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = opt.AdamWConfig(lr=1e-2, clip_norm=1e9, weight_decay=0.1)
+    p = {"w": jnp.array([1.0, -2.0, 3.0]), "b": jnp.array([[0.5, 0.5]])}
+    g = {"w": jnp.array([0.1, 0.2, -0.3]), "b": jnp.array([[1.0, -1.0]])}
+    state = opt.init(p)
+    newp, state, _ = opt.update(g, state, p, cfg, cfg.lr)
+    for k in p:
+        ref, _, _ = _numpy_adamw(np.asarray(p[k]), np.asarray(g[k]),
+                                 np.zeros_like(p[k]), np.zeros_like(p[k]),
+                                 1, cfg.lr, cfg.b1, cfg.b2, cfg.eps,
+                                 cfg.weight_decay)
+        np.testing.assert_allclose(newp[k], ref, rtol=1e-5)
+
+
+@given(scale=st.floats(0.1, 100.0))
+@settings(max_examples=20, deadline=None)
+def test_clip_by_global_norm_property(scale):
+    g = {"a": scale * jnp.ones((10,)), "b": -scale * jnp.ones((5,))}
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    out_norm = opt.global_norm(clipped)
+    assert float(out_norm) <= 1.0 + 1e-4
+    if float(norm) <= 1.0:                 # below threshold: untouched
+        np.testing.assert_allclose(clipped["a"], g["a"], rtol=1e-6)
+
+
+def test_cosine_schedule_shape():
+    sched = opt.cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(sched(0)) == 0.0
+    assert float(sched(10)) == pytest.approx(1e-3)
+    assert float(sched(100)) == pytest.approx(1e-4, rel=1e-2)
+    assert float(sched(55)) < float(sched(20))
+
+
+# --- data pipeline --------------------------------------------------------------
+
+CFG = reduced(ARCHS["qwen2.5-3b"])
+
+
+def test_stream_deterministic_and_seekable():
+    a = SyntheticLM(CFG, batch=2, seq_len=16, seed=3)
+    b1 = [next(a) for _ in range(5)]
+    b = SyntheticLM(CFG, batch=2, seq_len=16, seed=3)
+    b.restore({"step": 3, "seed": 3, "kind": "markov"})
+    np.testing.assert_array_equal(b1[3]["tokens"], next(b)["tokens"])
+    np.testing.assert_array_equal(b1[4]["tokens"], next(b)["tokens"])
+
+
+def test_stream_targets_are_shifted_tokens():
+    s = SyntheticLM(CFG, batch=2, seq_len=16, seed=0)
+    batch = next(s)
+    np.testing.assert_array_equal(batch["tokens"][:, 1:],
+                                  batch["targets"][:, :-1])
+
+
+def test_host_sharding_disjoint():
+    a = SyntheticLM(CFG, batch=2, seq_len=16, seed=3, process_index=0,
+                    process_count=2)
+    b = SyntheticLM(CFG, batch=2, seq_len=16, seed=3, process_index=1,
+                    process_count=2)
+    assert not np.array_equal(next(a)["tokens"], next(b)["tokens"])
+
+
+def test_prefetcher_preserves_order():
+    s = SyntheticLM(CFG, batch=1, seq_len=8, seed=1)
+    expected = [next(SyntheticLM(CFG, batch=1, seq_len=8, seed=1))
+                for _ in range(1)]
+    pf = Prefetcher(SyntheticLM(CFG, batch=1, seq_len=8, seed=1), depth=3)
+    try:
+        got = [next(pf) for _ in range(4)]
+        ref_src = SyntheticLM(CFG, batch=1, seq_len=8, seed=1)
+        for g in got:
+            np.testing.assert_array_equal(g["tokens"],
+                                          next(ref_src)["tokens"])
+    finally:
+        pf.close()
+
+
+def test_markov_stream_is_learnable_structure():
+    """Bigram stream must have lower conditional entropy than uniform."""
+    s = SyntheticLM(CFG, batch=8, seq_len=64, seed=2)
+    batch = next(s)
+    toks = np.asarray(batch["tokens"])
+    v = CFG.vocab_size
+    joint = np.zeros((v, v))
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            joint[a, b] += 1
+    cond = joint / np.maximum(joint.sum(1, keepdims=True), 1)
+    ent = -np.nansum(cond * np.log(np.where(cond > 0, cond, 1)), axis=1)
+    assert ent[joint.sum(1) > 0].mean() < 0.9 * np.log(v)
+
+
+# --- checkpoint -------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.bfloat16),
+                       "c": jnp.array(7, jnp.int32)}}
+
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, async_save=False)
+        for s in (10, 20, 30):
+            mgr.save(s, _tree(), extra={"x": s})
+        assert mgr.latest_step() == 30
+        assert len(list(pathlib.Path(d).glob("step_*"))) == 2  # GC'd
+        restored, extra = mgr.restore(None, _tree())
+        assert extra["x"] == 30
+        np.testing.assert_array_equal(restored["a"], _tree()["a"])
+        assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_async_then_wait():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=True)
+        mgr.save(5, _tree())
+        mgr.wait()
+        assert mgr.latest_step() == 5
+
+
+def test_checkpoint_detects_corruption():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        mgr.save(1, _tree())
+        victim = next(pathlib.Path(d).glob("step_*/a.npy"))
+        raw = bytearray(victim.read_bytes())
+        raw[-1] ^= 0xFF
+        victim.write_bytes(bytes(raw))
+        with pytest.raises(IOError):
+            mgr.restore(1, _tree())
+
+
+def test_checkpoint_atomic_no_partial_dirs():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, async_save=False)
+        mgr.save(1, _tree())
+        assert not list(pathlib.Path(d).glob(".tmp*"))
+
+
+# --- compression ------------------------------------------------------------------
+
+@given(scale=st.floats(1e-3, 1e3))
+@settings(max_examples=25, deadline=None)
+def test_quantize_error_bound(scale):
+    """Blockwise int8: |err| <= scale_block/2 = max|x_block|/254 per elem."""
+    x = scale * jax.random.normal(KEY, (1000,))
+    q, s = comp.quantize(x)
+    err = comp.quantization_error(x)
+    bound = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(err))) <= bound * 0.51 + 1e-9
+
+
+def test_dequantize_roundtrip_shape_dtype():
+    x = jax.random.normal(KEY, (3, 77), jnp.float32)
+    q, s = comp.quantize(x)
+    y = comp.dequantize(q, s, x.shape, x.dtype)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    assert float(jnp.max(jnp.abs(x - y))) < 0.02 * float(jnp.max(jnp.abs(x)))
+
+
+def test_error_feedback_reduces_bias():
+    """With error feedback, the time-average of dequantized values must
+    converge to the true value (unbiased accumulation)."""
+    x = 0.01 * jnp.ones((256,))            # tiny values: worst quant case
+    err = jnp.zeros_like(x)
+    acc = jnp.zeros_like(x)
+    for _ in range(50):
+        q, s = comp.quantize(x + err)
+        deq = comp.dequantize(q, s, x.shape, x.dtype)
+        err = (x + err) - deq
+        acc = acc + deq
+    np.testing.assert_allclose(acc / 50, x, rtol=0.05)
+
+
+def test_compressed_bytes_ratio():
+    tree = {"w": jnp.zeros((1024, 1024))}
+    raw, compressed = comp.compressed_bytes(tree)
+    assert raw == 4 * 1024 * 1024
+    assert compressed < raw / 3.5          # ~4x reduction
