@@ -9,14 +9,7 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 if str(REPO / "src") not in sys.path:
     sys.path.insert(0, str(REPO / "src"))
 
-from repro.core.calibration import load as load_params  # noqa: E402
-from repro.core.simulator import AraSimulator  # noqa: E402
-
 OUT_DIR = REPO / "experiments" / "benchmarks"
-
-
-def simulator() -> AraSimulator:
-    return AraSimulator(params=load_params())
 
 
 def emit(rows: list[dict], name: str) -> None:

@@ -1,20 +1,28 @@
 """Fig. 3: achieved performance of baseline Ara vs Ara-Opt per kernel."""
 from __future__ import annotations
 
-from benchmarks.common import emit, simulator
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_REPO), str(_REPO / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks import gridlib
+from benchmarks.common import emit
 from repro.core import paper
-from repro.core.isa import OptConfig, geomean
-from repro.core.traces import DEFAULT_TRACES
+from repro.core.isa import geomean
 
 
 def run() -> list[dict]:
-    sim = simulator()
+    traces = gridlib.paper_traces()
+    cells = gridlib.grid().base_and_full(traces)
     rows = []
     speedups = []
-    for name, fn in DEFAULT_TRACES.items():
-        tr = fn()
-        base = sim.run(tr, OptConfig.baseline())
-        opt = sim.run(tr, OptConfig.full())
+    for name, tr in traces.items():
+        base = cells[(name, gridlib.BASE.label)]
+        opt = cells[(name, gridlib.FULL.label)]
         s = base.cycles / opt.cycles
         speedups.append(s)
         rows.append({
@@ -36,7 +44,7 @@ def run() -> list[dict]:
 
 
 def main() -> None:
-    emit(run(), "fig3_speedup")
+    emit(run(), gridlib.table_name("fig3_speedup"))
 
 
 if __name__ == "__main__":

@@ -1,21 +1,29 @@
 """Fig. 4: roofline-normalized performance and gap-closed ratio."""
 from __future__ import annotations
 
-from benchmarks.common import emit, simulator
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_REPO), str(_REPO / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks import gridlib
+from benchmarks.common import emit
 from repro.core import paper
-from repro.core.isa import OptConfig, geomean
+from repro.core.isa import geomean
 from repro.core.roofline import gap_closed, normalized, p_ideal
-from repro.core.traces import DEFAULT_TRACES
 
 
 def run() -> list[dict]:
-    sim = simulator()
+    traces = gridlib.paper_traces()
+    cells = gridlib.grid().base_and_full(traces)
     rows = []
     norm_b, norm_o, gaps = [], [], []
-    for name, fn in DEFAULT_TRACES.items():
-        tr = fn()
-        base = sim.run(tr, OptConfig.baseline())
-        opt = sim.run(tr, OptConfig.full())
+    for name, tr in traces.items():
+        base = cells[(name, gridlib.BASE.label)]
+        opt = cells[(name, gridlib.FULL.label)]
         oi = tr.operational_intensity
         nb, no = normalized(base.gflops, oi), normalized(opt.gflops, oi)
         gc = gap_closed(base.gflops, opt.gflops, oi)
@@ -44,7 +52,7 @@ def run() -> list[dict]:
 
 
 def main() -> None:
-    emit(run(), "fig4_roofline")
+    emit(run(), gridlib.table_name("fig4_roofline"))
 
 
 if __name__ == "__main__":

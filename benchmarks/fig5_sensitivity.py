@@ -1,28 +1,37 @@
 """Fig. 5: problem-size sensitivity for scal and gemm."""
 from __future__ import annotations
 
-from benchmarks.common import emit, simulator
-from repro.core.isa import OptConfig
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_REPO), str(_REPO / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks import gridlib
+from benchmarks.common import emit
 from repro.core.traces import gemm, scal
+
+#: Sweep points per profile (smoke trims the gemm sizes for CI runners).
+SWEEP_SIZES = {
+    "default": {"scal": (512, 1024, 2048), "gemm": (32, 64, 128, 256)},
+    "smoke": {"scal": (256, 512, 1024), "gemm": (16, 32, 64)},
+}
 
 
 def run() -> list[dict]:
-    sim = simulator()
+    sizes = SWEEP_SIZES.get(gridlib.active_profile(),
+                            SWEEP_SIZES["default"])
+    traces = {f"scal_{n}": scal(n) for n in sizes["scal"]}
+    traces.update({f"gemm_{m}": gemm(m, m, m) for m in sizes["gemm"]})
+    cells = gridlib.grid().base_and_full(traces)
     rows = []
-    for n in (512, 1024, 2048):
-        tr = scal(n)
-        base = sim.run(tr, OptConfig.baseline())
-        opt = sim.run(tr, OptConfig.full())
-        rows.append({"kernel": "scal", "size": n,
-                     "base_gflops": base.gflops, "opt_gflops": opt.gflops,
-                     "speedup": base.cycles / opt.cycles,
-                     "lane_util_base": base.lane_utilization,
-                     "lane_util_opt": opt.lane_utilization})
-    for m in (32, 64, 128, 256):
-        tr = gemm(m, m, m)
-        base = sim.run(tr, OptConfig.baseline())
-        opt = sim.run(tr, OptConfig.full())
-        rows.append({"kernel": "gemm", "size": m,
+    for key, tr in traces.items():
+        kernel, size = key.rsplit("_", 1)
+        base = cells[(key, gridlib.BASE.label)]
+        opt = cells[(key, gridlib.FULL.label)]
+        rows.append({"kernel": kernel, "size": int(size),
                      "base_gflops": base.gflops, "opt_gflops": opt.gflops,
                      "speedup": base.cycles / opt.cycles,
                      "lane_util_base": base.lane_utilization,
@@ -47,7 +56,7 @@ def check_paper_trends(rows: list[dict]) -> dict:
 
 def main() -> None:
     rows = run()
-    emit(rows, "fig5_sensitivity")
+    emit(rows, gridlib.table_name("fig5_sensitivity"))
     print("# trends:", check_paper_trends(rows))
 
 

@@ -1,0 +1,159 @@
+"""Shared sweep grid for all paper benchmarks.
+
+fig3/fig4/fig5/table1/table2 all read `(kernel, OptConfig)` cells of the
+same ablation grid.  Instead of each script re-walking the traces through
+the scalar simulator, they ask this module: cells are batch-evaluated by
+`repro.core.batch_sim.BatchAraSimulator` (one vectorized call for every
+missing cell) and memoized in the content-addressed
+`repro.launch.sweep_cache.SweepCache`, so the second benchmark that needs
+a cell gets it for free.
+
+Profiles pick the problem sizes: ``default`` is the paper's Fig. 3 set;
+``smoke`` shrinks every kernel so the whole benchmark suite finishes in
+seconds on a CPU-only CI runner (`benchmarks/run.py --smoke`).
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+from typing import Mapping, Sequence
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO / "src") not in sys.path:
+    sys.path.insert(0, str(REPO / "src"))
+
+from repro.core import traces as T  # noqa: E402
+from repro.core.batch_sim import BatchAraSimulator  # noqa: E402
+from repro.core.calibration import load as load_params  # noqa: E402
+from repro.core.isa import (KernelTrace, MachineConfig,  # noqa: E402
+                            OptConfig)
+from repro.core.simulator import SimParams, SimResult  # noqa: E402
+from repro.core.traces import stack_traces  # noqa: E402
+from repro.launch.sweep_cache import (SweepCache, cell_key,  # noqa: E402
+                                      trace_fingerprint)
+
+#: Problem sizes per profile (kernel -> positional args).
+PROFILE_SIZES: dict[str, dict[str, tuple]] = {
+    "default": {
+        "scal": (1024,), "axpy": (1024,), "dotp": (1024,),
+        "gemv": (32, 128), "symv": (32,), "ger": (128, 128),
+        "gemm": (128, 128, 128), "trsm": (32,), "syrk": (32, 32),
+        "spmv": (32,), "dwt": (1024,),
+    },
+    "smoke": {
+        "scal": (256,), "axpy": (256,), "dotp": (256,),
+        "gemv": (16, 64), "symv": (16,), "ger": (32, 32),
+        "gemm": (32, 32, 32), "trsm": (16,), "syrk": (16, 16),
+        "spmv": (16,), "dwt": (256,),
+    },
+}
+
+_profile = "default"
+
+
+def set_profile(name: str) -> None:
+    """Select the active problem-size profile (``default`` or ``smoke``)."""
+    global _profile
+    if name not in PROFILE_SIZES:
+        raise ValueError(f"unknown profile {name!r}")
+    _profile = name
+
+
+def active_profile() -> str:
+    return _profile
+
+
+def table_name(base: str) -> str:
+    """Output-CSV name for the active profile.  Non-default profiles get a
+    suffix so smoke-sized results never clobber (or masquerade as) the
+    canonical paper-repro tables."""
+    return base if _profile == "default" else f"{base}_{_profile}"
+
+
+def paper_traces(profile: str | None = None) -> dict[str, KernelTrace]:
+    """The 11 paper kernels at the active profile's sizes."""
+    sizes = PROFILE_SIZES[profile or _profile]
+    return {name: T.KERNELS[name](*sizes[name]) for name in sizes}
+
+
+#: Sentinel labels used as cell keys alongside OptConfig.label.
+BASE = OptConfig.baseline()
+FULL = OptConfig.full()
+
+
+class Grid:
+    """Batch-evaluated, cache-backed view of the ablation grid."""
+
+    def __init__(self, params: SimParams | None = None,
+                 mc: MachineConfig = MachineConfig(),
+                 cache: SweepCache | None = None, use_cache: bool = True,
+                 backend: str = "numpy"):
+        self.params = params if params is not None else load_params()
+        self.mc = mc
+        self.cache = cache if cache is not None else SweepCache()
+        self.use_cache = use_cache
+        self.backend = backend
+        self.sim = BatchAraSimulator(mc)
+
+    def cells(self, traces: Mapping[str, KernelTrace],
+              opts: Sequence[OptConfig]) -> dict[tuple[str, str], SimResult]:
+        """Evaluate `(trace x opt)` cells, batch-running only cache misses.
+
+        Returns `{(trace_key, opt.label): SimResult}` (timings omitted).
+        """
+        opts = list(opts)
+        out: dict[tuple[str, str], SimResult] = {}
+        keys: dict[tuple[str, str], str] = {}
+        # Traces grouped by which opts they are missing, so a partial
+        # cache hit only re-simulates the absent columns (one batched
+        # call per distinct missing-opt signature, usually just one).
+        by_sig: dict[tuple[int, ...], list[str]] = {}
+        for tname, tr in traces.items():
+            fp = trace_fingerprint(tr)         # hash the stream once
+            sig = []
+            for oi, opt in enumerate(opts):
+                ck = cell_key(tr, opt, self.params, self.mc, trace_fp=fp)
+                keys[(tname, opt.label)] = ck
+                res = (self.cache.get_result(ck, tr.name)
+                       if self.use_cache else None)
+                if res is None:
+                    sig.append(oi)
+                else:
+                    out[(tname, opt.label)] = res
+            if sig:
+                by_sig.setdefault(tuple(sig), []).append(tname)
+
+        for sig, tnames in by_sig.items():
+            run_opts = [opts[oi] for oi in sig]
+            stacked = stack_traces([traces[t] for t in tnames])
+            batch = self.sim.run(stacked, run_opts, self.params,
+                                 backend=self.backend)
+            for bi, tname in enumerate(tnames):
+                for oi, opt in enumerate(run_opts):
+                    res = SimResult(
+                        kernel=traces[tname].name,
+                        cycles=float(batch.cycles[bi, oi, 0]),
+                        flops=int(batch.flops[bi]),
+                        bytes=int(batch.bytes[bi]), timings=[],
+                        busy_fpu=float(batch.busy_fpu[bi, oi, 0]),
+                        busy_bus=float(batch.busy_bus[bi, oi, 0]))
+                    out[(tname, opt.label)] = res
+                    if self.use_cache:
+                        self.cache.put_result(keys[(tname, opt.label)], res)
+        return out
+
+    def base_and_full(self, traces: Mapping[str, KernelTrace]
+                      ) -> dict[tuple[str, str], SimResult]:
+        return self.cells(traces, [BASE, FULL])
+
+
+_shared: Grid | None = None
+
+
+def grid() -> Grid:
+    """Process-wide shared grid (benchmarks run as one process via run.py,
+    so fig3/fig4/table1/... cooperate through one cache/simulator)."""
+    global _shared
+    if _shared is None:
+        _shared = Grid()
+    return _shared

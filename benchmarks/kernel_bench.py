@@ -1,13 +1,30 @@
 """TPU kernel microbench: wall-time per call (CPU interpret — structural)
 plus the analytic TPU roofline estimate per kernel variant, fused vs
-unfused (the paper's O-optimization quantified on v5e constants)."""
+unfused (the paper's O-optimization quantified on v5e constants).
+
+Also benchmarks the batched ablation-sweep engine (core/batch_sim.py)
+against the scalar `AraSimulator` loop on the full Table I grid."""
 from __future__ import annotations
+
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_REPO), str(_REPO / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks import gridlib
 from benchmarks.common import emit, timed
+from repro.core.batch_sim import BatchAraSimulator
+from repro.core.calibration import load as load_params
+from repro.core.isa import ABLATION_GRID, OptConfig
 from repro.core.roofline import TPU_V5E
+from repro.core.simulator import AraSimulator
+from repro.core.traces import stack_traces
 from repro.kernels import ops
 from repro.kernels.flash_attention import attention_flops_bytes
 from repro.kernels.gemm import gemm_flops_bytes
@@ -16,6 +33,44 @@ from repro.kernels.streamer import hbm_roundtrip_bytes
 
 def _roofline_us(flops: float, bytes_: float) -> float:
     return max(flops / TPU_V5E.peak_flops, bytes_ / TPU_V5E.hbm_bw) * 1e6
+
+
+def batch_grid_rows() -> list[dict]:
+    """Scalar loop vs one batched call on the full Table I ablation grid
+    (6 kernels x 8 opt corners, calibrated params)."""
+    from benchmarks.table1_ablation import KERNELS
+    params = load_params()
+    traces = {k: tr for k, tr in gridlib.paper_traces().items()
+              if k in KERNELS}
+    opts = [OptConfig.baseline(), *ABLATION_GRID]
+    n_cells = len(traces) * len(opts)
+    shape = f"{len(traces)}x{len(opts)}"
+
+    sim = AraSimulator(params=params)
+
+    def scalar_loop():
+        return [sim.run(tr, o).cycles
+                for tr in traces.values() for o in opts]
+
+    stacked = stack_traces(list(traces.values()))
+    bsim = BatchAraSimulator()
+
+    def batched():
+        return bsim.run(stacked, opts, params)
+
+    scalar_us = timed(scalar_loop)
+    batch_us = timed(batched)
+    print(f"# table1 grid ({n_cells} cells): scalar {scalar_us:.0f}us, "
+          f"batched {batch_us:.0f}us, "
+          f"speedup {scalar_us / max(batch_us, 1e-9):.2f}x")
+    return [
+        {"kernel": "table1_grid_scalar_loop", "shape": shape,
+         "cpu_interpret_us": scalar_us,
+         "tpu_roofline_us": float("nan"), "hbm_bytes": 0},
+        {"kernel": "table1_grid_batched", "shape": shape,
+         "cpu_interpret_us": batch_us,
+         "tpu_roofline_us": float("nan"), "hbm_bytes": 0},
+    ]
 
 
 def run() -> list[dict]:
@@ -85,6 +140,7 @@ def run() -> list[dict]:
         "tpu_roofline_us": _roofline_us(ssd_flops, ssd_bytes),
         "hbm_bytes": ssd_bytes,
     })
+    rows.extend(batch_grid_rows())
     return rows
 
 

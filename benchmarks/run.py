@@ -1,7 +1,13 @@
 """Run every benchmark (one per paper table/figure + kernel/dry-run
-tables).  Prints CSV per table and persists to experiments/benchmarks/."""
+tables).  Prints CSV per table and persists to experiments/benchmarks/.
+
+``--smoke`` runs the paper tables/figures at reduced problem sizes and
+skips the dry-run sweep and the JAX kernel microbench, so the suite
+finishes in well under two minutes on a CPU-only CI runner.
+"""
 from __future__ import annotations
 
+import argparse
 import pathlib
 import sys
 
@@ -13,16 +19,30 @@ if str(REPO) not in sys.path:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small problem sizes, no dry-run sweep, no JAX "
+                         "kernel microbench (CI profile)")
+    args = ap.parse_args()
+
     from benchmarks import (dryrun_table, fig3_speedup, fig4_roofline,
-                            fig5_sensitivity, kernel_bench, table1_ablation,
-                            table2_efficiency)
+                            fig5_sensitivity, gridlib, kernel_bench,
+                            table1_ablation, table2_efficiency)
+    if args.smoke:
+        gridlib.set_profile("smoke")
+
     fig3_speedup.main()
     fig4_roofline.main()
     table1_ablation.main()
     fig5_sensitivity.main()
     table2_efficiency.main()
-    kernel_bench.main()
-    dryrun_table.main()
+    if args.smoke:
+        from benchmarks.common import emit
+        emit(kernel_bench.batch_grid_rows(),
+             gridlib.table_name("kernel_bench"))
+    else:
+        kernel_bench.main()
+        dryrun_table.main()
 
 
 if __name__ == "__main__":

@@ -1,24 +1,33 @@
 """Table I: 2^3 orthogonal ablation of the M/C/O optimization classes."""
 from __future__ import annotations
 
-from benchmarks.common import emit, simulator
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_REPO), str(_REPO / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks import gridlib
+from benchmarks.common import emit
 from repro.core import paper
-from repro.core.isa import ABLATION_GRID, OptConfig, geomean
-from repro.core.traces import DEFAULT_TRACES
+from repro.core.isa import ABLATION_GRID, geomean
 
 KERNELS = ("scal", "axpy", "ger", "gemm", "gemv", "dotp")
 
 
 def run() -> list[dict]:
-    sim = simulator()
+    traces = {k: tr for k, tr in gridlib.paper_traces().items()
+              if k in KERNELS}
+    cells = gridlib.grid().cells(traces, [gridlib.BASE, *ABLATION_GRID])
     rows = []
     cols = {}
     for name in KERNELS:
-        tr = DEFAULT_TRACES[name]()
-        base = sim.run(tr, OptConfig.baseline()).cycles
+        base = cells[(name, gridlib.BASE.label)].cycles
         row = {"kernel": name}
         for label, cfg in zip(paper.TABLE1_CONFIGS, ABLATION_GRID):
-            s = base / sim.run(tr, cfg).cycles
+            s = base / cells[(name, cfg.label)].cycles
             row[f"{label}_sim"] = s
             cols.setdefault(label, []).append(s)
         for label, val in zip(paper.TABLE1_CONFIGS, paper.TABLE1[name]):
@@ -34,7 +43,7 @@ def run() -> list[dict]:
 
 
 def main() -> None:
-    emit(run(), "table1_ablation")
+    emit(run(), gridlib.table_name("table1_ablation"))
 
 
 if __name__ == "__main__":

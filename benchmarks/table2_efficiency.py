@@ -10,10 +10,17 @@ carried alongside for comparison.
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, simulator
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_REPO), str(_REPO / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks import gridlib
+from benchmarks.common import emit
 from repro.core import paper
-from repro.core.isa import OptConfig
-from repro.core.traces import gemm
 
 # Resource model (TSMC28-ish densities): SRAM ~ 0.25 mm^2/Mbit,
 # std-cell regs ~ 1.5x SRAM bit area.
@@ -42,10 +49,10 @@ def added_area_mm2() -> float:
 
 
 def run() -> list[dict]:
-    sim = simulator()
-    tr = gemm(128, 128, 128)
-    base = sim.run(tr, OptConfig.baseline())
-    opt = sim.run(tr, OptConfig.full())
+    traces = {"gemm": gridlib.paper_traces()["gemm"]}
+    cells = gridlib.grid().base_and_full(traces)
+    base = cells[("gemm", gridlib.BASE.label)]
+    opt = cells[("gemm", gridlib.FULL.label)]
     add = added_area_mm2()
     area_opt = ARA_BASE_MM2 + add
     # Power model: dynamic power scales with achieved activity (lane
@@ -90,7 +97,7 @@ def run() -> list[dict]:
 
 
 def main() -> None:
-    emit(run(), "table2_efficiency")
+    emit(run(), gridlib.table_name("table2_efficiency"))
 
 
 if __name__ == "__main__":

@@ -109,6 +109,10 @@ class CheckpointManager:
 
     # -- restore --------------------------------------------------------------
     def latest_step(self) -> int | None:
+        # A crash right after save() can leave the async write in flight;
+        # discovery must not race it (auto-resume would miss the newest —
+        # or only — checkpoint), so join any pending writer first.
+        self.wait()
         ckpts = sorted(self.dir.glob("step_*"))
         if not ckpts:
             return None

@@ -1,0 +1,559 @@
+"""Batched ablation-sweep engine for the Ara simulator.
+
+`AraSimulator.run` walks one `(kernel, opt, params)` cell at a time in
+scalar Python; the paper's artifacts (Fig. 3-5, Table I/II) and the
+calibration search all evaluate *grids* of such cells over the same traces.
+This module evaluates the full `(kernel x ablation x SimParams)` grid as a
+stacked array program:
+
+  * traces are padded into `(B, max_instrs)` struct-of-arrays form
+    (`repro.core.traces.stack_traces`);
+  * the per-instruction timing recurrence of `AraSimulator.run` is
+    refactored into a pure per-step transition (`hazard state -> hazard
+    state`) that is scanned over the instruction axis and broadcast over a
+    `width` axis holding every `(OptConfig, SimParams)` cell;
+  * register hazard state becomes dense `(regs, width)` arrays instead of
+    per-name dicts, because `stack_traces` interns register names.
+
+Two backends:
+
+  * ``numpy``  — float64, mirrors the scalar simulator operation-for-
+    operation, so cycles match `AraSimulator.run` bit-for-bit.  The scan
+    runs as a Python loop over instructions with all `(opt, params)` cells
+    advanced per step; wall-clock win grows with grid width (calibration
+    batches hundreds of candidates).
+  * ``jax``    — the same step as a traced function under `lax.scan` over
+    the padded instruction axis, all `(B, width)` cells in one compiled
+    program (float64 via `jax.experimental.enable_x64`).  Best for large
+    fixed-shape sweeps where compile time amortizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.isa import KernelTrace, MachineConfig, OptConfig
+from repro.core.simulator import SimParams
+from repro.core.traces import PAD, StackedTraces, stack_traces
+
+_LOAD, _STORE, _COMPUTE, _REDUCE, _SLIDE = 0, 1, 2, 3, 4
+_UNIT, _STRIDED, _INDEXED = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamView:
+    """Per-cell parameter views, one array entry per `(opt, params)` cell.
+
+    This is the batched analogue of `AraSimulator._view`: every field is a
+    `(width,)` float64 array (bools for the opt-class flags).
+    """
+    mem_latency: np.ndarray
+    prefetch_hit: np.ndarray
+    div_factor: np.ndarray
+    war_release_ovh: np.ndarray
+    tx_ovh: np.ndarray
+    idx_ovh: np.ndarray
+    rw_turn: np.ndarray
+    store_commit: np.ndarray
+    issue_gap: np.ndarray
+    d_chain: np.ndarray
+    conflict: np.ndarray
+    queue_adv: np.ndarray
+    opt_memory: np.ndarray             # bool: M class (also r/w split)
+    opt_control: np.ndarray            # bool: C class
+
+    @property
+    def width(self) -> int:
+        return len(self.mem_latency)
+
+
+def make_views(opts: Sequence[OptConfig],
+               params: Sequence[SimParams]) -> ParamView:
+    """Cross `opts` x `params` into flat per-cell views (opt-major)."""
+    cells = [(o, p) for o in opts for p in params]
+    f = lambda fn: np.array([fn(o, p) for o, p in cells], np.float64)
+    b = lambda fn: np.array([fn(o, p) for o, p in cells], bool)
+    return ParamView(
+        mem_latency=f(lambda o, p: p.mem_latency),
+        prefetch_hit=f(lambda o, p: p.prefetch_hit),
+        div_factor=f(lambda o, p: p.div_factor),
+        war_release_ovh=f(lambda o, p: p.war_release_ovh),
+        tx_ovh=f(lambda o, p: p.tx_ovh_opt if o.memory else p.tx_ovh_base),
+        idx_ovh=f(lambda o, p: p.idx_ovh_opt if o.memory else p.idx_ovh_base),
+        rw_turn=f(lambda o, p: p.rw_turnaround_opt if o.memory
+                  else p.rw_turnaround_base),
+        store_commit=f(lambda o, p: p.store_commit_opt if o.memory
+                       else p.store_commit_base),
+        issue_gap=f(lambda o, p: p.issue_gap_opt if o.control
+                    else p.issue_gap_base),
+        d_chain=f(lambda o, p: p.d_fwd if o.operand else p.d_chain_base),
+        conflict=f(lambda o, p: 1.0 + (p.conflict_opt if o.operand
+                                       else p.conflict_base)),
+        queue_adv=f(lambda o, p: p.queue_adv_opt if o.operand
+                    else p.queue_adv_base),
+        opt_memory=b(lambda o, p: o.memory),
+        opt_control=b(lambda o, p: o.control),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchResult:
+    """Grid results: axis 0 = trace, axis 1 = opt, axis 2 = params."""
+    names: tuple[str, ...]
+    cycles: np.ndarray                 # (B, O, P)
+    busy_fpu: np.ndarray               # (B, O, P)
+    busy_bus: np.ndarray               # (B, O, P)
+    flops: np.ndarray                  # (B,)
+    bytes: np.ndarray                  # (B,)
+
+    @property
+    def gflops(self) -> np.ndarray:
+        return self.flops[:, None, None] / np.maximum(self.cycles, 1e-9)
+
+    @property
+    def lane_utilization(self) -> np.ndarray:
+        return self.busy_fpu / np.maximum(self.cycles, 1e-9)
+
+    @property
+    def bus_utilization(self) -> np.ndarray:
+        return self.busy_bus / np.maximum(self.cycles, 1e-9)
+
+    def speedup_vs(self, base_opt: int = 0) -> np.ndarray:
+        """Per-cell speedup relative to opt column `base_opt`."""
+        return self.cycles[:, base_opt:base_opt + 1, :] / self.cycles
+
+
+class BatchAraSimulator:
+    """Evaluate `(traces x opts x params)` grids in one batched call."""
+
+    def __init__(self, mc: MachineConfig = MachineConfig()):
+        self.mc = mc
+        self._jax_fn = None
+
+    # -- public API ---------------------------------------------------------
+    def run(self, stacked: StackedTraces, opts: Sequence[OptConfig],
+            params: SimParams | Sequence[SimParams] = SimParams(),
+            backend: str = "numpy") -> BatchResult:
+        if isinstance(params, SimParams):
+            params = [params]
+        opts = list(opts)
+        params = list(params)
+        view = make_views(opts, params)
+        if backend == "numpy":
+            cyc, bf, bb = self._run_numpy(stacked, view)
+        elif backend == "jax":
+            cyc, bf, bb = self._run_jax(stacked, view)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        shape = (stacked.batch, len(opts), len(params))
+        return BatchResult(names=stacked.names,
+                           cycles=cyc.reshape(shape),
+                           busy_fpu=bf.reshape(shape),
+                           busy_bus=bb.reshape(shape),
+                           flops=stacked.total_flops.astype(np.float64),
+                           bytes=stacked.total_bytes.astype(np.float64))
+
+    def sweep(self, traces: Sequence[KernelTrace],
+              opts: Sequence[OptConfig],
+              params: SimParams | Sequence[SimParams] = SimParams(),
+              backend: str = "numpy") -> BatchResult:
+        return self.run(stack_traces(traces), opts, params, backend=backend)
+
+    # -- numpy backend ------------------------------------------------------
+    def _run_numpy(self, st: StackedTraces, v: ParamView):
+        W = v.width
+        cycles = np.zeros((st.batch, W))
+        busy_fpu = np.zeros((st.batch, W))
+        busy_bus = np.zeros((st.batch, W))
+        for b in range(st.batch):
+            cycles[b], busy_fpu[b], busy_bus[b] = self._scan_row_numpy(
+                st, b, v)
+        return cycles, busy_fpu, busy_bus
+
+    def _scan_row_numpy(self, st: StackedTraces, b: int, v: ParamView):
+        """Scan one trace row; hazard state is `(width,)`-vectorized.
+
+        Mirrors `AraSimulator.run` operation-for-operation in float64, so
+        results are bit-identical to the scalar simulator.
+        """
+        mc = self.mc
+        epc = mc.elems_per_cycle
+        bpc = mc.axi_bytes_per_cycle
+        burst_over_bpc = mc.burst_bytes / bpc
+        n = int(st.n_instrs[b])
+        R = max(int(st.n_regs[b]), 1)
+        W = v.width
+
+        # Cheap python-scalar access to the row's instruction fields.
+        kind = st.kind[b, :n].tolist()
+        vls = st.vl[b, :n].tolist()
+        sews = st.sew[b, :n].tolist()
+        nbs = st.nbytes[b, :n].tolist()
+        strides = st.stride[b, :n].tolist()
+        firsts = st.first_strip[b, :n].tolist()
+        isdivs = st.is_div[b, :n].tolist()
+        redlvs = st.red_levels[b, :n].tolist()
+        dsts = st.dst[b, :n].tolist()
+        src_rows = [[s for s in row if s != PAD]
+                    for row in st.srcs[b, :n].tolist()]
+
+        issue_t = np.zeros(W)
+        bus_free = np.zeros(W)
+        wbus_free = np.zeros(W)
+        addr_free = np.zeros(W)
+        fpu_free = np.zeros(W)
+        sldu_free = np.zeros(W)
+        bus_last = -1                              # trace-deterministic
+        w_first = np.zeros((R, W))
+        w_compl = np.zeros((R, W))
+        has_w = [False] * R
+        r_rel = np.zeros((R, W))
+        busy_fpu = np.zeros(W)
+        busy_bus = np.zeros(W)
+        total = np.zeros(W)
+        zero = np.zeros(W)
+
+        opt_m, opt_c = v.opt_memory, v.opt_control
+        lat_demand = v.mem_latency
+        lat_warm_unit = np.where(opt_m, v.prefetch_hit, v.mem_latency)
+        lat_warm_str = np.where(
+            opt_m, 0.5 * (v.mem_latency + v.prefetch_hit), v.mem_latency)
+
+        for i in range(n):
+            k = kind[i]
+            vl = vls[i]
+            dst = dsts[i]
+            srcs = src_rows[i]
+
+            # ---- dependence constraints (lane side) --------------------
+            raw_start = issue_t.copy()
+            raw_complete = zero.copy()
+            for s in srcs:
+                if has_w[s]:
+                    np.maximum(raw_start, w_first[s] + v.d_chain,
+                               out=raw_start)
+                    np.maximum(raw_complete, w_compl[s] + v.d_chain,
+                               out=raw_complete)
+            war_gate = zero.copy()
+            if dst >= 0:
+                np.maximum(war_gate, r_rel[dst], out=war_gate)   # WAR
+                if has_w[dst]:
+                    np.maximum(war_gate, w_first[dst], out=war_gate)  # WAW
+
+            # ---- execute on resource ----------------------------------
+            if k == _LOAD:
+                if strides[i] == _INDEXED:
+                    dur_bus = vl * (sews[i] / bpc) + vl * v.idx_ovh
+                else:
+                    nburst = max(1, -(-nbs[i] // mc.burst_bytes))
+                    dur_bus = nbs[i] / bpc + nburst * v.tx_ovh
+                turn = v.rw_turn if bus_last == _STORE else zero
+                req_start = np.maximum(issue_t, raw_start)
+                np.maximum(req_start, addr_free, out=req_start)
+                np.maximum(req_start, bus_free + turn, out=req_start)
+                np.maximum(req_start, war_gate, out=req_start)
+                if strides[i] == _UNIT:
+                    lat = lat_demand if firsts[i] else lat_warm_unit
+                elif strides[i] == _STRIDED:
+                    lat = lat_demand if firsts[i] else lat_warm_str
+                else:
+                    lat = lat_demand
+                data_done = req_start + lat + dur_bus
+                first_out = np.maximum(req_start + lat + burst_over_bpc,
+                                       war_gate)
+                complete = np.maximum(data_done, war_gate + vl / epc)
+                read_done = req_start
+                bus_free = req_start + dur_bus
+                addr_free = np.where(opt_m, req_start, req_start + dur_bus)
+                bus_last = _LOAD
+                busy_bus += dur_bus
+
+            elif k == _STORE:
+                if strides[i] == _INDEXED:
+                    dur_bus = vl * (sews[i] / bpc) + vl * v.idx_ovh
+                else:
+                    nburst = max(1, -(-nbs[i] // mc.burst_bytes))
+                    dur_bus = nbs[i] / bpc + nburst * v.tx_ovh
+                # split (M) path
+                bs_split = np.maximum(raw_start, war_gate)
+                np.maximum(bs_split, addr_free, out=bs_split)
+                np.maximum(bs_split, wbus_free, out=bs_split)
+                # unified path
+                turn = v.rw_turn if bus_last == _LOAD else zero
+                bs_uni = np.maximum(raw_start, war_gate)
+                np.maximum(bs_uni, addr_free, out=bs_uni)
+                np.maximum(bs_uni, bus_free + turn, out=bs_uni)
+                busy_start = np.where(opt_m, bs_split, bs_uni)
+                wbus_free = np.where(opt_m, bs_split + dur_bus, wbus_free)
+                bus_free = np.where(
+                    opt_m, np.maximum(bus_free, bs_split) + dur_bus,
+                    bs_uni + dur_bus + v.store_commit)
+                complete = np.maximum(busy_start + dur_bus + v.mem_latency,
+                                      raw_complete)
+                first_out = complete
+                read_done = np.maximum(busy_start + vl / epc,
+                                       busy_start + dur_bus - v.queue_adv)
+                addr_free = np.where(opt_m, busy_start,
+                                     busy_start + dur_bus)
+                bus_last = _STORE
+                busy_bus += dur_bus
+
+            else:                                  # COMPUTE/REDUCE/SLIDE
+                if isdivs[i]:
+                    dur = (vl / epc) * v.div_factor
+                else:
+                    dur = (vl / epc) * v.conflict
+                if k == _REDUCE:
+                    dur = dur + redlvs[i] * mc.fu_latency
+                unit_free = sldu_free if k == _SLIDE else fpu_free
+                busy_start = np.maximum(raw_start, war_gate)
+                np.maximum(busy_start, unit_free, out=busy_start)
+                complete = np.maximum(busy_start + mc.fu_latency + dur,
+                                      raw_complete)
+                if k == _REDUCE:
+                    first_out = complete
+                else:
+                    first_out = busy_start + mc.fu_latency
+                read_done = np.maximum(
+                    busy_start + vl / epc,
+                    complete - mc.fu_latency - v.queue_adv)
+                occ = np.maximum(busy_start + dur,
+                                 complete - mc.fu_latency)
+                if k == _SLIDE:
+                    sldu_free = occ
+                else:
+                    fpu_free = occ
+                    busy_fpu += vl / epc
+
+            # ---- update hazard state ----------------------------------
+            issue_t = issue_t + v.issue_gap
+            if dst >= 0:
+                w_first[dst] = first_out
+                w_compl[dst] = complete
+                has_w[dst] = True
+            if srcs:
+                release = np.where(opt_c, read_done,
+                                   complete + v.war_release_ovh)
+                for s in srcs:
+                    np.maximum(r_rel[s], release, out=r_rel[s])
+            np.maximum(total, complete, out=total)
+
+        return total, busy_fpu, busy_bus
+
+    # -- jax backend --------------------------------------------------------
+    def _run_jax(self, st: StackedTraces, v: ParamView):
+        from jax.experimental import enable_x64
+        with enable_x64():
+            if self._jax_fn is None:
+                self._jax_fn = _build_jax_sweep(self.mc)
+            fields = _jax_fields(st)
+            views = dataclasses.astuple(v)
+            R = max(st.max_regs, 1)
+            cyc, bf, bb = self._jax_fn(fields, views, R)
+        return np.asarray(cyc), np.asarray(bf), np.asarray(bb)
+
+
+def _jax_fields(st: StackedTraces) -> tuple:
+    """Instruction-major `(I, B)` field arrays for `lax.scan`."""
+    t = lambda a, dt: np.ascontiguousarray(a.T.astype(dt))
+    return (t(st.kind, np.int32), t(st.vl, np.float64),
+            t(st.sew, np.float64), t(st.nbytes, np.float64),
+            t(st.stride, np.int32), t(st.first_strip, bool),
+            t(st.is_div, bool), t(st.red_levels, np.float64),
+            t(st.dst, np.int32),
+            np.ascontiguousarray(np.swapaxes(st.srcs, 0, 1)
+                                 .astype(np.int32)))
+
+
+def _build_jax_sweep(mc: MachineConfig):
+    """Compile the per-step recurrence as `lax.scan` over instructions.
+
+    State lives as `(B, W)` / `(B, R, W)` arrays; one call evaluates the
+    whole `(trace x opt x params)` grid.  Padded instruction slots
+    (`kind == PAD`) leave state untouched.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    epc = float(mc.elems_per_cycle)
+    bpc = float(mc.axi_bytes_per_cycle)
+    burst = float(mc.burst_bytes)
+    ful = float(mc.fu_latency)
+
+    def sweep(fields, views, R):
+        (kind, vl, sew, nb, stride, first, isdiv, redlv, dst, srcs) = fields
+        (mem_lat, pf_hit, div_f, war_ovh, tx_ovh, idx_ovh, rw_turn,
+         store_commit, issue_gap, d_chain, conflict, queue_adv,
+         opt_m, opt_c) = (jnp.asarray(x) for x in views)
+        B = kind.shape[1]
+        W = mem_lat.shape[0]
+        S = srcs.shape[2]
+        fz = jnp.zeros((B, W), jnp.float64)
+        opt_m2 = opt_m[None, :]
+        opt_c2 = opt_c[None, :]
+
+        state = dict(
+            issue_t=fz, bus_free=fz, wbus_free=fz, addr_free=fz,
+            fpu_free=fz, sldu_free=fz, busy_fpu=fz, busy_bus=fz, total=fz,
+            bus_last=jnp.full((B,), -1, jnp.int32),
+            w_first=jnp.zeros((B, R, W), jnp.float64),
+            w_compl=jnp.zeros((B, R, W), jnp.float64),
+            has_w=jnp.zeros((B, R), bool),
+            r_rel=jnp.zeros((B, R, W), jnp.float64),
+        )
+
+        def gather(tab, idx):                      # (B,R,W),(B,) -> (B,W)
+            return jnp.take_along_axis(
+                tab, idx[:, None, None], axis=1)[:, 0, :]
+
+        def step(s, x):
+            (k, vl_i, sew_i, nb_i, str_i, fs_i, dv_i, rl_i, d_i, sr_i) = x
+            valid = (k != PAD)[:, None]            # (B, 1)
+            is_load = (k == _LOAD)[:, None]
+            is_store = (k == _STORE)[:, None]
+            is_red = (k == _REDUCE)[:, None]
+            is_slide = (k == _SLIDE)[:, None]
+            vl2 = vl_i[:, None]
+
+            # ---- dependence constraints -------------------------------
+            raw_start = s["issue_t"]
+            raw_complete = fz
+            for j in range(S):
+                src = sr_i[:, j]
+                srcc = jnp.clip(src, 0, R - 1)
+                ok = ((src >= 0) &
+                      jnp.take_along_axis(s["has_w"], srcc[:, None],
+                                          axis=1)[:, 0])[:, None]
+                raw_start = jnp.where(
+                    ok, jnp.maximum(raw_start,
+                                    gather(s["w_first"], srcc) + d_chain),
+                    raw_start)
+                raw_complete = jnp.where(
+                    ok, jnp.maximum(raw_complete,
+                                    gather(s["w_compl"], srcc) + d_chain),
+                    raw_complete)
+            dstc = jnp.clip(d_i, 0, R - 1)
+            has_dst = (d_i >= 0)[:, None]
+            dst_has_w = jnp.take_along_axis(s["has_w"], dstc[:, None],
+                                            axis=1)
+            war_gate = jnp.where(has_dst, gather(s["r_rel"], dstc), 0.0)
+            war_gate = jnp.where(
+                has_dst & dst_has_w,
+                jnp.maximum(war_gate, gather(s["w_first"], dstc)), war_gate)
+
+            # ---- memory-op shared quantities --------------------------
+            nburst = jnp.maximum(1.0, jnp.ceil(nb_i / burst))[:, None]
+            dur_bus = jnp.where((str_i == _INDEXED)[:, None],
+                                vl2 * (sew_i[:, None] / bpc) + vl2 * idx_ovh,
+                                nb_i[:, None] / bpc + nburst * tx_ovh)
+            # ---- LOAD path --------------------------------------------
+            turn_l = jnp.where((s["bus_last"] == _STORE)[:, None],
+                               rw_turn, 0.0)
+            req = jnp.maximum(s["issue_t"], raw_start)
+            req = jnp.maximum(req, s["addr_free"])
+            req = jnp.maximum(req, s["bus_free"] + turn_l)
+            req = jnp.maximum(req, war_gate)
+            lat_unit = jnp.where(fs_i[:, None], mem_lat, pf_hit)
+            lat_str = jnp.where(fs_i[:, None], mem_lat,
+                                0.5 * (mem_lat + pf_hit))
+            lat_m = jnp.where((str_i == _UNIT)[:, None], lat_unit,
+                              jnp.where((str_i == _STRIDED)[:, None],
+                                        lat_str, mem_lat))
+            lat = jnp.where(opt_m2, lat_m, mem_lat)
+            data_done = req + lat + dur_bus
+            fo_l = jnp.maximum(req + lat + burst / bpc, war_gate)
+            cp_l = jnp.maximum(data_done, war_gate + vl2 / epc)
+            rd_l = req
+            busf_l = req + dur_bus
+            addr_l = jnp.where(opt_m2, req, req + dur_bus)
+            # ---- STORE path -------------------------------------------
+            bs_split = jnp.maximum(raw_start, war_gate)
+            bs_split = jnp.maximum(bs_split, s["addr_free"])
+            bs_split = jnp.maximum(bs_split, s["wbus_free"])
+            turn_s = jnp.where((s["bus_last"] == _LOAD)[:, None],
+                               rw_turn, 0.0)
+            bs_uni = jnp.maximum(raw_start, war_gate)
+            bs_uni = jnp.maximum(bs_uni, s["addr_free"])
+            bs_uni = jnp.maximum(bs_uni, s["bus_free"] + turn_s)
+            bs_s = jnp.where(opt_m2, bs_split, bs_uni)
+            wbus_s = jnp.where(opt_m2, bs_split + dur_bus, s["wbus_free"])
+            busf_s = jnp.where(
+                opt_m2, jnp.maximum(s["bus_free"], bs_split) + dur_bus,
+                bs_uni + dur_bus + store_commit)
+            cp_s = jnp.maximum(bs_s + dur_bus + mem_lat, raw_complete)
+            rd_s = jnp.maximum(bs_s + vl2 / epc,
+                               bs_s + dur_bus - queue_adv)
+            addr_s = jnp.where(opt_m2, bs_s, bs_s + dur_bus)
+            # ---- COMPUTE/REDUCE/SLIDE path ----------------------------
+            dur_c = jnp.where(dv_i[:, None], (vl2 / epc) * div_f,
+                              (vl2 / epc) * conflict) + rl_i[:, None] * ful
+            unit_free = jnp.where(is_slide, s["sldu_free"], s["fpu_free"])
+            bs_c = jnp.maximum(jnp.maximum(raw_start, war_gate), unit_free)
+            cp_c = jnp.maximum(bs_c + ful + dur_c, raw_complete)
+            fo_c = jnp.where(is_red, cp_c, bs_c + ful)
+            rd_c = jnp.maximum(bs_c + vl2 / epc, cp_c - ful - queue_adv)
+            occ = jnp.maximum(bs_c + dur_c, cp_c - ful)
+
+            # ---- select by kind & merge -------------------------------
+            busy_start = jnp.where(is_load, req,
+                                   jnp.where(is_store, bs_s, bs_c))
+            complete = jnp.where(is_load, cp_l,
+                                 jnp.where(is_store, cp_s, cp_c))
+            first_out = jnp.where(is_load, fo_l,
+                                  jnp.where(is_store, cp_s, fo_c))
+            read_done = jnp.where(is_load, rd_l,
+                                  jnp.where(is_store, rd_s, rd_c))
+            is_mem = is_load | is_store
+            upd = lambda new, old, cond: jnp.where(valid & cond, new, old)
+            ns = dict(s)
+            ns["bus_free"] = upd(jnp.where(is_load, busf_l, busf_s),
+                                 s["bus_free"], is_mem)
+            ns["addr_free"] = upd(jnp.where(is_load, addr_l, addr_s),
+                                  s["addr_free"], is_mem)
+            ns["wbus_free"] = upd(wbus_s, s["wbus_free"], is_store)
+            ns["busy_bus"] = upd(s["busy_bus"] + dur_bus,
+                                 s["busy_bus"], is_mem)
+            is_comp = valid & ~is_mem
+            ns["sldu_free"] = jnp.where(is_comp & is_slide, occ,
+                                        s["sldu_free"])
+            ns["fpu_free"] = jnp.where(is_comp & ~is_slide, occ,
+                                       s["fpu_free"])
+            ns["busy_fpu"] = jnp.where(is_comp & ~is_slide,
+                                       s["busy_fpu"] + vl2 / epc,
+                                       s["busy_fpu"])
+            ns["bus_last"] = jnp.where(
+                (valid & is_mem)[:, 0],
+                jnp.where(is_load[:, 0], _LOAD, _STORE), s["bus_last"])
+            ns["issue_t"] = jnp.where(valid, s["issue_t"] + issue_gap,
+                                      s["issue_t"])
+            # writer / reader-release scatter via one-hot rows
+            oh_dst = (jnp.arange(R)[None, :] == dstc[:, None]) \
+                & (valid & has_dst)
+            ns["w_first"] = jnp.where(oh_dst[:, :, None],
+                                      first_out[:, None, :], s["w_first"])
+            ns["w_compl"] = jnp.where(oh_dst[:, :, None],
+                                      complete[:, None, :], s["w_compl"])
+            ns["has_w"] = s["has_w"] | oh_dst
+            release = jnp.where(opt_c2, read_done,
+                                complete + war_ovh)
+            r_rel = s["r_rel"]
+            for j in range(S):
+                src = sr_i[:, j]
+                srcc = jnp.clip(src, 0, R - 1)
+                oh = (jnp.arange(R)[None, :] == srcc[:, None]) \
+                    & (valid & (src >= 0)[:, None])
+                r_rel = jnp.where(
+                    oh[:, :, None],
+                    jnp.maximum(r_rel, release[:, None, :]), r_rel)
+            ns["r_rel"] = r_rel
+            ns["total"] = jnp.where(valid, jnp.maximum(s["total"], complete),
+                                    s["total"])
+            return ns, None
+
+        final, _ = lax.scan(step, state, fields)
+        return final["total"], final["busy_fpu"], final["busy_bus"]
+
+    return jax.jit(sweep, static_argnums=(2,))

@@ -10,8 +10,12 @@ depths) to the paper's measurements:
             Table I single-class ablation columns for scal/axpy/gemm/dotp
             (weight 0.5 — structural, keeps M/C/O attribution honest).
 
-Search: seeded random search followed by coordinate refinement.  The result
-is written to ``src/repro/configs/ara_calibrated.json`` and loaded by
+Search: seeded random search followed by coordinate refinement.  Every
+candidate population is scored by ONE batched evaluation of the
+`(kernel x config x candidate)` grid through
+`repro.core.batch_sim.BatchAraSimulator` — the simulator is never invoked
+one scalar cell at a time.  The result is written to
+``src/repro/configs/ara_calibrated.json`` and loaded by
 ``repro.configs.ara``.  Fidelity is reported in EXPERIMENTS.md.
 """
 from __future__ import annotations
@@ -21,12 +25,14 @@ import json
 import math
 import pathlib
 import random
+from typing import Sequence
 
 from repro.core import paper
+from repro.core.batch_sim import BatchAraSimulator
 from repro.core.isa import OptConfig, geomean
 from repro.core.roofline import normalized
-from repro.core.simulator import AraSimulator, SimParams
-from repro.core.traces import DEFAULT_TRACES
+from repro.core.simulator import SimParams
+from repro.core.traces import DEFAULT_TRACES, stack_traces
 
 # Parameter search space: (name, lo, hi).  tx_ovh is bounded low because
 # back-to-back unit-stride loads stream efficiently even in baseline Ara
@@ -62,35 +68,51 @@ ABL_SINGLES = {"M": OptConfig(True, False, False),
 CAL_PATH = pathlib.Path(__file__).resolve().parents[1] / "configs" / \
     "ara_calibrated.json"
 
+# Config axis of the calibration grid: every column the loss reads.
+_CONFIGS: tuple[OptConfig, ...] = (
+    OptConfig.baseline(), OptConfig.full(), *ABL_SINGLES.values())
+_ABL_COL = {label: 2 + i for i, label in enumerate(ABL_SINGLES)}
+
 
 def _traces():
     return {k: fn() for k, fn in DEFAULT_TRACES.items()}
 
 
+def evaluate_many(params_list: Sequence[SimParams],
+                  traces=None) -> list[dict]:
+    """Score many candidates with one batched `(kernel x config x
+    candidate)` sweep; returns one metrics dict per candidate."""
+    traces = traces or _traces()
+    names = list(traces)
+    stacked = stack_traces([traces[k] for k in names])
+    res = BatchAraSimulator().run(stacked, _CONFIGS, list(params_list))
+    cycles = res.cycles                        # (kernel, config, candidate)
+    gflops = res.gflops
+
+    outs = []
+    for ci in range(cycles.shape[2]):
+        out = {"speedup": {}, "norm_base": {}, "norm_opt": {},
+               "ablation": {}}
+        for ki, name in enumerate(names):
+            oi = traces[name].operational_intensity
+            out["speedup"][name] = cycles[ki, 0, ci] / cycles[ki, 1, ci]
+            out["norm_base"][name] = normalized(gflops[ki, 0, ci], oi)
+            out["norm_opt"][name] = normalized(gflops[ki, 1, ci], oi)
+        for name in ABL_KERNELS:
+            ki = names.index(name)
+            out["ablation"][name] = {
+                label: cycles[ki, 0, ci] / cycles[ki, col, ci]
+                for label, col in _ABL_COL.items()}
+        out["geomean_speedup"] = geomean(list(out["speedup"].values()))
+        out["geomean_norm_base"] = geomean(list(out["norm_base"].values()))
+        out["geomean_norm_opt"] = geomean(list(out["norm_opt"].values()))
+        outs.append(out)
+    return outs
+
+
 def evaluate(params: SimParams, traces=None) -> dict:
     """Simulate everything the loss needs; returns a metrics dict."""
-    traces = traces or _traces()
-    sim = AraSimulator(params=params)
-    out = {"speedup": {}, "norm_base": {}, "norm_opt": {}, "ablation": {}}
-    base_cycles = {}
-    for name, tr in traces.items():
-        b = sim.run(tr, OptConfig.baseline())
-        o = sim.run(tr, OptConfig.full())
-        base_cycles[name] = b.cycles
-        out["speedup"][name] = b.cycles / o.cycles
-        oi = tr.operational_intensity
-        out["norm_base"][name] = normalized(b.gflops, oi)
-        out["norm_opt"][name] = normalized(o.gflops, oi)
-    for name in ABL_KERNELS:
-        tr = traces[name]
-        row = {}
-        for label, cfg in ABL_SINGLES.items():
-            row[label] = base_cycles[name] / sim.run(tr, cfg).cycles
-        out["ablation"][name] = row
-    out["geomean_speedup"] = geomean(list(out["speedup"].values()))
-    out["geomean_norm_base"] = geomean(list(out["norm_base"].values()))
-    out["geomean_norm_opt"] = geomean(list(out["norm_opt"].values()))
-    return out
+    return evaluate_many([params], traces)[0]
 
 
 def loss(metrics: dict) -> float:
@@ -108,12 +130,14 @@ def loss(metrics: dict) -> float:
     return err
 
 
-def _loss_of(vals: dict, traces) -> float:
-    return loss(evaluate(SimParams(**vals), traces))
+def _losses_of(candidates: Sequence[dict], traces) -> list[float]:
+    params = [SimParams(**vals) for vals in candidates]
+    return [loss(m) for m in evaluate_many(params, traces)]
 
 
 def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
-              verbose: bool = True) -> tuple[SimParams, float]:
+              verbose: bool = True, chunk: int = 64
+              ) -> tuple[SimParams, float]:
     rng = random.Random(seed)
     traces = _traces()
     defaults = dataclasses.asdict(SimParams())
@@ -127,26 +151,31 @@ def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
 
     best_vals = dict(defaults, **SEED_CANDIDATE)
     best_vals["idx_ovh_opt"] = 0.9 * best_vals["idx_ovh_base"]
-    best = _loss_of(best_vals, traces)
+    best = _losses_of([best_vals], traces)[0]
     if verbose:
         print(f"[seed] loss={best:.4f}")
-    for i in range(iters):
-        vals = sample()
-        l = _loss_of(vals, traces)
-        if l < best:
-            best, best_vals = l, vals
-            if verbose:
-                print(f"[{i:4d}] loss={best:.4f}")
-    # Coordinate refinement.
+    # Random search, `chunk` candidates per batched evaluation.
+    done = 0
+    while done < iters:
+        cands = [sample() for _ in range(min(chunk, iters - done))]
+        for off, l in enumerate(_losses_of(cands, traces)):
+            if l < best:
+                best, best_vals = l, cands[off]
+                if verbose:
+                    print(f"[{done + off:4d}] loss={best:.4f}")
+        done += len(cands)
+    # Coordinate refinement: per parameter, all scale factors in one batch.
     for _ in range(refine_rounds):
         for name, lo, hi in SPACE:
             cur = best_vals[name]
+            cands = []
             for f in (0.5, 0.75, 0.9, 1.1, 1.33, 2.0):
                 cand = dict(best_vals)
                 cand[name] = min(hi, max(lo, cur * f))
                 if name == "idx_ovh_base":
                     cand["idx_ovh_opt"] = 0.9 * cand[name]
-                l = _loss_of(cand, traces)
+                cands.append(cand)
+            for cand, l in zip(cands, _losses_of(cands, traces)):
                 if l < best:
                     best, best_vals = l, cand
         if verbose:
@@ -172,8 +201,10 @@ def main() -> None:  # pragma: no cover - CLI
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=400)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunk", type=int, default=64)
     args = ap.parse_args()
-    params, best = calibrate(iters=args.iters, seed=args.seed)
+    params, best = calibrate(iters=args.iters, seed=args.seed,
+                             chunk=args.chunk)
     save(params, best)
     metrics = evaluate(params)
     print(json.dumps({"loss": best,

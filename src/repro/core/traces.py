@@ -16,13 +16,120 @@ Default problem sizes follow Fig. 3: N=1024 for 1-D kernels, 32x128 gemv,
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Callable
+from typing import Callable, Sequence
+
+import numpy as np
 
 from repro.core.isa import (KernelTrace, MachineConfig, OpKind, Stride,
                             VInstr, strips, vlmax_for)
 
 Trace = KernelTrace
+
+# Integer codes for the struct-of-arrays trace form (core/batch_sim.py).
+KIND_CODE = {OpKind.LOAD: 0, OpKind.STORE: 1, OpKind.COMPUTE: 2,
+             OpKind.REDUCE: 3, OpKind.SLIDE: 4}
+STRIDE_CODE = {Stride.UNIT: 0, Stride.STRIDED: 1, Stride.INDEXED: 2}
+PAD = -1                               # padding value for kind/dst/srcs
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedTraces:
+    """`B` kernel traces padded to `(B, max_instrs)` struct-of-arrays form.
+
+    Register names are interned per trace into dense indices so hazard
+    state (last writer / reader release) becomes a `(batch, R)` array in
+    the batched simulator instead of a per-name dict.  Padding cells have
+    ``kind == PAD`` and must never touch simulator state.
+    """
+    names: tuple[str, ...]             # (B,) kernel names
+    n_instrs: np.ndarray               # (B,) int32 valid prefix length
+    kind: np.ndarray                   # (B, I) int8, KIND_CODE or PAD
+    vl: np.ndarray                     # (B, I) int32
+    sew: np.ndarray                    # (B, I) int32
+    nbytes: np.ndarray                 # (B, I) int64 (memory ops else 0)
+    stride: np.ndarray                 # (B, I) int8, STRIDE_CODE
+    first_strip: np.ndarray            # (B, I) bool
+    is_div: np.ndarray                 # (B, I) bool (non-pipelined divide)
+    red_levels: np.ndarray             # (B, I) int32 ceil(log2(max(vl,2)))
+    dst: np.ndarray                    # (B, I) int16 register index or PAD
+    srcs: np.ndarray                   # (B, I, S) int16 register idx or PAD
+    n_regs: np.ndarray                 # (B,) int32 distinct registers
+    total_flops: np.ndarray            # (B,) int64
+    total_bytes: np.ndarray            # (B,) int64
+
+    @property
+    def batch(self) -> int:
+        return len(self.names)
+
+    @property
+    def max_instrs(self) -> int:
+        return self.kind.shape[1]
+
+    @property
+    def max_srcs(self) -> int:
+        return self.srcs.shape[2]
+
+    @property
+    def max_regs(self) -> int:
+        return int(self.n_regs.max()) if len(self.n_regs) else 0
+
+
+def stack_traces(traces: Sequence[KernelTrace]) -> StackedTraces:
+    """Pad/stack kernel traces into the batched struct-of-arrays form."""
+    B = len(traces)
+    I = max((len(t.instrs) for t in traces), default=0)
+    S = max((len(i.srcs) for t in traces for i in t.instrs), default=1)
+    S = max(S, 1)
+
+    n_instrs = np.zeros(B, np.int32)
+    kind = np.full((B, I), PAD, np.int8)
+    vl = np.zeros((B, I), np.int32)
+    sew = np.zeros((B, I), np.int32)
+    nbytes = np.zeros((B, I), np.int64)
+    stride = np.zeros((B, I), np.int8)
+    first_strip = np.zeros((B, I), bool)
+    is_div = np.zeros((B, I), bool)
+    red_levels = np.zeros((B, I), np.int32)
+    dst = np.full((B, I), PAD, np.int16)
+    srcs = np.full((B, I, S), PAD, np.int16)
+    n_regs = np.zeros(B, np.int32)
+    total_flops = np.zeros(B, np.int64)
+    total_bytes = np.zeros(B, np.int64)
+
+    for b, tr in enumerate(traces):
+        regs: dict[str, int] = {}
+
+        def idx(name: str) -> int:
+            return regs.setdefault(name, len(regs))
+
+        n_instrs[b] = len(tr.instrs)
+        total_flops[b] = tr.total_flops
+        total_bytes[b] = tr.total_bytes
+        for i, ins in enumerate(tr.instrs):
+            kind[b, i] = KIND_CODE[ins.kind]
+            vl[b, i] = ins.vl
+            sew[b, i] = ins.sew
+            nbytes[b, i] = ins.bytes
+            stride[b, i] = STRIDE_CODE[ins.stride]
+            first_strip[b, i] = ins.first_strip
+            is_div[b, i] = ins.name.startswith("vfdiv")
+            if ins.kind is OpKind.REDUCE:
+                red_levels[b, i] = math.ceil(math.log2(max(ins.vl, 2)))
+            if ins.dst is not None:
+                dst[b, i] = idx(ins.dst)
+            for s, name in enumerate(ins.srcs):
+                srcs[b, i, s] = idx(name)
+        n_regs[b] = len(regs)
+
+    return StackedTraces(names=tuple(t.name for t in traces),
+                         n_instrs=n_instrs, kind=kind, vl=vl, sew=sew,
+                         nbytes=nbytes, stride=stride,
+                         first_strip=first_strip, is_div=is_div,
+                         red_levels=red_levels, dst=dst, srcs=srcs,
+                         n_regs=n_regs, total_flops=total_flops,
+                         total_bytes=total_bytes)
 
 
 def _mk(name, kind, vl, *, dst=None, srcs=(), stride=Stride.UNIT, fpe=0,

@@ -1,0 +1,135 @@
+"""Content-addressed result cache for ablation-sweep cells.
+
+Every benchmark (fig3-fig5, table1/table2) and the calibration loss walk
+the same `(trace, OptConfig, SimParams)` cells; this cache keys each cell
+on a sha256 over the *content* that determines its result — the full
+instruction stream, the machine config, the opt flags, and the timing
+parameters — so any consumer that asks for the same cell gets the stored
+numbers back instead of re-simulating.  Keys are content hashes, not
+names: regenerating a trace with different sizes (or editing the
+simulator's parameters) changes the key and transparently misses.
+
+Values hold only the scalar outputs (cycles, busy counters, roofline
+accounting), not per-instruction timings, so cells stay a few hundred
+bytes each.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+from typing import Iterable
+
+from repro.core.isa import KernelTrace, MachineConfig, OptConfig
+from repro.core.simulator import SimParams, SimResult
+
+_REPO = pathlib.Path(__file__).resolve().parents[3]
+DEFAULT_ROOT = _REPO / "experiments" / "sweep_cache"
+
+#: Bump on cache-layout changes.  Simulator *logic* is covered separately:
+#: _SIM_SOURCE_DIGEST folds the timing-model source into every key, so an
+#: edited model self-invalidates old cells instead of serving stale numbers.
+SCHEMA_VERSION = 1
+
+
+def _sim_source_digest() -> str:
+    import repro.core.batch_sim as _bs
+    import repro.core.simulator as _sim
+    h = hashlib.sha256()
+    for mod in (_sim, _bs):
+        h.update(pathlib.Path(mod.__file__).read_bytes())
+    return h.hexdigest()
+
+
+_SIM_SOURCE_DIGEST = _sim_source_digest()
+
+
+def trace_fingerprint(trace: KernelTrace) -> str:
+    """Content hash of a kernel trace (instruction stream + accounting)."""
+    h = hashlib.sha256()
+    h.update(f"{trace.total_flops}|{trace.total_bytes}".encode())
+    for ins in trace.instrs:
+        h.update(
+            f"{ins.name}|{ins.kind.value}|{ins.vl}|{ins.sew}|{ins.dst}|"
+            f"{','.join(ins.srcs)}|{ins.stride.value}|{ins.flops}|"
+            f"{ins.stream}|{ins.first_strip}".encode())
+    return h.hexdigest()
+
+
+def cell_key(trace: KernelTrace, opt: OptConfig,
+             params: SimParams = SimParams(),
+             mc: MachineConfig = MachineConfig(),
+             trace_fp: str | None = None) -> str:
+    """Content-addressed key for one `(trace, opt, params, machine)` cell.
+
+    `trace_fp` lets callers sweeping many opts per trace hash the
+    instruction stream once (`trace_fingerprint`) instead of per cell.
+    """
+    payload = {
+        "schema": SCHEMA_VERSION,
+        "sim": _SIM_SOURCE_DIGEST,
+        "trace": trace_fp or trace_fingerprint(trace),
+        "opt": [opt.memory, opt.control, opt.operand],
+        "params": dataclasses.asdict(params),
+        "mc": dataclasses.asdict(mc),
+    }
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+class SweepCache:
+    """Filesystem-backed cache of sweep cells, one JSON file per key."""
+
+    def __init__(self, root: str | os.PathLike | None = None):
+        self.root = pathlib.Path(root) if root is not None else DEFAULT_ROOT
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> pathlib.Path:
+        return self.root / key[:2] / f"{key}.json"
+
+    def get(self, key: str) -> dict | None:
+        p = self._path(key)
+        try:
+            value = json.loads(p.read_text())
+        except (FileNotFoundError, json.JSONDecodeError):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return value
+
+    def put(self, key: str, value: dict) -> None:
+        p = self._path(key)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_suffix(".tmp")
+        tmp.write_text(json.dumps(value, sort_keys=True))
+        os.replace(tmp, p)
+
+    def get_result(self, key: str, kernel: str) -> SimResult | None:
+        v = self.get(key)
+        if v is None:
+            return None
+        return SimResult(kernel=kernel, cycles=v["cycles"],
+                         flops=int(v["flops"]), bytes=int(v["bytes"]),
+                         timings=[], busy_fpu=v["busy_fpu"],
+                         busy_bus=v["busy_bus"])
+
+    def put_result(self, key: str, res: SimResult) -> None:
+        self.put(key, {"cycles": res.cycles, "flops": res.flops,
+                       "bytes": res.bytes, "busy_fpu": res.busy_fpu,
+                       "busy_bus": res.busy_bus})
+
+    def prune(self, keep_keys: Iterable[str] | None = None) -> int:
+        """Drop cells not in `keep_keys` (all cells when None); returns
+        the number of removed entries."""
+        keep = set(keep_keys or ())
+        removed = 0
+        if not self.root.exists():
+            return 0
+        for p in self.root.glob("*/*.json"):
+            if p.stem not in keep:
+                p.unlink(missing_ok=True)
+                removed += 1
+        return removed

@@ -1,0 +1,33 @@
+"""Optional-hypothesis shim for the test suite.
+
+The `[test]` extra installs hypothesis, but tier-1 must also pass in bare
+environments (the container image carries only runtime deps).  Importing
+`given`/`settings`/`st` from here keeps every non-property test collectable
+and runnable; property tests are skipped when hypothesis is missing.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (pip install -e .[test])"
+            )(fn)
+        return deco
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Stands in for `strategies`: any strategy call returns None,
+        which is fine because the test body never runs when skipped."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -1,0 +1,155 @@
+"""Batched sweep engine: parity with the scalar simulator + sweep cache."""
+import numpy as np
+import pytest
+
+from repro.core.batch_sim import BatchAraSimulator, make_views
+from repro.core.isa import ABLATION_GRID, OptConfig
+from repro.core.simulator import AraSimulator, SimParams
+from repro.core.traces import (DEFAULT_TRACES, PAD, axpy, dotp, scal,
+                               stack_traces)
+from repro.launch.sweep_cache import SweepCache, cell_key
+
+ALL_CORNERS = (OptConfig.baseline(), *ABLATION_GRID)       # 2^3 corners
+
+
+@pytest.fixture(scope="module")
+def paper_traces():
+    return {name: fn() for name, fn in DEFAULT_TRACES.items()}
+
+
+@pytest.fixture(scope="module")
+def scalar_grid(paper_traces):
+    sim = AraSimulator()
+    return {(name, opt.label): sim.run(tr, opt)
+            for name, tr in paper_traces.items() for opt in ALL_CORNERS}
+
+
+@pytest.fixture(scope="module")
+def batch_grid(paper_traces):
+    bsim = BatchAraSimulator()
+    return bsim.sweep(list(paper_traces.values()), ALL_CORNERS)
+
+
+def test_stack_traces_structure(paper_traces):
+    traces = list(paper_traces.values())
+    st = stack_traces(traces)
+    assert st.batch == len(traces)
+    assert st.max_instrs == max(len(t.instrs) for t in traces)
+    for b, tr in enumerate(traces):
+        n = int(st.n_instrs[b])
+        assert n == len(tr.instrs)
+        assert (st.kind[b, n:] == PAD).all()
+        assert (st.dst[b, :n] != PAD).sum() == \
+            sum(1 for i in tr.instrs if i.dst is not None)
+        assert int(st.total_flops[b]) == tr.total_flops
+
+
+def test_batch_matches_scalar_all_corners(paper_traces, scalar_grid,
+                                          batch_grid):
+    """Acceptance: every paper kernel x all 8 ablation corners within
+    1e-6 relative of `AraSimulator.run` (numpy backend is bit-exact)."""
+    for bi, name in enumerate(paper_traces):
+        for oi, opt in enumerate(ALL_CORNERS):
+            ref = scalar_grid[(name, opt.label)]
+            got = batch_grid.cycles[bi, oi, 0]
+            assert got == pytest.approx(ref.cycles, rel=1e-6), \
+                (name, opt.label)
+            assert batch_grid.busy_fpu[bi, oi, 0] == \
+                pytest.approx(ref.busy_fpu, rel=1e-6, abs=1e-9)
+            assert batch_grid.busy_bus[bi, oi, 0] == \
+                pytest.approx(ref.busy_bus, rel=1e-6, abs=1e-9)
+            assert batch_grid.gflops[bi, oi, 0] == \
+                pytest.approx(ref.gflops, rel=1e-6)
+
+
+def test_params_axis_matches_scalar():
+    traces = [scal(512), axpy(512)]
+    plist = [SimParams(), SimParams(mem_latency=90.0, issue_gap_base=5.0)]
+    res = BatchAraSimulator().sweep(traces, [OptConfig.baseline(),
+                                             OptConfig.full()], plist)
+    for pi, params in enumerate(plist):
+        sim = AraSimulator(params=params)
+        for bi, tr in enumerate(traces):
+            for oi, opt in enumerate((OptConfig.baseline(),
+                                      OptConfig.full())):
+                assert res.cycles[bi, oi, pi] == \
+                    pytest.approx(sim.run(tr, opt).cycles, rel=1e-6)
+
+
+def test_jax_backend_matches_numpy():
+    traces = [scal(256), axpy(256), dotp(256)]
+    bsim = BatchAraSimulator()
+    st = stack_traces(traces)
+    ref = bsim.run(st, ALL_CORNERS)
+    got = bsim.run(st, ALL_CORNERS, backend="jax")
+    np.testing.assert_allclose(got.cycles, ref.cycles, rtol=1e-6)
+    np.testing.assert_allclose(got.busy_fpu, ref.busy_fpu, rtol=1e-6)
+    np.testing.assert_allclose(got.busy_bus, ref.busy_bus, rtol=1e-6)
+
+
+def test_speedup_vs_baseline(batch_grid):
+    sp = batch_grid.speedup_vs(0)
+    assert np.allclose(sp[:, 0, :], 1.0)
+    full_col = len(ALL_CORNERS) - 1          # OptConfig.full() is last
+    assert (sp[:, full_col, 0] >= 0.97).all()
+
+
+def test_make_views_cross_order():
+    opts = [OptConfig.baseline(), OptConfig.full()]
+    plist = [SimParams(), SimParams(mem_latency=99.0)]
+    v = make_views(opts, plist)
+    assert v.width == 4                      # opt-major cells
+    assert list(v.mem_latency) == [38.0, 99.0, 38.0, 99.0]
+    assert list(v.opt_memory) == [False, False, True, True]
+
+
+# --- sweep cache ----------------------------------------------------------
+
+def test_sweep_cache_hit_roundtrip(tmp_path):
+    cache = SweepCache(tmp_path)
+    tr = scal(256)
+    sim = AraSimulator()
+    res = sim.run(tr, OptConfig.full())
+    key = cell_key(tr, OptConfig.full())
+    assert cache.get_result(key, tr.name) is None
+    assert cache.misses == 1
+    cache.put_result(key, res)
+    back = cache.get_result(key, tr.name)
+    assert cache.hits == 1
+    assert back.cycles == res.cycles
+    assert back.flops == res.flops
+    assert back.gflops == pytest.approx(res.gflops)
+
+
+def test_cell_key_content_addressing(tmp_path):
+    tr = scal(256)
+    k1 = cell_key(tr, OptConfig.full())
+    assert k1 == cell_key(scal(256), OptConfig.full())   # deterministic
+    assert k1 != cell_key(scal(512), OptConfig.full())   # content-sensitive
+    assert k1 != cell_key(tr, OptConfig.baseline())
+    assert k1 != cell_key(tr, OptConfig.full(),
+                          SimParams(mem_latency=39.0))
+
+
+def test_grid_uses_cache(tmp_path):
+    import pathlib
+    import sys
+    repo = str(pathlib.Path(__file__).resolve().parents[1])
+    if repo not in sys.path:
+        sys.path.insert(0, repo)
+    from benchmarks import gridlib
+    traces = {"scal": scal(256), "dotp": dotp(256)}
+    cache = SweepCache(tmp_path)
+    g1 = gridlib.Grid(params=SimParams(), cache=cache)
+    cells1 = g1.cells(traces, [OptConfig.baseline(), OptConfig.full()])
+    assert cache.hits == 0
+    g2 = gridlib.Grid(params=SimParams(), cache=SweepCache(tmp_path))
+    cells2 = g2.cells(traces, [OptConfig.baseline(), OptConfig.full()])
+    assert g2.cache.hits == 4 and g2.cache.misses == 0
+    for k in cells1:
+        assert cells2[k].cycles == cells1[k].cycles
+    # Cached cells agree with the scalar simulator.
+    sim = AraSimulator(params=SimParams())
+    ref = sim.run(traces["scal"], OptConfig.full())
+    assert cells2[("scal", OptConfig.full().label)].cycles == \
+        pytest.approx(ref.cycles, rel=1e-6)

@@ -2,7 +2,9 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.chaining import (ChainSpec, Deviation, IDEAL, attribute,
                                  ii_eff_from_rates, pipeline_efficiency,

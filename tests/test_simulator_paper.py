@@ -8,7 +8,7 @@ claims rather than the RTL's exact timings.
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import paper
 from repro.core.calibration import load as load_params
