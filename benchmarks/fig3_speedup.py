@@ -43,8 +43,10 @@ def run() -> list[dict]:
     return rows
 
 
-def main() -> None:
-    emit(run(), gridlib.table_name("fig3_speedup"))
+def main() -> list[dict]:
+    rows = run()
+    emit(rows, gridlib.table_name("fig3_speedup"))
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,0 +1,63 @@
+"""Fig. 6 (analysis artifact): per-kernel stall-breakdown attribution.
+
+For all 11 paper kernels x 8 ablation corners, decompose simulated cycles
+into ideal time + the nine stall categories over the paper's three
+critical paths (`repro.core.stalls`), via one batched attribution pass
+per cache-miss signature (`gridlib` / `sweep_cache`).  Emits stacked
+stall-breakdown chart data (CSV) plus one Chrome ``trace_event`` Gantt
+JSON for a representative cell (scal, baseline) — the waveform-style view
+the paper derives by hand from RTL traces.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_REPO), str(_REPO / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks import gridlib
+from benchmarks.common import OUT_DIR, emit
+from repro.analysis.report import breakdown_rows, format_report
+from repro.analysis.timeline import export_chrome_trace
+from repro.core.isa import ABLATION_GRID
+from repro.core.simulator import AraSimulator
+
+CONFIGS = (gridlib.BASE, *ABLATION_GRID)
+
+#: Representative cell for the exported Gantt timeline.
+TRACE_KERNEL = "scal"
+
+
+def run() -> list[dict]:
+    traces = gridlib.paper_traces()
+    cells = gridlib.grid().cells(traces, CONFIGS, attribution=True)
+    rows: list[dict] = []
+    for cfg in CONFIGS:
+        per_kernel = {name: cells[(name, cfg.label)] for name in traces}
+        rows.extend(breakdown_rows(per_kernel, config=cfg.label))
+    return rows
+
+
+def export_example_trace(kernel: str = TRACE_KERNEL) -> pathlib.Path:
+    """Simulate one baseline cell scalar-side (per-instruction timings)
+    and export its Gantt as Chrome trace JSON."""
+    tr = gridlib.paper_traces()[kernel]
+    res = AraSimulator(params=gridlib.grid().params).run(tr, gridlib.BASE)
+    name = gridlib.table_name(f"trace_{kernel}_base")
+    return export_chrome_trace(OUT_DIR / f"{name}.json", tr, res)
+
+
+def main() -> None:
+    rows = run()
+    emit(rows, gridlib.table_name("fig6_attribution"))
+    base_rows = [r for r in rows if r["config"] == gridlib.BASE.label]
+    print(format_report(base_rows, title="baseline critical-path shares"))
+    path = export_example_trace()
+    print(f"# chrome trace -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -96,12 +96,18 @@ class Grid:
         self.sim = BatchAraSimulator(mc)
 
     def cells(self, traces: Mapping[str, KernelTrace],
-              opts: Sequence[OptConfig]) -> dict[tuple[str, str], SimResult]:
+              opts: Sequence[OptConfig],
+              attribution: bool = False
+              ) -> dict[tuple[str, str], SimResult]:
         """Evaluate `(trace x opt)` cells, batch-running only cache misses.
 
         Returns `{(trace_key, opt.label): SimResult}` (timings omitted).
+        With `attribution`, results carry the kernel ideal/stall
+        decomposition (numpy backend); cached cells stored without it
+        transparently re-simulate.
         """
         opts = list(opts)
+        backend = "numpy" if attribution else self.backend
         out: dict[tuple[str, str], SimResult] = {}
         keys: dict[tuple[str, str], str] = {}
         # Traces grouped by which opts they are missing, so a partial
@@ -114,7 +120,8 @@ class Grid:
             for oi, opt in enumerate(opts):
                 ck = cell_key(tr, opt, self.params, self.mc, trace_fp=fp)
                 keys[(tname, opt.label)] = ck
-                res = (self.cache.get_result(ck, tr.name)
+                res = (self.cache.get_result(ck, tr.name,
+                                             attribution=attribution)
                        if self.use_cache else None)
                 if res is None:
                     sig.append(oi)
@@ -127,7 +134,7 @@ class Grid:
             run_opts = [opts[oi] for oi in sig]
             stacked = stack_traces([traces[t] for t in tnames])
             batch = self.sim.run(stacked, run_opts, self.params,
-                                 backend=self.backend)
+                                 backend=backend, attribution=attribution)
             for bi, tname in enumerate(tnames):
                 for oi, opt in enumerate(run_opts):
                     res = SimResult(
@@ -136,7 +143,11 @@ class Grid:
                         flops=int(batch.flops[bi]),
                         bytes=int(batch.bytes[bi]), timings=[],
                         busy_fpu=float(batch.busy_fpu[bi, oi, 0]),
-                        busy_bus=float(batch.busy_bus[bi, oi, 0]))
+                        busy_bus=float(batch.busy_bus[bi, oi, 0]),
+                        ideal=(float(batch.ideal[bi, oi, 0])
+                               if batch.ideal is not None else 0.0),
+                        stalls=(batch.stalls[bi, oi, 0].copy()
+                                if batch.stalls is not None else None))
                     out[(tname, opt.label)] = res
                     if self.use_cache:
                         self.cache.put_result(keys[(tname, opt.label)], res)

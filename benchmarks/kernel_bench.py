@@ -46,7 +46,9 @@ def batch_grid_rows() -> list[dict]:
     n_cells = len(traces) * len(opts)
     shape = f"{len(traces)}x{len(opts)}"
 
-    sim = AraSimulator(params=params)
+    # Cycles-only timing: disable attribution so the scalar baseline pays
+    # the same accounting the batched call does (none).
+    sim = AraSimulator(params=params, attribution=False)
 
     def scalar_loop():
         return [sim.run(tr, o).cycles

@@ -26,11 +26,15 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (dryrun_table, fig3_speedup, fig4_roofline,
-                            fig5_sensitivity, gridlib, kernel_bench,
-                            table1_ablation, table2_efficiency)
+                            fig5_sensitivity, fig6_attribution, gridlib,
+                            kernel_bench, table1_ablation, table2_efficiency)
     if args.smoke:
         gridlib.set_profile("smoke")
 
+    # fig6 first: its attribution=True pass stores stall-carrying cells
+    # that every later (plain) reader hits, instead of plain cells the
+    # attribution pass would have to re-simulate.
+    fig6_attribution.main()
     fig3_speedup.main()
     fig4_roofline.main()
     table1_ablation.main()

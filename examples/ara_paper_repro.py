@@ -1,6 +1,11 @@
 """Reproduce the paper's evaluation section in one script:
 Fig. 3 (speedups), Fig. 4 (gap-closed), Table I (ablation),
-Fig. 5 (size sensitivity) — from the calibrated simulator.
+Fig. 5 (size sensitivity), plus the deviation-attribution summary
+(top stall sources per kernel against the ideal chaining model).
+
+Exits non-zero if the reproduced geomean speedup drifts more than 5%
+from the value recorded at calibration time in ``ara_calibrated.json``
+— a silent-model-drift tripwire for CI and local hacking alike.
 
     PYTHONPATH=src python examples/ara_paper_repro.py
 """
@@ -12,12 +17,53 @@ sys.path.insert(0, str(REPO / "src"))
 sys.path.insert(0, str(REPO))
 
 from benchmarks import (fig3_speedup, fig4_roofline, fig5_sensitivity,
-                        table1_ablation)
+                        fig6_attribution, gridlib, table1_ablation)
+from repro.analysis.attribution import summarize
+from repro.core.calibration import GEOMEAN_DRIFT_TOL as DRIFT_TOL
+from repro.core.calibration import load_payload
 
-fig3_speedup.main()
-print()
-fig4_roofline.main()
-print()
-table1_ablation.main()
-print()
-fig5_sensitivity.main()
+
+def main() -> int:
+    # Attribution cells first: they carry everything the plain readers
+    # below need, so fig3/fig4/table1 then hit the cache instead of the
+    # attribution pass re-simulating their plain cells.
+    traces = gridlib.paper_traces()
+    cells = gridlib.grid().cells(traces, [gridlib.BASE], attribution=True)
+    base = {name: cells[(name, gridlib.BASE.label)] for name in traces}
+
+    fig3_rows = fig3_speedup.main()
+    print()
+    fig4_roofline.main()
+    print()
+    table1_ablation.main()
+    print()
+    fig5_sensitivity.main()
+    print()
+    print("# top-2 stall sources per kernel (baseline vs ideal chaining)")
+    for name, info in summarize(base).items():
+        srcs = ", ".join(f"{cat} ({val:.0f} cyc)"
+                         for cat, val in info["top2"])
+        print(f"{name:<6} cycles={info['cycles']:>9.0f} "
+              f"ideal={info['ideal']:>9.0f}  {srcs}")
+    fig6_attribution.export_example_trace()
+
+    # Drift gate: reproduced geomean vs the calibration-time record.
+    gm = next(r["speedup_sim"] for r in fig3_rows
+              if r["kernel"] == "GEOMEAN")
+    recorded = load_payload().get("geomean_speedup")
+    if recorded is None:
+        print("\n[drift] no recorded geomean in ara_calibrated.json "
+              "(re-run calibration to arm the tripwire)")
+        return 0
+    drift = abs(gm / recorded - 1.0)
+    print(f"\n[drift] geomean speedup {gm:.4f} vs recorded {recorded:.4f} "
+          f"({100 * drift:.2f}% drift, tolerance {100 * DRIFT_TOL:.0f}%)")
+    if drift > DRIFT_TOL:
+        print("[drift] FAIL: simulator output drifted from the calibrated "
+              "record — recalibrate or fix the regression", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

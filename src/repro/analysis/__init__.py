@@ -1,0 +1,24 @@
+"""Deviation-attribution engine (paper §II.C / §IV).
+
+Decomposes simulated kernel executions against the ideal multi-lane
+chaining model:
+
+  * `repro.analysis.attribution` — phase decomposition (prologue / steady
+    state / tail, `core.chaining` Eq. (1)-(5)) and per-critical-path stall
+    accounting / gap-closed ratios;
+  * `repro.analysis.timeline` — per-instruction Gantt export in Chrome
+    ``trace_event`` JSON for any `(kernel, opt, params)` cell;
+  * `repro.analysis.report` — per-kernel text/CSV stall breakdowns.
+
+The underlying stall vectors come from `repro.core.simulator` (per
+instruction) and `repro.core.batch_sim` (whole grids, numpy backend);
+`repro.core.stalls` defines the category vocabulary.
+"""
+from repro.analysis.attribution import (KernelAttribution,  # noqa: F401
+                                        PhaseDecomposition, attribute_kernel,
+                                        chain_spec_for, gap_closed_by_path,
+                                        phase_decompose)
+from repro.analysis.report import (breakdown_rows, format_report,  # noqa: F401
+                                   write_csv)
+from repro.analysis.timeline import (export_chrome_trace,  # noqa: F401
+                                     trace_events)

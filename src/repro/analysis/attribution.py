@@ -1,0 +1,193 @@
+"""Attribute simulated executions to the ideal chaining model's terms.
+
+Two complementary decompositions of the same measured cycles:
+
+  * **Phase decomposition** (`phase_decompose`): split a run into
+    prologue / steady state / tail against a `core.chaining.ChainSpec`
+    built structurally from the trace, and back out the paper's deviation
+    triple ``(dp, II_eff, dt)`` (Eq. (4)/(5)) with
+    `core.chaining.attribute`.
+  * **Critical-path accounting** (`attribute_kernel`,
+    `gap_closed_by_path`): read the simulator's exact per-category stall
+    vector (``ideal + sum(stalls) == cycles``) and aggregate it over the
+    paper's three critical paths — memory-side supply, dependence & issue
+    control, operand delivery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from repro.core.chaining import ChainSpec, Deviation, attribute
+from repro.core.isa import KernelTrace, MachineConfig, OpKind, OptConfig
+from repro.core.simulator import AraSimulator, SimParams, SimResult
+from repro.core.stalls import group_stalls, stall_dict, top_sources
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseDecomposition:
+    """Measured phase times + deviation terms against the ideal spec."""
+    spec: ChainSpec
+    prologue_real: float
+    steady_real: float
+    tail_real: float
+    deviation: Deviation
+
+    @property
+    def t_real(self) -> float:
+        return self.prologue_real + self.steady_real + self.tail_real
+
+    @property
+    def t_ideal(self) -> float:
+        return self.spec.t_ideal
+
+    @property
+    def loss(self) -> float:
+        """Eq. (5): dT = dp + T_steady*(II_eff - 1) + dt."""
+        return self.deviation.loss(self.spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelAttribution:
+    """One cell's full attribution bundle."""
+    kernel: str
+    opt_label: str
+    result: SimResult
+    phases: PhaseDecomposition
+    stalls: dict[str, float]           # per category (9)
+    paths: dict[str, float]            # per critical path (3)
+
+    @property
+    def top2(self) -> list[tuple[str, float]]:
+        return top_sources(self.result.stalls, 2)
+
+
+def _chain_depth(trace: KernelTrace) -> int:
+    """Longest RAW chain (number of dependent stages) through the trace."""
+    depth: dict[str, int] = {}
+    best = 1
+    for ins in trace.instrs:
+        d = 1 + max((depth.get(s, 0) for s in ins.srcs), default=0)
+        best = max(best, d)
+        if ins.dst is not None:
+            depth[ins.dst] = d
+    return best
+
+
+def _tail_ideal(trace: KernelTrace, mc: MachineConfig,
+                params: SimParams) -> float:
+    """Ideal drain time of the final instruction (the chain's tail)."""
+    if not trace.instrs:
+        return 0.0
+    last = trace.instrs[-1]
+    epc = mc.elems_per_cycle
+    if last.kind is OpKind.STORE:
+        return last.bytes / mc.axi_bytes_per_cycle
+    if last.kind is OpKind.LOAD:
+        return params.prefetch_hit + mc.burst_bytes / mc.axi_bytes_per_cycle
+    tail = mc.fu_latency + last.vl / epc
+    if last.kind is OpKind.REDUCE:
+        import math
+        tail += math.ceil(math.log2(max(last.vl, 2))) * mc.fu_latency
+    return tail
+
+
+def chain_spec_for(trace: KernelTrace,
+                   mc: MachineConfig = MachineConfig(),
+                   params: SimParams = SimParams()) -> ChainSpec:
+    """Ideal `ChainSpec` for a kernel trace (paper Eq. (1)-(3)).
+
+    Startup delays are the forwarding floor per dependent stage of the
+    longest RAW chain, fill time is the FU pipeline depth, and the steady
+    state is the roofline floor — perfectly overlapped lanes and memory,
+    whichever is slower.  `ChainSpec.steady_ideal` is `ceil(vl / lanes)`,
+    so the floor is encoded as an effective element count on `epc` lanes.
+    """
+    epc = mc.elems_per_cycle
+    lane_elems = sum(i.vl for i in trace.instrs
+                     if i.kind not in (OpKind.LOAD, OpKind.STORE))
+    mem_bytes = sum(i.bytes for i in trace.instrs)
+    steady_floor = max(lane_elems / epc, mem_bytes / mc.axi_bytes_per_cycle)
+    depth = _chain_depth(trace)
+    return ChainSpec(
+        startup_delays=(params.d_fwd,) * max(depth - 1, 0),
+        fill_time=float(mc.fu_latency),
+        tail_time=_tail_ideal(trace, mc, params),
+        vl=max(int(round(steady_floor * epc)), 1),
+        lanes=epc)
+
+
+def phase_decompose(trace: KernelTrace, result: SimResult,
+                    mc: MachineConfig = MachineConfig(),
+                    params: SimParams = SimParams()) -> PhaseDecomposition:
+    """Split measured cycles into prologue / steady / tail and back out
+    the deviation triple ``(dp, II_eff, dt)`` (exact: the returned
+    `Deviation.t_real(spec) == result.cycles`).
+
+    Phase boundaries are read off the timings: the prologue ends when the
+    chain first produces a lane result (earliest compute `first_out`), the
+    tail begins when the finishing instruction starts.
+    """
+    spec = chain_spec_for(trace, mc, params)
+    cycles = result.cycles
+    if not result.timings:
+        dev = attribute(spec, 0.0, 0.0, 0.0)
+        return PhaseDecomposition(spec, 0.0, 0.0, 0.0, dev)
+    lane_fo = [t.first_out for t, i in zip(result.timings, trace.instrs)
+               if i.kind not in (OpKind.LOAD, OpKind.STORE)]
+    prologue_real = min(lane_fo) if lane_fo else result.timings[0].first_out
+    prologue_real = min(prologue_real, cycles)
+    finisher = max(result.timings, key=lambda t: t.complete)
+    tail_real = min(cycles - finisher.start, cycles - prologue_real)
+    steady_real = cycles - prologue_real - tail_real
+    dev = attribute(spec, cycles, prologue_real, tail_real)
+    return PhaseDecomposition(spec, prologue_real, steady_real, tail_real,
+                              dev)
+
+
+def attribute_kernel(trace: KernelTrace,
+                     opt: OptConfig = OptConfig.baseline(),
+                     params: SimParams = SimParams(),
+                     mc: MachineConfig = MachineConfig(),
+                     result: SimResult | None = None) -> KernelAttribution:
+    """Full attribution of one `(trace, opt, params)` cell.
+
+    Pass `result` to reuse an existing simulation (it must carry timings
+    and stall vectors, i.e. come from `AraSimulator.run`, not the cache).
+    """
+    if result is None or result.stalls is None or not result.timings:
+        result = AraSimulator(mc, params).run(trace, opt)
+    phases = phase_decompose(trace, result, mc, params)
+    return KernelAttribution(
+        kernel=trace.name, opt_label=opt.label, result=result,
+        phases=phases, stalls=stall_dict(result.stalls),
+        paths=group_stalls(result.stalls))
+
+
+def gap_closed_by_path(base: SimResult, opt: SimResult,
+                       eps: float = 1e-9) -> dict[str, float]:
+    """Fraction of each critical path's baseline stall that an optimized
+    configuration eliminates (the attribution analogue of Fig. 4's
+    gap-closed metric).  A path with no baseline stall reports 1.0."""
+    if base.stalls is None or opt.stalls is None:
+        raise ValueError("gap_closed_by_path needs attribution-carrying "
+                         "SimResults (AraSimulator.run or attribution "
+                         "batch cells)")
+    gb = group_stalls(base.stalls)
+    go = group_stalls(opt.stalls)
+    out = {}
+    for path, b in gb.items():
+        out[path] = 1.0 if b <= eps else (b - go[path]) / b
+    return out
+
+
+def summarize(results: Mapping[str, SimResult]) -> dict[str, dict]:
+    """Per-kernel critical-path sums + top-2 sources, for quick printing."""
+    out = {}
+    for name, res in results.items():
+        if res.stalls is None:
+            continue
+        out[name] = {"paths": group_stalls(res.stalls),
+                     "top2": top_sources(res.stalls, 2),
+                     "ideal": res.ideal, "cycles": res.cycles}
+    return out

@@ -1,0 +1,74 @@
+"""Per-kernel stall-breakdown reports (text and CSV).
+
+Turns attribution-carrying `SimResult`s into flat rows — cycles, ideal,
+the nine stall categories, the three critical-path sums, and the top two
+stall sources — plus an aligned text rendering for terminals.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Mapping
+
+from repro.core.simulator import SimResult
+from repro.core.stalls import (CRITICAL_PATHS, STALL_CATEGORIES, as_row,
+                               top_sources)
+
+
+def breakdown_rows(results: Mapping[str, SimResult],
+                   config: str | None = None) -> list[dict]:
+    """One CSV-friendly row per kernel (insertion order preserved)."""
+    rows = []
+    for name, res in results.items():
+        if res.stalls is None:
+            raise ValueError(f"{name}: result carries no stall vector")
+        row: dict = {"kernel": name}
+        if config is not None:
+            row["config"] = config
+        row.update(as_row(res.ideal, res.stalls, res.cycles))
+        row["stall_frac"] = (res.cycles - res.ideal) / max(res.cycles, 1e-9)
+        top = top_sources(res.stalls, 2)
+        row["top1"], row["top2"] = top[0][0], top[1][0]
+        rows.append(row)
+    return rows
+
+
+def format_report(rows: list[dict], title: str = "stall breakdown") -> str:
+    """Aligned text table: per-kernel critical-path shares + top sources."""
+    lines = [f"# {title}",
+             f"{'kernel':<8} {'config':<6} {'cycles':>10} {'ideal%':>7} "
+             + "".join(f"{p:>11}" for p in CRITICAL_PATHS)
+             + "  top stall sources"]
+    for r in rows:
+        cyc = r["cycles"]
+        shares = "".join(
+            f"{100.0 * r[p] / max(cyc, 1e-9):>10.1f}%" for p in CRITICAL_PATHS)
+        lines.append(
+            f"{r['kernel']:<8} {r.get('config', '-'):<6} {cyc:>10.0f} "
+            f"{100.0 * r['ideal'] / max(cyc, 1e-9):>6.1f}% {shares}"
+            f"  {r['top1']}, {r['top2']}")
+    return "\n".join(lines)
+
+
+def write_csv(rows: list[dict], path: str | pathlib.Path) -> pathlib.Path:
+    """Persist breakdown rows as CSV; returns the path."""
+    path = pathlib.Path(path)
+    if not rows:
+        path.write_text("")
+        return path
+    cols = list(rows[0].keys())
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(_fmt(r[c]) for c in cols))
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text("\n".join(lines) + "\n")
+    return path
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+__all__ = ["breakdown_rows", "format_report", "write_csv",
+           "STALL_CATEGORIES"]

@@ -1,0 +1,86 @@
+"""Per-instruction Gantt export in Chrome ``trace_event`` JSON.
+
+Any `(kernel, opt, params)` cell simulated by `AraSimulator.run` can be
+dumped as a trace viewable in ``chrome://tracing`` / Perfetto: one "X"
+(complete) event per vector instruction on the execution-resource track it
+occupied, with the instruction's exact stall decomposition attached as
+event ``args``.  One simulated cycle is rendered as one microsecond.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.core.isa import KernelTrace, OpKind
+from repro.core.simulator import SimResult
+from repro.core.stalls import stall_dict
+
+#: Track (Chrome tid) per resource class.
+_TRACKS = {
+    OpKind.LOAD: (1, "VLSU read"),
+    OpKind.STORE: (2, "VLSU write"),
+    OpKind.COMPUTE: (3, "FPU lanes"),
+    OpKind.REDUCE: (3, "FPU lanes"),
+    OpKind.SLIDE: (4, "SLDU"),
+}
+
+
+def trace_events(trace: KernelTrace, result: SimResult) -> list[dict]:
+    """Chrome ``trace_event`` list for one simulated cell."""
+    if len(result.timings) != len(trace.instrs):
+        raise ValueError(
+            "result carries no per-instruction timings for this trace "
+            "(cache-restored results cannot be exported; re-simulate with "
+            "AraSimulator.run)")
+    pid = 0
+    events: list[dict] = [{
+        "name": "process_name", "ph": "M", "pid": pid,
+        "args": {"name": f"{trace.name} [{result.kernel}]"},
+    }]
+    for tid, label in sorted(set(_TRACKS.values())):
+        events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                       "tid": tid, "args": {"name": label}})
+    for idx, (ins, t) in enumerate(zip(trace.instrs, result.timings)):
+        tid, _ = _TRACKS[ins.kind]
+        args = {
+            "instr": idx,
+            "vl": ins.vl,
+            "first_out": t.first_out,
+            "read_done": t.read_done,
+            "ideal": t.ideal,
+        }
+        if ins.stream:
+            args["stream"] = ins.stream
+        if t.stalls is not None:
+            args.update({k: v for k, v in stall_dict(t.stalls).items()
+                         if v > 0.0})
+        events.append({
+            "name": f"{ins.name} vl={ins.vl}",
+            "cat": ins.kind.value,
+            "ph": "X",
+            "pid": pid,
+            "tid": tid,
+            "ts": t.start,                      # 1 cycle == 1 us
+            "dur": max(t.complete - t.start, 0.0),
+            "args": args,
+        })
+    return events
+
+
+def export_chrome_trace(path: str | pathlib.Path, trace: KernelTrace,
+                        result: SimResult) -> pathlib.Path:
+    """Write one cell's Gantt as Chrome trace JSON; returns the path."""
+    path = pathlib.Path(path)
+    payload = {
+        "traceEvents": trace_events(trace, result),
+        "displayTimeUnit": "ms",
+        "metadata": {
+            "kernel": trace.name,
+            "problem": trace.problem,
+            "cycles": result.cycles,
+            "ideal": result.ideal,
+        },
+    }
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=1))
+    return path

@@ -26,6 +26,13 @@ Two backends:
     the padded instruction axis, all `(B, width)` cells in one compiled
     program (float64 via `jax.experimental.enable_x64`).  Best for large
     fixed-shape sweeps where compile time amortizes.
+
+Deviation attribution (``attribution=True``, numpy backend): the scan
+carries the same component vectors as `AraSimulator.run` — every hazard
+state array gains a trailing `repro.core.stalls.NCOMP` axis that follows
+the identical max/+ dataflow — so the whole grid yields `(B, O, P)` ideal
+and `(B, O, P, 9)` stall tensors in one batched pass, bit-exact against
+the scalar simulator's accounting.
 """
 from __future__ import annotations
 
@@ -36,6 +43,11 @@ import numpy as np
 
 from repro.core.isa import KernelTrace, MachineConfig, OptConfig
 from repro.core.simulator import SimParams
+from repro.core.stalls import (DEP_ISSUE_GAP, DEP_WAR_RELEASE, IDEAL,
+                               MEM_DEMAND_LATENCY, MEM_RW_TURNAROUND,
+                               MEM_STORE_COMMIT, MEM_TX_OVERHEAD, NCOMP,
+                               OPR_BANK_CONFLICT, OPR_CHAIN_DELAY,
+                               OPR_QUEUE_LIMIT)
 from repro.core.traces import PAD, StackedTraces, stack_traces
 
 _LOAD, _STORE, _COMPUTE, _REDUCE, _SLIDE = 0, 1, 2, 3, 4
@@ -63,6 +75,7 @@ class ParamView:
     queue_adv: np.ndarray
     opt_memory: np.ndarray             # bool: M class (also r/w split)
     opt_control: np.ndarray            # bool: C class
+    d_fwd: np.ndarray                  # forwarding floor (attribution split)
 
     @property
     def width(self) -> int:
@@ -95,6 +108,7 @@ def make_views(opts: Sequence[OptConfig],
                     else p.queue_adv_base),
         opt_memory=b(lambda o, p: o.memory),
         opt_control=b(lambda o, p: o.control),
+        d_fwd=f(lambda o, p: p.d_fwd),
     )
 
 
@@ -107,6 +121,8 @@ class BatchResult:
     busy_bus: np.ndarray               # (B, O, P)
     flops: np.ndarray                  # (B,)
     bytes: np.ndarray                  # (B,)
+    ideal: np.ndarray | None = None    # (B, O, P) ideal part of cycles
+    stalls: np.ndarray | None = None   # (B, O, P, 9) stall categories
 
     @property
     def gflops(self) -> np.ndarray:
@@ -135,15 +151,21 @@ class BatchAraSimulator:
     # -- public API ---------------------------------------------------------
     def run(self, stacked: StackedTraces, opts: Sequence[OptConfig],
             params: SimParams | Sequence[SimParams] = SimParams(),
-            backend: str = "numpy") -> BatchResult:
+            backend: str = "numpy",
+            attribution: bool = False) -> BatchResult:
         if isinstance(params, SimParams):
             params = [params]
         opts = list(opts)
         params = list(params)
         view = make_views(opts, params)
+        comp = None
         if backend == "numpy":
-            cyc, bf, bb = self._run_numpy(stacked, view)
+            cyc, bf, bb, comp = self._run_numpy(stacked, view, attribution)
         elif backend == "jax":
+            if attribution:
+                raise NotImplementedError(
+                    "attribution tensors are only scanned by the numpy "
+                    "backend; run with backend='numpy'")
             cyc, bf, bb = self._run_jax(stacked, view)
         else:
             raise ValueError(f"unknown backend {backend!r}")
@@ -153,30 +175,45 @@ class BatchAraSimulator:
                            busy_fpu=bf.reshape(shape),
                            busy_bus=bb.reshape(shape),
                            flops=stacked.total_flops.astype(np.float64),
-                           bytes=stacked.total_bytes.astype(np.float64))
+                           bytes=stacked.total_bytes.astype(np.float64),
+                           ideal=(comp[..., IDEAL].reshape(shape)
+                                  if comp is not None else None),
+                           stalls=(comp[..., 1:].reshape(*shape, NCOMP - 1)
+                                   if comp is not None else None))
 
     def sweep(self, traces: Sequence[KernelTrace],
               opts: Sequence[OptConfig],
               params: SimParams | Sequence[SimParams] = SimParams(),
-              backend: str = "numpy") -> BatchResult:
-        return self.run(stack_traces(traces), opts, params, backend=backend)
+              backend: str = "numpy",
+              attribution: bool = False) -> BatchResult:
+        return self.run(stack_traces(traces), opts, params, backend=backend,
+                        attribution=attribution)
 
     # -- numpy backend ------------------------------------------------------
-    def _run_numpy(self, st: StackedTraces, v: ParamView):
+    def _run_numpy(self, st: StackedTraces, v: ParamView,
+                   attrib: bool = False):
         W = v.width
         cycles = np.zeros((st.batch, W))
         busy_fpu = np.zeros((st.batch, W))
         busy_bus = np.zeros((st.batch, W))
+        comp = np.zeros((st.batch, W, NCOMP)) if attrib else None
         for b in range(st.batch):
-            cycles[b], busy_fpu[b], busy_bus[b] = self._scan_row_numpy(
-                st, b, v)
-        return cycles, busy_fpu, busy_bus
+            cycles[b], busy_fpu[b], busy_bus[b], cb = self._scan_row_numpy(
+                st, b, v, attrib)
+            if attrib:
+                comp[b] = cb
+        return cycles, busy_fpu, busy_bus, comp
 
-    def _scan_row_numpy(self, st: StackedTraces, b: int, v: ParamView):
+    def _scan_row_numpy(self, st: StackedTraces, b: int, v: ParamView,
+                        attrib: bool = False):
         """Scan one trace row; hazard state is `(width,)`-vectorized.
 
         Mirrors `AraSimulator.run` operation-for-operation in float64, so
-        results are bit-identical to the scalar simulator.
+        results are bit-identical to the scalar simulator.  With `attrib`,
+        every hazard-state array carries a companion `(..., NCOMP)`
+        component tensor maintained by the same max/+ dataflow (see
+        `repro.core.stalls`), again matching the scalar accounting
+        bit-for-bit.
         """
         mc = self.mc
         epc = mc.elems_per_cycle
@@ -221,6 +258,35 @@ class BatchAraSimulator:
         lat_warm_str = np.where(
             opt_m, 0.5 * (v.mem_latency + v.prefetch_hit), v.mem_latency)
 
+        # ---- attribution companions (see repro.core.stalls) -----------
+        # Comp tensors are (W, NCOMP) / (R, W, NCOMP); `sel` adopts the
+        # binding argument's components (ties keep the incumbent, matching
+        # the scalar simulator), `bump` charges additions to a category.
+        def sel(mask, new_c, old_c):
+            return np.where(mask[..., None], new_c, old_c)
+
+        def bump(c, *pairs):
+            out = c.copy()
+            for idx, amount in pairs:
+                out[:, idx] += amount
+            return out
+
+        if attrib:
+            Zc = np.zeros((W, NCOMP))
+            c_issue = Zc
+            c_bus = Zc
+            c_wbus = Zc
+            c_addr = Zc
+            c_fpu = Zc
+            c_sldu = Zc
+            wf_c = np.zeros((R, W, NCOMP))
+            wc_c = np.zeros((R, W, NCOMP))
+            rr_c = np.zeros((R, W, NCOMP))
+            c_total = Zc
+            dci = np.minimum(v.d_chain, v.d_fwd)       # ideal fwd floor
+            dcs = v.d_chain - dci                      # chain-delay stall
+        c_raws = c_rc = c_wg = c_req = c_bs = c_cp = c_fo = c_rd = None
+
         for i in range(n):
             k = kind[i]
             vl = vls[i]
@@ -230,29 +296,58 @@ class BatchAraSimulator:
             # ---- dependence constraints (lane side) --------------------
             raw_start = issue_t.copy()
             raw_complete = zero.copy()
+            if attrib:
+                c_raws = c_issue
+                c_rc = Zc
             for s in srcs:
                 if has_w[s]:
-                    np.maximum(raw_start, w_first[s] + v.d_chain,
-                               out=raw_start)
-                    np.maximum(raw_complete, w_compl[s] + v.d_chain,
-                               out=raw_complete)
+                    cand_s = w_first[s] + v.d_chain
+                    cand_c = w_compl[s] + v.d_chain
+                    if attrib:
+                        c_raws = sel(cand_s > raw_start,
+                                     bump(wf_c[s], (IDEAL, dci),
+                                          (OPR_CHAIN_DELAY, dcs)), c_raws)
+                        c_rc = sel(cand_c > raw_complete,
+                                   bump(wc_c[s], (IDEAL, dci),
+                                        (OPR_CHAIN_DELAY, dcs)), c_rc)
+                    np.maximum(raw_start, cand_s, out=raw_start)
+                    np.maximum(raw_complete, cand_c, out=raw_complete)
             war_gate = zero.copy()
+            if attrib:
+                c_wg = Zc
             if dst >= 0:
+                if attrib:
+                    c_wg = sel(r_rel[dst] > war_gate, rr_c[dst], c_wg)
                 np.maximum(war_gate, r_rel[dst], out=war_gate)   # WAR
                 if has_w[dst]:
+                    if attrib:
+                        c_wg = sel(w_first[dst] > war_gate, wf_c[dst], c_wg)
                     np.maximum(war_gate, w_first[dst], out=war_gate)  # WAW
 
             # ---- execute on resource ----------------------------------
             if k == _LOAD:
                 if strides[i] == _INDEXED:
                     dur_bus = vl * (sews[i] / bpc) + vl * v.idx_ovh
+                    dur_ideal = vl * (sews[i] / bpc)
                 else:
                     nburst = max(1, -(-nbs[i] // mc.burst_bytes))
                     dur_bus = nbs[i] / bpc + nburst * v.tx_ovh
+                    dur_ideal = nbs[i] / bpc
+                dur_stall = dur_bus - dur_ideal
                 turn = v.rw_turn if bus_last == _STORE else zero
+                cand = bus_free + turn
                 req_start = np.maximum(issue_t, raw_start)
+                if attrib:
+                    c_req = sel(raw_start > issue_t, c_raws, c_issue)
+                    c_req = sel(addr_free > req_start, c_addr, c_req)
                 np.maximum(req_start, addr_free, out=req_start)
-                np.maximum(req_start, bus_free + turn, out=req_start)
+                if attrib:
+                    c_cand = (c_bus if bus_last != _STORE else
+                              bump(c_bus, (MEM_RW_TURNAROUND, turn)))
+                    c_req = sel(cand > req_start, c_cand, c_req)
+                np.maximum(req_start, cand, out=req_start)
+                if attrib:
+                    c_req = sel(war_gate > req_start, c_wg, c_req)
                 np.maximum(req_start, war_gate, out=req_start)
                 if strides[i] == _UNIT:
                     lat = lat_demand if firsts[i] else lat_warm_unit
@@ -261,10 +356,26 @@ class BatchAraSimulator:
                 else:
                     lat = lat_demand
                 data_done = req_start + lat + dur_bus
-                first_out = np.maximum(req_start + lat + burst_over_bpc,
-                                       war_gate)
+                cand = req_start + lat + burst_over_bpc
+                first_out = np.maximum(cand, war_gate)
                 complete = np.maximum(data_done, war_gate + vl / epc)
                 read_done = req_start
+                if attrib:
+                    lat_ideal = np.minimum(lat, v.prefetch_hit)
+                    lat_stall = lat - lat_ideal
+                    c_fo = sel(war_gate > cand,
+                               c_wg, bump(c_req,
+                                          (IDEAL, lat_ideal + burst_over_bpc),
+                                          (MEM_DEMAND_LATENCY, lat_stall)))
+                    c_cp = sel(war_gate + vl / epc > data_done,
+                               bump(c_wg, (IDEAL, vl / epc)),
+                               bump(c_req, (IDEAL, lat_ideal + dur_ideal),
+                                    (MEM_DEMAND_LATENCY, lat_stall),
+                                    (MEM_TX_OVERHEAD, dur_stall)))
+                    c_rd = c_req
+                    c_bus = bump(c_req, (IDEAL, dur_ideal),
+                                 (MEM_TX_OVERHEAD, dur_stall))
+                    c_addr = sel(opt_m, c_req, c_bus)
                 bus_free = req_start + dur_bus
                 addr_free = np.where(opt_m, req_start, req_start + dur_bus)
                 bus_last = _LOAD
@@ -273,28 +384,69 @@ class BatchAraSimulator:
             elif k == _STORE:
                 if strides[i] == _INDEXED:
                     dur_bus = vl * (sews[i] / bpc) + vl * v.idx_ovh
+                    dur_ideal = vl * (sews[i] / bpc)
                 else:
                     nburst = max(1, -(-nbs[i] // mc.burst_bytes))
                     dur_bus = nbs[i] / bpc + nburst * v.tx_ovh
+                    dur_ideal = nbs[i] / bpc
+                dur_stall = dur_bus - dur_ideal
                 # split (M) path
                 bs_split = np.maximum(raw_start, war_gate)
+                if attrib:
+                    c_bss = sel(war_gate > raw_start, c_wg, c_raws)
+                    c_bss = sel(addr_free > bs_split, c_addr, c_bss)
                 np.maximum(bs_split, addr_free, out=bs_split)
+                if attrib:
+                    c_bss = sel(wbus_free > bs_split, c_wbus, c_bss)
                 np.maximum(bs_split, wbus_free, out=bs_split)
                 # unified path
                 turn = v.rw_turn if bus_last == _LOAD else zero
+                cand = bus_free + turn
                 bs_uni = np.maximum(raw_start, war_gate)
+                if attrib:
+                    c_bsu = sel(war_gate > raw_start, c_wg, c_raws)
+                    c_bsu = sel(addr_free > bs_uni, c_addr, c_bsu)
                 np.maximum(bs_uni, addr_free, out=bs_uni)
-                np.maximum(bs_uni, bus_free + turn, out=bs_uni)
+                if attrib:
+                    c_cand = (c_bus if bus_last != _LOAD else
+                              bump(c_bus, (MEM_RW_TURNAROUND, turn)))
+                    c_bsu = sel(cand > bs_uni, c_cand, c_bsu)
+                np.maximum(bs_uni, cand, out=bs_uni)
                 busy_start = np.where(opt_m, bs_split, bs_uni)
+                if attrib:
+                    c_bs = sel(opt_m, c_bss, c_bsu)
+                    c_wbus = sel(opt_m,
+                                 bump(c_bss, (IDEAL, dur_ideal),
+                                      (MEM_TX_OVERHEAD, dur_stall)), c_wbus)
+                    c_split_bus = bump(
+                        sel(bs_split > bus_free, c_bss, c_bus),
+                        (IDEAL, dur_ideal), (MEM_TX_OVERHEAD, dur_stall))
+                    c_uni_bus = bump(c_bsu, (IDEAL, dur_ideal),
+                                     (MEM_TX_OVERHEAD, dur_stall),
+                                     (MEM_STORE_COMMIT, v.store_commit))
                 wbus_free = np.where(opt_m, bs_split + dur_bus, wbus_free)
                 bus_free = np.where(
                     opt_m, np.maximum(bus_free, bs_split) + dur_bus,
                     bs_uni + dur_bus + v.store_commit)
-                complete = np.maximum(busy_start + dur_bus + v.mem_latency,
-                                      raw_complete)
+                if attrib:
+                    c_bus = sel(opt_m, c_split_bus, c_uni_bus)
+                cand = busy_start + dur_bus + v.mem_latency
+                complete = np.maximum(cand, raw_complete)
                 first_out = complete
-                read_done = np.maximum(busy_start + vl / epc,
-                                       busy_start + dur_bus - v.queue_adv)
+                t1 = busy_start + vl / epc
+                t2 = busy_start + dur_bus - v.queue_adv
+                read_done = np.maximum(t1, t2)
+                if attrib:
+                    c_cp = sel(raw_complete > cand, c_rc,
+                               bump(c_bs, (IDEAL, dur_ideal),
+                                    (MEM_TX_OVERHEAD, dur_stall),
+                                    (MEM_STORE_COMMIT, v.mem_latency)))
+                    c_fo = c_cp
+                    c_rd = bump(c_bs, (IDEAL, vl / epc),
+                                (OPR_QUEUE_LIMIT, np.maximum(t2 - t1, 0.0)))
+                    c_addr = sel(opt_m, c_bs,
+                                 bump(c_bs, (IDEAL, dur_ideal),
+                                      (MEM_TX_OVERHEAD, dur_stall)))
                 addr_free = np.where(opt_m, busy_start,
                                      busy_start + dur_bus)
                 bus_last = _STORE
@@ -303,24 +455,49 @@ class BatchAraSimulator:
             else:                                  # COMPUTE/REDUCE/SLIDE
                 if isdivs[i]:
                     dur = (vl / epc) * v.div_factor
+                    dur_ideal = dur
                 else:
                     dur = (vl / epc) * v.conflict
+                    dur_ideal = vl / epc
                 if k == _REDUCE:
                     dur = dur + redlvs[i] * mc.fu_latency
+                    dur_ideal = dur_ideal + redlvs[i] * mc.fu_latency
+                dur_stall = dur - dur_ideal
                 unit_free = sldu_free if k == _SLIDE else fpu_free
                 busy_start = np.maximum(raw_start, war_gate)
+                if attrib:
+                    c_unit = c_sldu if k == _SLIDE else c_fpu
+                    c_bs = sel(war_gate > raw_start, c_wg, c_raws)
+                    c_bs = sel(unit_free > busy_start, c_unit, c_bs)
                 np.maximum(busy_start, unit_free, out=busy_start)
-                complete = np.maximum(busy_start + mc.fu_latency + dur,
-                                      raw_complete)
+                cand = busy_start + mc.fu_latency + dur
+                complete = np.maximum(cand, raw_complete)
                 if k == _REDUCE:
                     first_out = complete
                 else:
                     first_out = busy_start + mc.fu_latency
-                read_done = np.maximum(
-                    busy_start + vl / epc,
-                    complete - mc.fu_latency - v.queue_adv)
-                occ = np.maximum(busy_start + dur,
-                                 complete - mc.fu_latency)
+                t1 = busy_start + vl / epc
+                t2 = complete - mc.fu_latency - v.queue_adv
+                read_done = np.maximum(t1, t2)
+                t1o = busy_start + dur
+                t2o = complete - mc.fu_latency
+                occ = np.maximum(t1o, t2o)
+                if attrib:
+                    c_cp = sel(raw_complete > cand, c_rc,
+                               bump(c_bs, (IDEAL, mc.fu_latency + dur_ideal),
+                                    (OPR_BANK_CONFLICT, dur_stall)))
+                    c_fo = c_cp if k == _REDUCE else \
+                        bump(c_bs, (IDEAL, mc.fu_latency))
+                    c_rd = bump(c_bs, (IDEAL, vl / epc),
+                                (OPR_QUEUE_LIMIT, np.maximum(t2 - t1, 0.0)))
+                    c_occ = bump(c_bs, (IDEAL, dur_ideal),
+                                 (OPR_BANK_CONFLICT, dur_stall),
+                                 (OPR_CHAIN_DELAY,
+                                  np.maximum(t2o - t1o, 0.0)))
+                    if k == _SLIDE:
+                        c_sldu = c_occ
+                    else:
+                        c_fpu = c_occ
                 if k == _SLIDE:
                     sldu_free = occ
                 else:
@@ -329,18 +506,31 @@ class BatchAraSimulator:
 
             # ---- update hazard state ----------------------------------
             issue_t = issue_t + v.issue_gap
+            if attrib:
+                c_issue = bump(c_issue, (DEP_ISSUE_GAP, v.issue_gap))
             if dst >= 0:
                 w_first[dst] = first_out
                 w_compl[dst] = complete
                 has_w[dst] = True
+                if attrib:
+                    wf_c[dst] = c_fo
+                    wc_c[dst] = c_cp
             if srcs:
                 release = np.where(opt_c, read_done,
                                    complete + v.war_release_ovh)
+                if attrib:
+                    c_rel = sel(opt_c, c_rd,
+                                bump(c_cp,
+                                     (DEP_WAR_RELEASE, v.war_release_ovh)))
                 for s in srcs:
+                    if attrib:
+                        rr_c[s] = sel(release > r_rel[s], c_rel, rr_c[s])
                     np.maximum(r_rel[s], release, out=r_rel[s])
+            if attrib:
+                c_total = sel(complete > total, c_cp, c_total)
             np.maximum(total, complete, out=total)
 
-        return total, busy_fpu, busy_bus
+        return total, busy_fpu, busy_bus, (c_total if attrib else None)
 
     # -- jax backend --------------------------------------------------------
     def _run_jax(self, st: StackedTraces, v: ParamView):
@@ -387,7 +577,7 @@ def _build_jax_sweep(mc: MachineConfig):
         (kind, vl, sew, nb, stride, first, isdiv, redlv, dst, srcs) = fields
         (mem_lat, pf_hit, div_f, war_ovh, tx_ovh, idx_ovh, rw_turn,
          store_commit, issue_gap, d_chain, conflict, queue_adv,
-         opt_m, opt_c) = (jnp.asarray(x) for x in views)
+         opt_m, opt_c, _d_fwd) = (jnp.asarray(x) for x in views)
         B = kind.shape[1]
         W = mem_lat.shape[0]
         S = srcs.shape[2]

@@ -60,6 +60,11 @@ SEED_CANDIDATE = {
     "queue_adv_opt": 160.0, "idx_ovh_base": 2.0,
 }
 
+#: Allowed relative drift of a reproduced geomean speedup from the value
+#: recorded in ara_calibrated.json — one constant for both arms of the
+#: tripwire (tests/test_simulator_paper.py and examples/ara_paper_repro.py).
+GEOMEAN_DRIFT_TOL = 0.05
+
 ABL_KERNELS = ("scal", "axpy", "gemm", "dotp")
 ABL_SINGLES = {"M": OptConfig(True, False, False),
                "C": OptConfig(False, True, False),
@@ -78,14 +83,26 @@ def _traces():
     return {k: fn() for k, fn in DEFAULT_TRACES.items()}
 
 
+# One simulator for every scoring call: the jax backend caches its
+# compiled program per instance, so sharing it lets the search's repeated
+# same-shape populations reuse one compile instead of recompiling per
+# batched evaluation.
+_SIM = BatchAraSimulator()
+
+
 def evaluate_many(params_list: Sequence[SimParams],
-                  traces=None) -> list[dict]:
+                  traces=None, backend: str = "numpy") -> list[dict]:
     """Score many candidates with one batched `(kernel x config x
-    candidate)` sweep; returns one metrics dict per candidate."""
+    candidate)` sweep; returns one metrics dict per candidate.
+
+    `backend` selects the batched engine: ``numpy`` (bit-exact vs. the
+    scalar simulator) or ``jax`` (one compiled `lax.scan` program; wins
+    on accelerator hosts once the fixed-shape compile amortizes over the
+    search's repeated same-shape populations)."""
     traces = traces or _traces()
     names = list(traces)
     stacked = stack_traces([traces[k] for k in names])
-    res = BatchAraSimulator().run(stacked, _CONFIGS, list(params_list))
+    res = _SIM.run(stacked, _CONFIGS, list(params_list), backend=backend)
     cycles = res.cycles                        # (kernel, config, candidate)
     gflops = res.gflops
 
@@ -110,9 +127,9 @@ def evaluate_many(params_list: Sequence[SimParams],
     return outs
 
 
-def evaluate(params: SimParams, traces=None) -> dict:
+def evaluate(params: SimParams, traces=None, backend: str = "numpy") -> dict:
     """Simulate everything the loss needs; returns a metrics dict."""
-    return evaluate_many([params], traces)[0]
+    return evaluate_many([params], traces, backend=backend)[0]
 
 
 def loss(metrics: dict) -> float:
@@ -130,16 +147,58 @@ def loss(metrics: dict) -> float:
     return err
 
 
-def _losses_of(candidates: Sequence[dict], traces) -> list[float]:
+def _losses_of(candidates: Sequence[dict], traces,
+               backend: str = "numpy") -> list[float]:
     params = [SimParams(**vals) for vals in candidates]
-    return [loss(m) for m in evaluate_many(params, traces)]
+    return [loss(m) for m in evaluate_many(params, traces, backend=backend)]
+
+
+#: Reduced problem sizes for the backend parity check: every kernel the
+#: loss reads, but small instruction streams (the check guards numerical
+#: agreement between backends, not paper fidelity, so it should be cheap).
+_PARITY_SIZES = {
+    "scal": (256,), "axpy": (256,), "dotp": (256,), "gemv": (16, 64),
+    "symv": (16,), "ger": (32, 32), "gemm": (32, 32, 32), "trsm": (16,),
+    "syrk": (16, 16), "spmv": (16,), "dwt": (256,),
+}
+
+
+def parity_traces():
+    from repro.core.traces import KERNELS
+    return {name: KERNELS[name](*args) for name, args in
+            _PARITY_SIZES.items()}
+
+
+def check_backend_parity(backend: str, traces=None,
+                         tol: float = 1e-6) -> float:
+    """Cross-check one candidate's loss between `backend` and numpy.
+
+    Guards calibration against a silently-divergent accelerated backend;
+    returns the absolute loss difference, raising if it exceeds `tol`.
+    Defaults to reduced-size traces (`parity_traces`) so the guard stays
+    cheap even on hosts where one backend is slow."""
+    traces = traces or parity_traces()
+    vals = dict(dataclasses.asdict(SimParams()), **SEED_CANDIDATE)
+    vals["idx_ovh_opt"] = 0.9 * vals["idx_ovh_base"]
+    ref = _losses_of([vals], traces, backend="numpy")[0]
+    got = _losses_of([vals], traces, backend=backend)[0]
+    diff = abs(got - ref)
+    if not diff <= tol * max(abs(ref), 1.0):
+        raise RuntimeError(
+            f"backend {backend!r} disagrees with numpy on the seed "
+            f"candidate loss: {got!r} vs {ref!r}")
+    return diff
 
 
 def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
-              verbose: bool = True, chunk: int = 64
-              ) -> tuple[SimParams, float]:
+              verbose: bool = True, chunk: int = 64,
+              backend: str = "numpy") -> tuple[SimParams, float]:
     rng = random.Random(seed)
     traces = _traces()
+    if backend != "numpy":
+        diff = check_backend_parity(backend)
+        if verbose:
+            print(f"[parity] {backend} vs numpy seed-loss diff={diff:.2e}")
     defaults = dataclasses.asdict(SimParams())
 
     def sample() -> dict:
@@ -151,14 +210,14 @@ def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
 
     best_vals = dict(defaults, **SEED_CANDIDATE)
     best_vals["idx_ovh_opt"] = 0.9 * best_vals["idx_ovh_base"]
-    best = _losses_of([best_vals], traces)[0]
+    best = _losses_of([best_vals], traces, backend)[0]
     if verbose:
         print(f"[seed] loss={best:.4f}")
     # Random search, `chunk` candidates per batched evaluation.
     done = 0
     while done < iters:
         cands = [sample() for _ in range(min(chunk, iters - done))]
-        for off, l in enumerate(_losses_of(cands, traces)):
+        for off, l in enumerate(_losses_of(cands, traces, backend)):
             if l < best:
                 best, best_vals = l, cands[off]
                 if verbose:
@@ -175,7 +234,7 @@ def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
                 if name == "idx_ovh_base":
                     cand["idx_ovh_opt"] = 0.9 * cand[name]
                 cands.append(cand)
-            for cand, l in zip(cands, _losses_of(cands, traces)):
+            for cand, l in zip(cands, _losses_of(cands, traces, backend)):
                 if l < best:
                     best, best_vals = l, cand
         if verbose:
@@ -184,8 +243,15 @@ def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
 
 
 def save(params: SimParams, loss_value: float,
-         path: pathlib.Path = CAL_PATH) -> None:
-    payload = {"params": dataclasses.asdict(params), "loss": loss_value}
+         path: pathlib.Path = CAL_PATH, metrics: dict | None = None) -> None:
+    """Persist calibrated params + headline fidelity numbers.
+
+    The recorded ``geomean_speedup`` is the drift sentinel
+    `examples/ara_paper_repro.py` checks reproduced runs against."""
+    if metrics is None:
+        metrics = evaluate(params)
+    payload = {"params": dataclasses.asdict(params), "loss": loss_value,
+               "geomean_speedup": metrics["geomean_speedup"]}
     path.write_text(json.dumps(payload, indent=2))
 
 
@@ -196,17 +262,30 @@ def load(path: pathlib.Path = CAL_PATH) -> SimParams:
     return SimParams()
 
 
+def load_payload(path: pathlib.Path = CAL_PATH) -> dict:
+    """Full calibration record (params, loss, recorded geomean) or {}."""
+    if path.exists():
+        return json.loads(path.read_text())
+    return {}
+
+
 def main() -> None:  # pragma: no cover - CLI
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=400)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--refine", type=int, default=3,
+                    help="coordinate-refinement rounds")
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="batched engine for candidate scoring (jax wins "
+                         "on accelerator hosts; parity-checked vs numpy)")
     args = ap.parse_args()
     params, best = calibrate(iters=args.iters, seed=args.seed,
-                             chunk=args.chunk)
-    save(params, best)
+                             chunk=args.chunk, refine_rounds=args.refine,
+                             backend=args.backend)
     metrics = evaluate(params)
+    save(params, best, metrics=metrics)
     print(json.dumps({"loss": best,
                       "speedup": metrics["speedup"],
                       "geomean": metrics["geomean_speedup"],

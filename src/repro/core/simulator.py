@@ -30,14 +30,32 @@ microarchitectural mechanisms the paper identifies, each switchable per the
 Timing semantics follow the ideal-chaining model of §II.C: RAW consumers
 start once the producer's first results exist (chaining) and can finish no
 earlier than the producer finishes plus the propagation delay.
+
+Deviation attribution: every absolute time the recurrence tracks carries a
+component vector (``repro.core.stalls``) decomposing it into ideal time
+plus nine stall categories over the paper's three critical paths.  The
+vector follows the exact same max/+ dataflow as the scalar time itself —
+``max`` adopts the components of the binding argument, additions charge
+the responsible category — so ``ideal + sum(stalls) == measured`` holds
+per instruction and per kernel, and the kernel-level vector explains the
+finishing instruction's critical path.  Totals are computed by the same
+float expressions as before, so cycles stay bit-identical to the
+pre-attribution simulator.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 
+import numpy as np
+
 from repro.core.isa import (KernelTrace, MachineConfig, OpKind, OptConfig,
                             Stride, VInstr)
+from repro.core.stalls import (DEP_ISSUE_GAP, DEP_WAR_RELEASE, IDEAL,
+                               MEM_DEMAND_LATENCY, MEM_RW_TURNAROUND,
+                               MEM_STORE_COMMIT, MEM_TX_OVERHEAD, NCOMP,
+                               OPR_BANK_CONFLICT, OPR_CHAIN_DELAY,
+                               OPR_QUEUE_LIMIT)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +95,8 @@ class InstrTiming:
     first_out: float
     complete: float
     read_done: float                   # when source-operand reads finish
+    ideal: float = 0.0                 # ideal component of `complete`
+    stalls: np.ndarray | None = None   # (9,) stall categories of `complete`
 
 
 @dataclasses.dataclass
@@ -88,6 +108,8 @@ class SimResult:
     timings: list[InstrTiming]
     busy_fpu: float = 0.0
     busy_bus: float = 0.0
+    ideal: float = 0.0                 # ideal component of `cycles`
+    stalls: np.ndarray | None = None   # (9,) stall categories of `cycles`
 
     @property
     def gflops(self) -> float:
@@ -103,13 +125,46 @@ class SimResult:
         return self.busy_bus / max(self.cycles, 1e-9)
 
 
+def _vmax(*cands: tuple[float, np.ndarray | None]
+          ) -> tuple[float, np.ndarray | None]:
+    """max over (time, components) pairs; ties keep the earliest argument,
+    matching Python ``max``'s first-maximal semantics."""
+    t, c = cands[0]
+    for t2, c2 in cands[1:]:
+        if t2 > t:
+            t, c = t2, c2
+    return t, c
+
+
+def _bump(c: np.ndarray | None,
+          *pairs: tuple[int, float]) -> np.ndarray | None:
+    """Copy a component vector, adding `amount` at each `(index, amount)`.
+
+    `None` passes through: with attribution disabled no component state
+    exists and the accounting collapses to cheap no-ops."""
+    if c is None:
+        return None
+    out = c.copy()
+    for idx, amount in pairs:
+        out[idx] += amount
+    return out
+
+
 class AraSimulator:
-    """Simulate a kernel trace under a given optimization configuration."""
+    """Simulate a kernel trace under a given optimization configuration.
+
+    `attribution` (default on) tracks the per-instruction/per-kernel
+    stall decomposition; cycles are identical either way, so callers that
+    only need totals (timing loops, large scalar sweeps) can turn it off
+    to skip the component bookkeeping (~3x on the scalar path).
+    """
 
     def __init__(self, mc: MachineConfig = MachineConfig(),
-                 params: SimParams = SimParams()):
+                 params: SimParams = SimParams(),
+                 attribution: bool = True):
         self.mc = mc
         self.p = params
+        self.attribution = attribution
 
     # -- per-config parameter views -----------------------------------------
     def _view(self, opt: OptConfig):
@@ -148,23 +203,59 @@ class AraSimulator:
         timings: list[InstrTiming] = []
         busy_fpu = busy_bus = 0.0
 
+        # Component vectors mirror each tracked time (see module docstring);
+        # arrays are treated as immutable, `_bump` copies on write.  With
+        # attribution off every component is None and `_bump` passes it
+        # through, leaving only the (identical) total arithmetic.
+        att = self.attribution
+        Z = np.zeros(NCOMP) if att else None
+        c_issue = Z
+        c_bus = Z
+        c_wbus = Z
+        c_addr = Z
+        c_fpu = Z
+        c_sldu = Z
+        writer_c: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+        rrel_c: dict[str, np.ndarray] = {}
+        total = 0.0
+        c_total = Z
+        # Chain-propagation split: the forwarding floor is part of the
+        # ideal prologue (Eq. (1) startup delays); the write-back/re-read
+        # excess is an operand-delivery stall.
+        d_chain_ideal = min(v["d_chain"], p.d_fwd)
+        d_chain_stall = v["d_chain"] - d_chain_ideal
+
         for ins in trace.instrs:
             # ---- dependence constraints (lane side) --------------------
             raw_start = issue_t
+            c_rs = c_issue
             raw_complete = 0.0
+            c_rc = Z
             for s in ins.srcs:
                 w = writer.get(s)
                 if w is not None:
-                    raw_start = max(raw_start, w.first_out + v["d_chain"])
-                    raw_complete = max(raw_complete, w.complete + v["d_chain"])
+                    cf, cc = writer_c[s]
+                    cand = w.first_out + v["d_chain"]
+                    if cand > raw_start:
+                        raw_start = cand
+                        c_rs = _bump(cf, (IDEAL, d_chain_ideal),
+                                     (OPR_CHAIN_DELAY, d_chain_stall))
+                    cand = w.complete + v["d_chain"]
+                    if cand > raw_complete:
+                        raw_complete = cand
+                        c_rc = _bump(cc, (IDEAL, d_chain_ideal),
+                                     (OPR_CHAIN_DELAY, d_chain_stall))
             war_gate = 0.0
+            c_wg = Z
             if ins.dst is not None:
                 rel = reader_release.get(ins.dst)
-                if rel is not None:
-                    war_gate = max(war_gate, rel)          # WAR
+                if rel is not None and rel > war_gate:     # WAR
+                    war_gate = rel
+                    c_wg = rrel_c[ins.dst]
                 w = writer.get(ins.dst)
-                if w is not None:
-                    war_gate = max(war_gate, w.first_out)  # WAW (in order)
+                if w is not None and w.first_out > war_gate:
+                    war_gate = w.first_out                 # WAW (in order)
+                    c_wg = writer_c[ins.dst][0]
 
             # ---- execute on resource ----------------------------------
             if ins.kind is OpKind.LOAD:
@@ -172,9 +263,12 @@ class AraSimulator:
                 if ins.stride is Stride.INDEXED:
                     # Indexed loads need their index vector first (RAW).
                     dur_bus = ins.vl * (ins.sew / bpc) + ins.vl * v["idx_ovh"]
+                    dur_ideal = ins.vl * (ins.sew / bpc)
                 else:
                     nburst = max(1, math.ceil(nbytes / mc.burst_bytes))
                     dur_bus = nbytes / bpc + nburst * v["tx_ovh"]
+                    dur_ideal = nbytes / bpc
+                dur_stall = dur_bus - dur_ideal
                 turn = v["rw_turn"] if (bus_last_kind is OpKind.STORE) else 0.0
                 # The sequencer does not hand a load to the VLSU until its
                 # WAR/WAW hazards release (§IV.B conservative blocking) —
@@ -185,8 +279,13 @@ class AraSimulator:
                 # request; next-VL prefetch (M) turns warm unit-stride
                 # streams into prefetch-buffer hits, cutting the latency
                 # out of the dependence recurrence.
-                req_start = max(issue_t, raw_start, addr_free,
-                                bus_free + turn, war_gate)
+                req_start, c_req = _vmax(
+                    (issue_t, c_issue), (raw_start, c_rs),
+                    (addr_free, c_addr),
+                    (bus_free + turn,
+                     c_bus if turn == 0.0
+                     else _bump(c_bus, (MEM_RW_TURNAROUND, turn))),
+                    (war_gate, c_wg))
                 if opt.memory and ins.stride is Stride.UNIT:
                     lat = p.mem_latency if ins.first_strip else p.prefetch_hit
                 elif opt.memory and ins.stride is Stride.STRIDED:
@@ -194,15 +293,33 @@ class AraSimulator:
                            0.5 * (p.mem_latency + p.prefetch_hit))
                 else:
                     lat = p.mem_latency
+                # A prefetch-buffer hit is the best any front end achieves:
+                # latency up to that floor is ideal fill, the rest is
+                # exposed demand latency.
+                lat_ideal = lat if lat < p.prefetch_hit else p.prefetch_hit
+                lat_stall = lat - lat_ideal
                 data_done = req_start + lat + dur_bus
+                c_dd = _bump(c_req, (IDEAL, lat_ideal + dur_ideal),
+                             (MEM_DEMAND_LATENCY, lat_stall),
+                             (MEM_TX_OVERHEAD, dur_stall))
                 writeback_gate = war_gate
-                first_out = max(req_start + lat + mc.burst_bytes / bpc,
-                                writeback_gate)
-                complete = max(data_done, writeback_gate + ins.vl / epc)
+                first_out, c_fo = _vmax(
+                    (req_start + lat + mc.burst_bytes / bpc,
+                     _bump(c_req, (IDEAL, lat_ideal + mc.burst_bytes / bpc),
+                           (MEM_DEMAND_LATENCY, lat_stall))),
+                    (writeback_gate, c_wg))
+                complete, c_cp = _vmax(
+                    (data_done, c_dd),
+                    (writeback_gate + ins.vl / epc,
+                     _bump(c_wg, (IDEAL, ins.vl / epc))))
                 read_done = req_start            # loads read no lane vregs
+                c_rd = c_req
                 busy_start = req_start
                 bus_free = req_start + dur_bus
+                c_bus = _bump(c_req, (IDEAL, dur_ideal),
+                              (MEM_TX_OVERHEAD, dur_stall))
                 addr_free = (req_start + (0.0 if opt.memory else dur_bus))
+                c_addr = c_req if opt.memory else c_bus
                 bus_last_kind = OpKind.LOAD
                 busy_bus += dur_bus
 
@@ -210,68 +327,128 @@ class AraSimulator:
                 nbytes = ins.bytes
                 if ins.stride is Stride.INDEXED:
                     dur_bus = ins.vl * (ins.sew / bpc) + ins.vl * v["idx_ovh"]
+                    dur_ideal = ins.vl * (ins.sew / bpc)
                 else:
                     nburst = max(1, math.ceil(nbytes / mc.burst_bytes))
                     dur_bus = nbytes / bpc + nburst * v["tx_ovh"]
+                    dur_ideal = nbytes / bpc
+                dur_stall = dur_bus - dur_ideal
                 if split_rw:
-                    busy_start = max(raw_start, war_gate, addr_free,
-                                     wbus_free)
+                    busy_start, c_bs = _vmax(
+                        (raw_start, c_rs), (war_gate, c_wg),
+                        (addr_free, c_addr), (wbus_free, c_wbus))
                     wbus_free = busy_start + dur_bus
+                    c_wbus = _bump(c_bs, (IDEAL, dur_ideal),
+                                   (MEM_TX_OVERHEAD, dur_stall))
                     # Separate issue path, SHARED DRAM bandwidth: the write
                     # still consumes read-channel-visible bandwidth at its
                     # drain time (no ordering block, no free bandwidth).
-                    bus_free = max(bus_free, busy_start) + dur_bus
+                    bus_free, c_bus = _vmax((bus_free, c_bus),
+                                            (busy_start, c_bs))
+                    bus_free = bus_free + dur_bus
+                    c_bus = _bump(c_bus, (IDEAL, dur_ideal),
+                                  (MEM_TX_OVERHEAD, dur_stall))
                 else:
                     turn = v["rw_turn"] if (bus_last_kind is OpKind.LOAD) \
                         else 0.0
-                    busy_start = max(raw_start, war_gate, addr_free,
-                                     bus_free + turn)
+                    busy_start, c_bs = _vmax(
+                        (raw_start, c_rs), (war_gate, c_wg),
+                        (addr_free, c_addr),
+                        (bus_free + turn,
+                         c_bus if turn == 0.0
+                         else _bump(c_bus, (MEM_RW_TURNAROUND, turn))))
                     # Unified path: the store holds the issue path until its
                     # data drains + commit — subsequent loads queue behind.
                     bus_free = busy_start + dur_bus + v["store_commit"]
+                    c_bus = _bump(c_bs, (IDEAL, dur_ideal),
+                                  (MEM_TX_OVERHEAD, dur_stall),
+                                  (MEM_STORE_COMMIT, v["store_commit"]))
                 # A store *completes* (retires, hazard-wise) only when the
                 # memory system acknowledges the write — a full memory
                 # round trip after the last data beat.  Baseline WAR
                 # release waits for this (C releases at read-done instead).
-                complete = max(busy_start + dur_bus + p.mem_latency,
-                               raw_complete)
+                complete, c_cp = _vmax(
+                    (busy_start + dur_bus + p.mem_latency,
+                     _bump(c_bs, (IDEAL, dur_ideal),
+                           (MEM_TX_OVERHEAD, dur_stall),
+                           (MEM_STORE_COMMIT, p.mem_latency))),
+                    (raw_complete, c_rc))
                 first_out = complete
+                c_fo = c_cp
                 # Store reads its source into the store queue at lane rate,
-                # bounded by queue depth vs. bus drain.
-                read_done = max(busy_start + ins.vl / epc,
-                                busy_start + dur_bus - v["queue_adv"])
+                # bounded by queue depth vs. bus drain: any excess over the
+                # lane-rate read is queue-depth run-ahead shortfall.
+                t1 = busy_start + ins.vl / epc
+                t2 = busy_start + dur_bus - v["queue_adv"]
+                read_done = max(t1, t2)
+                c_rd = _bump(c_bs, (IDEAL, ins.vl / epc))
+                if t2 > t1:
+                    c_rd = _bump(c_rd, (OPR_QUEUE_LIMIT, t2 - t1))
                 addr_free = (busy_start + (0.0 if opt.memory else dur_bus))
+                c_addr = c_bs if opt.memory else \
+                    _bump(c_bs, (IDEAL, dur_ideal),
+                          (MEM_TX_OVERHEAD, dur_stall))
                 bus_last_kind = OpKind.STORE
                 busy_bus += dur_bus
 
             elif ins.kind in (OpKind.COMPUTE, OpKind.REDUCE, OpKind.SLIDE):
                 dur = (ins.vl / epc) * v["conflict"]
+                dur_ideal = ins.vl / epc
                 if ins.name.startswith("vfdiv"):
                     # Non-pipelined divider: inherent serialization neither
-                    # baseline nor Ara-Opt can hide.
+                    # baseline nor Ara-Opt can hide — all ideal time.
                     dur = (ins.vl / epc) * p.div_factor
+                    dur_ideal = dur
                 if ins.kind is OpKind.REDUCE:
-                    dur += math.ceil(math.log2(max(ins.vl, 2))) * mc.fu_latency
+                    red = math.ceil(math.log2(max(ins.vl, 2))) * mc.fu_latency
+                    dur += red
+                    dur_ideal += red        # reduction tree is inherent
+                dur_stall = dur - dur_ideal  # VRF bank-conflict stretch
                 unit_free = sldu_free if ins.kind is OpKind.SLIDE else fpu_free
-                busy_start = max(raw_start, war_gate, unit_free)
-                complete = max(busy_start + mc.fu_latency + dur, raw_complete)
+                c_unit = c_sldu if ins.kind is OpKind.SLIDE else c_fpu
+                busy_start, c_bs = _vmax((raw_start, c_rs),
+                                         (war_gate, c_wg),
+                                         (unit_free, c_unit))
+                complete, c_cp = _vmax(
+                    (busy_start + mc.fu_latency + dur,
+                     _bump(c_bs, (IDEAL, mc.fu_latency + dur_ideal),
+                           (OPR_BANK_CONFLICT, dur_stall))),
+                    (raw_complete, c_rc))
                 if ins.kind is OpKind.REDUCE:
                     first_out = complete                # scalar at the end
+                    c_fo = c_cp
                 else:
                     first_out = busy_start + mc.fu_latency
-                read_done = max(busy_start + ins.vl / epc,
-                                complete - mc.fu_latency - v["queue_adv"])
-                occupancy_end = max(busy_start + dur, complete - mc.fu_latency)
+                    c_fo = _bump(c_bs, (IDEAL, mc.fu_latency))
+                t1 = busy_start + ins.vl / epc
+                t2 = complete - mc.fu_latency - v["queue_adv"]
+                read_done = max(t1, t2)
+                c_rd = _bump(c_bs, (IDEAL, ins.vl / epc))
+                if t2 > t1:
+                    c_rd = _bump(c_rd, (OPR_QUEUE_LIMIT, t2 - t1))
+                # Unit occupancy may be held past its own duration by the
+                # trailing operand-delivery constraint (raw_complete).
+                t1 = busy_start + dur
+                t2 = complete - mc.fu_latency
+                occupancy_end = max(t1, t2)
+                c_occ = _bump(c_bs, (IDEAL, dur_ideal),
+                              (OPR_BANK_CONFLICT, dur_stall))
+                if t2 > t1:
+                    c_occ = _bump(c_occ, (OPR_CHAIN_DELAY, t2 - t1))
                 if ins.kind is OpKind.SLIDE:
                     sldu_free = occupancy_end
+                    c_sldu = c_occ
                 else:
                     fpu_free = occupancy_end
+                    c_fpu = c_occ
                     busy_fpu += ins.vl / epc            # useful compute time
             else:                                        # pragma: no cover
                 raise ValueError(f"unknown kind {ins.kind}")
 
             t = InstrTiming(start=busy_start, first_out=first_out,
-                            complete=complete, read_done=read_done)
+                            complete=complete, read_done=read_done,
+                            ideal=c_cp[IDEAL] if att else 0.0,
+                            stalls=c_cp[1:].copy() if att else None)
             timings.append(t)
 
             # ---- update hazard state ----------------------------------
@@ -279,17 +456,29 @@ class AraSimulator:
             # line blocked on execution start: Ara's sequencer hands
             # instructions to per-unit queues and chaining paces them.
             issue_t = issue_t + v["issue_gap"]
+            c_issue = _bump(c_issue, (DEP_ISSUE_GAP, v["issue_gap"]))
             if ins.dst is not None:
                 writer[ins.dst] = t
-            for s in ins.srcs:
-                release = (t.read_done if opt.control
-                           else t.complete + p.war_release_ovh)
-                reader_release[s] = max(reader_release.get(s, 0.0), release)
+                writer_c[ins.dst] = (c_fo, c_cp)
+            if ins.srcs:
+                if opt.control:
+                    release, c_rel = t.read_done, c_rd
+                else:
+                    release = t.complete + p.war_release_ovh
+                    c_rel = _bump(c_cp, (DEP_WAR_RELEASE, p.war_release_ovh))
+                for s in ins.srcs:
+                    if release > reader_release.get(s, 0.0):
+                        reader_release[s] = release
+                        rrel_c[s] = c_rel
+            if complete > total:
+                total = complete
+                c_total = c_cp
 
-        total = max((t.complete for t in timings), default=0.0)
         return SimResult(kernel=trace.name, cycles=total,
                          flops=trace.total_flops, bytes=trace.total_bytes,
-                         timings=timings, busy_fpu=busy_fpu, busy_bus=busy_bus)
+                         timings=timings, busy_fpu=busy_fpu, busy_bus=busy_bus,
+                         ideal=c_total[IDEAL] if att else 0.0,
+                         stalls=c_total[1:].copy() if att else None)
 
     # ------------------------------------------------------------------
     def speedup(self, trace: KernelTrace, opt: OptConfig) -> float:

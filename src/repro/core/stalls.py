@@ -1,0 +1,148 @@
+"""Stall-category vocabulary for deviation attribution (paper §II.C, §IV).
+
+The paper explains every cycle a kernel loses against the ideal chaining
+model through three critical paths; the simulators decompose each timing
+value into an *ideal* component plus nine stall categories along those
+paths:
+
+  memory-side supply      demand latency exposed beyond a prefetch hit,
+                          per-transaction overhead (burst/index expansion),
+                          read<->write bus turnaround, and store-commit
+                          round trips holding the unified path (§IV.A);
+  dependence & issue      conservative inter-instruction issue gaps and
+                          WAR read-occupancy released only at completion
+                          plus overhead (§IV.B);
+  operand delivery        producer->consumer chain delay beyond the
+                          forwarding floor, VRF bank-conflict stretch, and
+                          shallow operand/result queues limiting run-ahead
+                          (§IV.C, §VI.C).
+
+Every tracked absolute time T carries a component vector c of length
+``NCOMP`` with ``c[IDEAL] + c[1:].sum() == T`` (to float64 resolution);
+`repro.core.simulator` and `repro.core.batch_sim` maintain the vectors
+through the timing recurrence, `repro.analysis` consumes them.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+# Component indices.  Index 0 is the ideal-time component; 1..9 are the
+# stall categories (``STALL_CATEGORIES[i - 1]`` names component ``i``).
+IDEAL = 0
+MEM_DEMAND_LATENCY = 1
+MEM_TX_OVERHEAD = 2
+MEM_RW_TURNAROUND = 3
+MEM_STORE_COMMIT = 4
+DEP_ISSUE_GAP = 5
+DEP_WAR_RELEASE = 6
+OPR_CHAIN_DELAY = 7
+OPR_BANK_CONFLICT = 8
+OPR_QUEUE_LIMIT = 9
+NCOMP = 10
+
+#: Stall-category names, ordered to match component indices 1..9.
+STALL_CATEGORIES: tuple[str, ...] = (
+    "mem_demand_latency",
+    "mem_tx_overhead",
+    "mem_rw_turnaround",
+    "mem_store_commit",
+    "dep_issue_gap",
+    "dep_war_release",
+    "opr_chain_delay",
+    "opr_bank_conflict",
+    "opr_queue_limit",
+)
+
+#: The paper's three critical paths -> stall categories on that path.
+CRITICAL_PATHS: dict[str, tuple[str, ...]] = {
+    "mem_supply": ("mem_demand_latency", "mem_tx_overhead",
+                   "mem_rw_turnaround", "mem_store_commit"),
+    "dep_issue": ("dep_issue_gap", "dep_war_release"),
+    "operand": ("opr_chain_delay", "opr_bank_conflict", "opr_queue_limit"),
+}
+
+_CAT_INDEX = {name: i for i, name in enumerate(STALL_CATEGORIES)}
+
+#: Per-path index lists into a 9-long stall vector.
+PATH_INDICES: dict[str, tuple[int, ...]] = {
+    path: tuple(_CAT_INDEX[c] for c in cats)
+    for path, cats in CRITICAL_PATHS.items()
+}
+
+
+def stall_dict(stalls: Sequence[float] | np.ndarray) -> dict[str, float]:
+    """Name the entries of a 9-long stall vector."""
+    vec = np.asarray(stalls, np.float64)
+    if vec.shape[-1] != len(STALL_CATEGORIES):
+        raise ValueError(f"expected {len(STALL_CATEGORIES)} stall entries, "
+                         f"got {vec.shape[-1]}")
+    return {name: float(vec[..., i])
+            for i, name in enumerate(STALL_CATEGORIES)}
+
+
+def group_stalls(stalls: Sequence[float] | np.ndarray) -> dict[str, float]:
+    """Sum a stall vector (trailing axis = 9 categories) per critical path."""
+    vec = np.asarray(stalls, np.float64)
+    return {path: float(vec[..., list(idx)].sum(axis=-1))
+            if vec.ndim == 1 else vec[..., list(idx)].sum(axis=-1)
+            for path, idx in PATH_INDICES.items()}
+
+
+def top_sources(stalls: Sequence[float] | np.ndarray,
+                n: int = 2) -> list[tuple[str, float]]:
+    """The `n` largest stall categories of a 9-long vector, descending."""
+    vec = np.asarray(stalls, np.float64)
+    order = np.argsort(vec)[::-1][:n]
+    return [(STALL_CATEGORIES[i], float(vec[i])) for i in order]
+
+
+def top_paths(stalls: Sequence[float] | np.ndarray,
+              n: int = 2) -> list[tuple[str, float]]:
+    """The `n` critical paths with the largest summed stall, descending."""
+    groups = group_stalls(np.asarray(stalls, np.float64))
+    ranked = sorted(groups.items(), key=lambda kv: kv[1], reverse=True)
+    return [(path, float(val)) for path, val in ranked[:n]]
+
+
+def path_of(category: str) -> str:
+    """Critical path a stall category belongs to."""
+    for path, cats in CRITICAL_PATHS.items():
+        if category in cats:
+            return path
+    raise KeyError(category)
+
+
+def check_invariant(ideal: float, stalls: Sequence[float] | np.ndarray,
+                    measured: float, rel: float = 1e-9,
+                    abs_tol: float = 1e-6) -> bool:
+    """``ideal + sum(stalls) == measured`` to float64 resolution."""
+    total = float(ideal) + float(np.sum(stalls))
+    return abs(total - measured) <= max(abs_tol, rel * abs(measured))
+
+
+def as_row(ideal: float, stalls: Sequence[float] | np.ndarray,
+           measured: float) -> dict[str, float]:
+    """Flatten one attribution into CSV-friendly columns."""
+    row: dict[str, float] = {"cycles": float(measured),
+                             "ideal": float(ideal)}
+    row.update(stall_dict(stalls))
+    for path, val in group_stalls(stalls).items():
+        row[path] = float(val)
+    return row
+
+
+def zero_components(*shape: int) -> np.ndarray:
+    """A fresh all-zero component vector/tensor with trailing NCOMP axis."""
+    return np.zeros((*shape, NCOMP), np.float64)
+
+
+__all__ = [
+    "IDEAL", "MEM_DEMAND_LATENCY", "MEM_TX_OVERHEAD", "MEM_RW_TURNAROUND",
+    "MEM_STORE_COMMIT", "DEP_ISSUE_GAP", "DEP_WAR_RELEASE",
+    "OPR_CHAIN_DELAY", "OPR_BANK_CONFLICT", "OPR_QUEUE_LIMIT", "NCOMP",
+    "STALL_CATEGORIES", "CRITICAL_PATHS", "PATH_INDICES", "stall_dict",
+    "group_stalls", "top_sources", "top_paths", "path_of",
+    "check_invariant", "as_row", "zero_components",
+]

@@ -10,8 +10,14 @@ names: regenerating a trace with different sizes (or editing the
 simulator's parameters) changes the key and transparently misses.
 
 Values hold only the scalar outputs (cycles, busy counters, roofline
-accounting), not per-instruction timings, so cells stay a few hundred
-bytes each.
+accounting, and — when the producer ran with attribution — the kernel
+ideal/stall decomposition), not per-instruction timings, so cells stay a
+few hundred bytes each.
+
+Garbage collection: the store grows one file per distinct cell forever
+unless bounded.  `prune(max_entries=N)` keeps the N most-recently-touched
+cells; constructing `SweepCache(max_entries=N)` enforces that bound
+automatically as `put` inserts.
 """
 from __future__ import annotations
 
@@ -21,6 +27,8 @@ import json
 import os
 import pathlib
 from typing import Iterable
+
+import numpy as np
 
 from repro.core.isa import KernelTrace, MachineConfig, OptConfig
 from repro.core.simulator import SimParams, SimResult
@@ -80,15 +88,36 @@ def cell_key(trace: KernelTrace, opt: OptConfig,
 
 
 class SweepCache:
-    """Filesystem-backed cache of sweep cells, one JSON file per key."""
+    """Filesystem-backed cache of sweep cells, one JSON file per key.
 
-    def __init__(self, root: str | os.PathLike | None = None):
+    `max_entries` (optional) bounds the store: once `put` pushes the cell
+    count past the bound, the least-recently-touched cells are garbage-
+    collected down to a 90% watermark (amortizing the GC scan while a
+    sweep fills the store).  Every read bumps a cell's mtime, so hot
+    cells survive eviction regardless of which instance runs the GC.
+    """
+
+    def __init__(self, root: str | os.PathLike | None = None,
+                 max_entries: int | None = None):
         self.root = pathlib.Path(root) if root is not None else DEFAULT_ROOT
         self.hits = 0
         self.misses = 0
+        if max_entries is not None and max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.max_entries = max_entries
+        self._count: int | None = None     # lazily-initialized file count
+        self._puts_since_sync = 0
 
     def _path(self, key: str) -> pathlib.Path:
         return self.root / key[:2] / f"{key}.json"
+
+    def _entries(self) -> list[pathlib.Path]:
+        if not self.root.exists():
+            return []
+        return list(self.root.glob("*/*.json"))
+
+    def __len__(self) -> int:
+        return len(self._entries())
 
     def get(self, key: str) -> dict | None:
         p = self._path(key)
@@ -98,38 +127,98 @@ class SweepCache:
             self.misses += 1
             return None
         self.hits += 1
+        # LRU touch unconditionally: GC may run from a *different*
+        # SweepCache instance (or an operator's prune call), and eviction
+        # must still see read-hot cells as recently used.
+        try:
+            os.utime(p)
+        except OSError:                    # pragma: no cover - racy unlink
+            pass
         return value
 
     def put(self, key: str, value: dict) -> None:
         p = self._path(key)
         p.parent.mkdir(parents=True, exist_ok=True)
+        existed = p.exists()
         tmp = p.with_suffix(".tmp")
         tmp.write_text(json.dumps(value, sort_keys=True))
         os.replace(tmp, p)
+        if self.max_entries is not None:
+            # Other instances/processes may insert into the same root, so
+            # the local count is re-synced from disk periodically instead
+            # of trusted forever.
+            self._puts_since_sync += 1
+            if self._count is None or self._puts_since_sync >= 64:
+                self._count = len(self)
+                self._puts_since_sync = 0
+            elif not existed:
+                self._count += 1
+            if self._count > self.max_entries:
+                # Collect down to a low watermark (90%) so a filling sweep
+                # amortizes the O(entries) scan instead of re-globbing the
+                # whole store on every subsequent insert.
+                self.prune(max_entries=max(self.max_entries * 9 // 10, 1))
 
-    def get_result(self, key: str, kernel: str) -> SimResult | None:
+    def get_result(self, key: str, kernel: str,
+                   attribution: bool = False) -> SimResult | None:
+        """Restore a cached cell.  With `attribution`, a cell stored
+        without its stall decomposition counts as a miss so the caller
+        re-simulates with accounting on."""
         v = self.get(key)
         if v is None:
             return None
+        if attribution and "stalls" not in v:
+            self.hits -= 1
+            self.misses += 1
+            return None
+        stalls = (np.asarray(v["stalls"], np.float64)
+                  if "stalls" in v else None)
         return SimResult(kernel=kernel, cycles=v["cycles"],
                          flops=int(v["flops"]), bytes=int(v["bytes"]),
                          timings=[], busy_fpu=v["busy_fpu"],
-                         busy_bus=v["busy_bus"])
+                         busy_bus=v["busy_bus"],
+                         ideal=v.get("ideal", 0.0), stalls=stalls)
 
     def put_result(self, key: str, res: SimResult) -> None:
-        self.put(key, {"cycles": res.cycles, "flops": res.flops,
-                       "bytes": res.bytes, "busy_fpu": res.busy_fpu,
-                       "busy_bus": res.busy_bus})
+        value = {"cycles": res.cycles, "flops": res.flops,
+                 "bytes": res.bytes, "busy_fpu": res.busy_fpu,
+                 "busy_bus": res.busy_bus}
+        if res.stalls is not None:
+            value["ideal"] = float(res.ideal)
+            value["stalls"] = [float(x) for x in res.stalls]
+        self.put(key, value)
 
-    def prune(self, keep_keys: Iterable[str] | None = None) -> int:
-        """Drop cells not in `keep_keys` (all cells when None); returns
-        the number of removed entries."""
+    def prune(self, keep_keys: Iterable[str] | None = None,
+              max_entries: int | None = None) -> int:
+        """Garbage-collect cells; returns the number removed.
+
+        With `max_entries`, keep the N most-recently-touched cells —
+        `keep_keys` (if also given) are additionally protected from
+        eviction.  With only `keep_keys`, drop every other cell.  With
+        neither, drop everything (the full-flush legacy behavior).
+        """
+        entries = self._entries()
         keep = set(keep_keys or ())
+        doomed: list[pathlib.Path]
+        if max_entries is not None:
+            entries.sort(key=_mtime_or_gone, reverse=True)
+            doomed = [p for p in entries[max_entries:]
+                      if p.stem not in keep]
+        else:
+            doomed = [p for p in entries if p.stem not in keep]
         removed = 0
-        if not self.root.exists():
-            return 0
-        for p in self.root.glob("*/*.json"):
-            if p.stem not in keep:
-                p.unlink(missing_ok=True)
-                removed += 1
+        for p in doomed:
+            p.unlink(missing_ok=True)
+            removed += 1
+        if self._count is not None:
+            self._count = max(self._count - removed, 0)
         return removed
+
+
+def _mtime_or_gone(p: pathlib.Path) -> float:
+    """Sort key robust to cells unlinked by a concurrent GC: a vanished
+    entry sorts oldest, and its own unlink is already missing_ok."""
+    try:
+        return p.stat().st_mtime
+    except OSError:
+        return float("-inf")

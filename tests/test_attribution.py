@@ -1,0 +1,305 @@
+"""Deviation-attribution engine: exact stall accounting + analysis layer.
+
+The load-bearing contract: for every kernel and every ablation cell,
+``ideal + sum(stall_categories) == simulated_cycles`` — per instruction
+and per kernel, scalar and batched — and the decomposition reproduces the
+paper's §IV narrative (scal/axpy lose to memory-side supply at baseline,
+gemm to operand delivery).
+"""
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.analysis import attribution as A
+from repro.analysis import report as R
+from repro.analysis import timeline as TL
+from repro.core import stalls as S
+from repro.core.batch_sim import BatchAraSimulator
+from repro.core.calibration import load as load_params
+from repro.core.isa import (ABLATION_GRID, KernelTrace, OpKind, OptConfig,
+                            Stride, VInstr)
+from repro.core.simulator import AraSimulator, SimParams
+from repro.core.traces import DEFAULT_TRACES, stack_traces
+
+ALL_CORNERS = (OptConfig.baseline(), *ABLATION_GRID)
+#: Small traces where the per-instruction invariant is checked exhaustively
+#: (kernel-level invariants are checked for every kernel/corner).
+SMALL = ("scal", "axpy", "dotp", "gemv", "symv", "trsm", "spmv", "dwt")
+
+
+def _inv_ok(ideal, stalls, measured):
+    return S.check_invariant(ideal, stalls, measured,
+                             rel=1e-9, abs_tol=1e-6)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return load_params()
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return {name: fn() for name, fn in DEFAULT_TRACES.items()}
+
+
+@pytest.fixture(scope="module")
+def corner_results(traces, params):
+    sim = AraSimulator(params=params)
+    return {(name, opt.label): sim.run(tr, opt)
+            for name, tr in traces.items() for opt in ALL_CORNERS}
+
+
+def test_kernel_invariant_every_cell(traces, corner_results):
+    """Acceptance: ideal + sum(stalls) == cycles for every kernel x corner,
+    with non-negative components."""
+    for (name, label), res in corner_results.items():
+        assert res.stalls is not None and res.stalls.shape == (9,)
+        assert _inv_ok(res.ideal, res.stalls, res.cycles), (name, label)
+        assert res.ideal >= -1e-9, (name, label)
+        assert res.stalls.min() >= -1e-9, (name, label, res.stalls)
+
+
+def test_instruction_invariant(traces, corner_results):
+    for name in SMALL:
+        for opt in ALL_CORNERS:
+            res = corner_results[(name, opt.label)]
+            for i, t in enumerate(res.timings):
+                assert t.stalls is not None
+                assert _inv_ok(t.ideal, t.stalls, t.complete), \
+                    (name, opt.label, i)
+                assert t.ideal >= -1e-9
+                assert t.stalls.min() >= -1e-9
+
+
+def test_batched_attribution_matches_scalar(traces, corner_results):
+    bsim = BatchAraSimulator()
+    batch = bsim.sweep(list(traces.values()), ALL_CORNERS,
+                       load_params(), attribution=True)
+    for bi, name in enumerate(traces):
+        for oi, opt in enumerate(ALL_CORNERS):
+            ref = corner_results[(name, opt.label)]
+            np.testing.assert_allclose(batch.ideal[bi, oi, 0], ref.ideal,
+                                       rtol=1e-12, atol=1e-9,
+                                       err_msg=f"{name}/{opt.label}")
+            np.testing.assert_allclose(batch.stalls[bi, oi, 0], ref.stalls,
+                                       rtol=1e-12, atol=1e-9,
+                                       err_msg=f"{name}/{opt.label}")
+    # Batched tensors satisfy the invariant themselves (float64 tolerance).
+    gap = batch.cycles - batch.ideal - batch.stalls.sum(axis=-1)
+    assert np.abs(gap).max() <= 1e-6 + 1e-9 * batch.cycles.max()
+
+
+def test_scalar_attribution_off_identical_cycles(traces, corner_results,
+                                                 params):
+    """attribution=False must change nothing but the bookkeeping."""
+    fast = AraSimulator(params=params, attribution=False)
+    for name in ("scal", "axpy", "dotp", "spmv"):
+        for opt in ALL_CORNERS:
+            ref = corner_results[(name, opt.label)]
+            got = fast.run(traces[name], opt)
+            assert got.cycles == ref.cycles, (name, opt.label)
+            assert got.stalls is None and got.ideal == 0.0
+            assert all(t.stalls is None for t in got.timings)
+            for tg, tr_ in zip(got.timings, ref.timings):
+                assert (tg.start, tg.first_out, tg.complete, tg.read_done) \
+                    == (tr_.start, tr_.first_out, tr_.complete,
+                        tr_.read_done)
+
+
+def test_jax_backend_rejects_attribution(traces):
+    bsim = BatchAraSimulator()
+    with pytest.raises(NotImplementedError):
+        bsim.sweep([traces["scal"]], [OptConfig.baseline()],
+                   backend="jax", attribution=True)
+
+
+# --- paper §IV narrative ---------------------------------------------------
+
+def test_scal_axpy_mem_supply_dominates_baseline(corner_results):
+    """scal/axpy at baseline lose primarily to the memory-side supply
+    path (store-coupled r/w path, commit latency, tx overhead)."""
+    for name in ("scal", "axpy"):
+        res = corner_results[(name, "base")]
+        paths = S.group_stalls(res.stalls)
+        assert paths["mem_supply"] > paths["dep_issue"], (name, paths)
+        assert paths["mem_supply"] > paths["operand"], (name, paths)
+        assert paths["mem_supply"] > 0.1 * res.cycles, (name, paths)
+
+
+def test_gemm_operand_delivery_in_top2(corner_results):
+    """gemm at baseline: operand delivery (VRF bank conflict, chain delay)
+    is among the top-2 critical paths (§VI.C: 14% conflict stretch)."""
+    res = corner_results[("gemm", "base")]
+    top = [path for path, _ in S.top_paths(res.stalls, 2)]
+    assert "operand" in top, top
+    cats = [c for c, _ in S.top_sources(res.stalls, 2)]
+    assert "opr_bank_conflict" in cats, cats
+
+
+def test_full_opt_shrinks_total_stall(corner_results):
+    for name in DEFAULT_TRACES:
+        base = corner_results[(name, "base")]
+        full = corner_results[(name, "M+C+O")]
+        assert full.stalls.sum() <= base.stalls.sum() + 1e-6, name
+
+
+def test_gap_closed_by_path(corner_results):
+    """Full opt closes most of scal/axpy's baseline mem-supply stall."""
+    for name in ("scal", "axpy"):
+        base = corner_results[(name, "base")]
+        full = corner_results[(name, "M+C+O")]
+        gc = A.gap_closed_by_path(base, full)
+        assert set(gc) == set(S.CRITICAL_PATHS)
+        assert gc["mem_supply"] > 0.5, (name, gc)
+        assert all(v <= 1.0 + 1e-9 for v in gc.values())
+
+
+# --- phase decomposition vs core.chaining ---------------------------------
+
+def test_phase_decomposition_exact(traces, corner_results, params):
+    """Eq. (4) reconstruction: the deviation triple reproduces measured
+    cycles exactly, and Eq. (5)'s dT equals measured minus ideal."""
+    for name in ("scal", "axpy", "dotp", "gemm"):
+        for label in ("base", "M+C+O"):
+            res = corner_results[(name, label)]
+            ph = A.phase_decompose(traces[name], res, params=params)
+            assert ph.deviation.t_real(ph.spec) == \
+                pytest.approx(res.cycles, rel=1e-9)
+            assert ph.loss == pytest.approx(res.cycles - ph.spec.t_ideal,
+                                            rel=1e-9, abs=1e-6)
+            assert ph.prologue_real >= 0 and ph.tail_real >= 0
+            assert ph.steady_real >= -1e-9
+
+
+def test_phase_deviation_shrinks_with_full_opt(traces, corner_results,
+                                               params):
+    """Ara-Opt moves II_eff toward 1 for the streaming kernels."""
+    for name in ("scal", "axpy", "ger"):
+        base = A.phase_decompose(traces[name],
+                                 corner_results[(name, "base")],
+                                 params=params)
+        full = A.phase_decompose(traces[name],
+                                 corner_results[(name, "M+C+O")],
+                                 params=params)
+        assert full.deviation.ii_eff < base.deviation.ii_eff, name
+
+
+def test_attribute_kernel_bundle(traces, params):
+    ka = A.attribute_kernel(traces["scal"], OptConfig.baseline(),
+                            params=params)
+    assert ka.kernel == "scal" and ka.opt_label == "base"
+    assert set(ka.paths) == set(S.CRITICAL_PATHS)
+    assert set(ka.stalls) == set(S.STALL_CATEGORIES)
+    assert sum(ka.stalls.values()) == pytest.approx(
+        ka.result.cycles - ka.result.ideal, rel=1e-9)
+    assert len(ka.top2) == 2
+
+
+# --- report + timeline -----------------------------------------------------
+
+def test_report_rows_and_text(corner_results, tmp_path):
+    base = {name: corner_results[(name, "base")] for name in DEFAULT_TRACES}
+    rows = R.breakdown_rows(base, config="base")
+    assert len(rows) == len(DEFAULT_TRACES)
+    for row in rows:
+        stall_sum = sum(row[c] for c in S.STALL_CATEGORIES)
+        assert row["ideal"] + stall_sum == pytest.approx(row["cycles"],
+                                                         rel=1e-9)
+        assert row["mem_supply"] + row["dep_issue"] + row["operand"] == \
+            pytest.approx(stall_sum, rel=1e-9, abs=1e-9)
+        assert 0.0 <= row["stall_frac"] <= 1.0
+    text = R.format_report(rows)
+    assert "scal" in text and "mem_supply" in text
+    path = R.write_csv(rows, tmp_path / "breakdown.csv")
+    lines = path.read_text().strip().split("\n")
+    assert len(lines) == len(rows) + 1
+    assert lines[0].startswith("kernel,config,cycles,ideal")
+
+
+def test_timeline_chrome_trace(traces, params, tmp_path):
+    tr = traces["scal"]
+    res = AraSimulator(params=params).run(tr, OptConfig.baseline())
+    path = TL.export_chrome_trace(tmp_path / "t.json", tr, res)
+    import json
+    payload = json.loads(path.read_text())
+    events = payload["traceEvents"]
+    xs = [e for e in events if e["ph"] == "X"]
+    assert len(xs) == len(tr.instrs)
+    for e in xs:
+        assert e["dur"] >= 0.0 and e["ts"] >= 0.0
+        assert "ideal" in e["args"]
+    names = {e["args"]["name"] for e in events if e["ph"] == "M"
+             and e["name"] == "thread_name"}
+    assert {"VLSU read", "VLSU write", "FPU lanes"} <= names
+    assert payload["metadata"]["cycles"] == res.cycles
+
+
+def test_timeline_rejects_cached_results(traces, params):
+    from repro.core.simulator import SimResult
+    hollow = SimResult(kernel="scal", cycles=1.0, flops=1, bytes=1,
+                       timings=[])
+    with pytest.raises(ValueError):
+        TL.trace_events(traces["scal"], hollow)
+
+
+# --- property test: random traces ------------------------------------------
+
+_REGS = ("v0", "v4", "v8", "v12", "v16", "v20")
+_KINDS = (OpKind.LOAD, OpKind.STORE, OpKind.COMPUTE, OpKind.REDUCE,
+          OpKind.SLIDE)
+_STRIDES = (Stride.UNIT, Stride.STRIDED, Stride.INDEXED)
+
+_instr_tuples = st.lists(
+    st.tuples(st.integers(0, 4),       # kind
+              st.integers(1, 300),     # vl
+              st.integers(0, 5),       # dst register
+              st.integers(-1, 5),      # src 1 (-1: none)
+              st.integers(-1, 5),      # src 2 (-1: none)
+              st.integers(0, 2),       # stride
+              st.booleans(),           # first_strip
+              st.booleans()),          # divide op
+    min_size=3, max_size=24)
+
+
+def _build_trace(raw) -> KernelTrace:
+    instrs = []
+    for k, vl, dst, s1, s2, stride_i, first, isdiv in raw:
+        kind = _KINDS[k]
+        mem = kind in (OpKind.LOAD, OpKind.STORE)
+        srcs = tuple(_REGS[s] for s in (s1, s2) if s >= 0)
+        if kind is OpKind.STORE and not srcs:
+            srcs = (_REGS[dst],)
+        if kind is OpKind.LOAD:
+            srcs = srcs[:1] if _STRIDES[stride_i] is Stride.INDEXED else ()
+        name = "vfdiv" if (isdiv and kind is OpKind.COMPUTE) else "vop"
+        instrs.append(VInstr(
+            name=name, kind=kind, vl=vl, sew=4,
+            dst=None if kind is OpKind.STORE else _REGS[dst],
+            srcs=srcs, stride=_STRIDES[stride_i] if mem else Stride.UNIT,
+            flops=vl, stream="s", first_strip=first))
+    return KernelTrace("rand", tuple(instrs), total_flops=1, total_bytes=1)
+
+
+@given(raw=_instr_tuples)
+@settings(max_examples=40, deadline=None)
+def test_property_invariant_random_traces(raw):
+    """Stall categories sum exactly to measured-minus-ideal cycles on
+    arbitrary traces, per instruction and per kernel, and the batched
+    accounting agrees with the scalar path bit-for-bit."""
+    tr = _build_trace(raw)
+    corners = (OptConfig.baseline(), OptConfig.full(),
+               OptConfig(True, False, True))
+    sim = AraSimulator(params=SimParams())
+    refs = [sim.run(tr, opt) for opt in corners]
+    for res in refs:
+        assert _inv_ok(res.ideal, res.stalls, res.cycles)
+        assert res.stalls.min() >= -1e-9 and res.ideal >= -1e-9
+        for t in res.timings:
+            assert _inv_ok(t.ideal, t.stalls, t.complete)
+            assert t.stalls.min() >= -1e-9 and t.ideal >= -1e-9
+    batch = BatchAraSimulator().run(stack_traces([tr]), corners,
+                                    attribution=True)
+    for oi, res in enumerate(refs):
+        assert batch.cycles[0, oi, 0] == res.cycles
+        np.testing.assert_array_equal(batch.ideal[0, oi, 0], res.ideal)
+        np.testing.assert_array_equal(batch.stalls[0, oi, 0], res.stalls)

@@ -103,6 +103,35 @@ def test_make_views_cross_order():
     assert list(v.opt_memory) == [False, False, True, True]
 
 
+def test_attribution_parity_scalar_vs_batched():
+    """Satellite contract: the batched attribution tensors equal the
+    scalar simulator's stall accounting, and decompose cycles exactly."""
+    traces = [scal(512), axpy(512), dotp(512)]
+    plist = [SimParams(), SimParams(mem_latency=90.0, d_chain_base=20.0)]
+    res = BatchAraSimulator().sweep(traces, ALL_CORNERS, plist,
+                                    attribution=True)
+    assert res.ideal.shape == res.cycles.shape
+    assert res.stalls.shape == (*res.cycles.shape, 9)
+    for pi, params in enumerate(plist):
+        sim = AraSimulator(params=params)
+        for bi, tr in enumerate(traces):
+            for oi, opt in enumerate(ALL_CORNERS):
+                ref = sim.run(tr, opt)
+                assert res.cycles[bi, oi, pi] == ref.cycles
+                np.testing.assert_allclose(res.ideal[bi, oi, pi], ref.ideal,
+                                           rtol=1e-12, atol=1e-9)
+                np.testing.assert_allclose(res.stalls[bi, oi, pi],
+                                           ref.stalls, rtol=1e-12,
+                                           atol=1e-9)
+    gap = res.cycles - res.ideal - res.stalls.sum(axis=-1)
+    assert np.abs(gap).max() <= 1e-6 + 1e-9 * res.cycles.max()
+
+
+def test_attribution_off_by_default():
+    res = BatchAraSimulator().sweep([scal(256)], [OptConfig.baseline()])
+    assert res.ideal is None and res.stalls is None
+
+
 # --- sweep cache ----------------------------------------------------------
 
 def test_sweep_cache_hit_roundtrip(tmp_path):
@@ -129,6 +158,131 @@ def test_cell_key_content_addressing(tmp_path):
     assert k1 != cell_key(tr, OptConfig.baseline())
     assert k1 != cell_key(tr, OptConfig.full(),
                           SimParams(mem_latency=39.0))
+
+
+def test_cache_attribution_roundtrip(tmp_path):
+    cache = SweepCache(tmp_path)
+    tr = scal(256)
+    res = AraSimulator().run(tr, OptConfig.full())
+    assert res.stalls is not None
+    key = cell_key(tr, OptConfig.full())
+    cache.put_result(key, res)
+    back = cache.get_result(key, tr.name, attribution=True)
+    assert back is not None
+    assert back.ideal == res.ideal
+    np.testing.assert_array_equal(back.stalls, res.stalls)
+
+
+def test_cache_attribution_miss_on_plain_cells(tmp_path):
+    """Cells stored without stall vectors must not satisfy attribution
+    reads — the consumer re-simulates with accounting on."""
+    cache = SweepCache(tmp_path)
+    key = "ab" + "0" * 62
+    cache.put(key, {"cycles": 1.0, "flops": 1, "bytes": 1,
+                    "busy_fpu": 0.0, "busy_bus": 0.0})
+    assert cache.get_result(key, "scal") is not None
+    assert cache.get_result(key, "scal", attribution=True) is None
+
+
+def test_cache_prune_max_entries(tmp_path):
+    import time
+    cache = SweepCache(tmp_path)
+    keys = [f"{i:02x}" + "0" * 62 for i in range(8)]
+    for i, k in enumerate(keys):
+        cache.put(k, {"i": i})
+        os_mtime = tmp_path / k[:2] / f"{k}.json"
+        os_mtime.touch()
+        time.sleep(0.01)                   # distinct mtimes
+    assert len(cache) == 8
+    removed = cache.prune(max_entries=3)
+    assert removed == 5
+    assert len(cache) == 3
+    # Newest three survive.
+    for k in keys[-3:]:
+        assert cache.get(k) is not None
+    for k in keys[:5]:
+        assert cache.get(k) is None
+
+
+def test_cache_auto_gc_on_put(tmp_path):
+    import time
+    cache = SweepCache(tmp_path, max_entries=4)
+    for i in range(10):
+        cache.put(f"{i:02x}" + "0" * 62, {"i": i})
+        time.sleep(0.01)
+    assert len(cache) <= 4
+    assert cache.get(f"{9:02x}" + "0" * 62) is not None   # newest kept
+
+
+def test_cache_prune_max_entries_protects_keep_keys(tmp_path):
+    import time
+    cache = SweepCache(tmp_path)
+    keys = [f"{i:02x}" + "0" * 62 for i in range(6)]
+    for k in keys:
+        cache.put(k, {"x": 1})
+        time.sleep(0.01)
+    # Oldest key is protected even though it would be evicted by age.
+    cache.prune(keep_keys=[keys[0]], max_entries=2)
+    assert cache.get(keys[0]) is not None
+    assert cache.get(keys[-1]) is not None
+    assert cache.get(keys[1]) is None
+
+
+def test_cache_max_entries_enforced_across_instances(tmp_path):
+    """A bounded instance must not trust its local count forever when
+    another instance fills the same root."""
+    bounded = SweepCache(tmp_path, max_entries=8)
+    bounded.put("00" + "0" * 62, {"x": 1})        # arm the lazy counter
+    other = SweepCache(tmp_path)
+    for i in range(1, 200):
+        other.put(f"{i:03x}" + "0" * 61, {"x": 1})
+    assert len(bounded) > 8
+    for i in range(200, 280):
+        bounded.put(f"{i:03x}" + "0" * 61, {"x": 1})
+    assert len(bounded) <= 8 + 64                 # resync window bound
+
+
+def test_cache_prune_keep_keys(tmp_path):
+    cache = SweepCache(tmp_path)
+    keys = [f"{i:02x}" + "0" * 62 for i in range(4)]
+    for k in keys:
+        cache.put(k, {"x": 1})
+    assert cache.prune(keep_keys=keys[:2]) == 2
+    assert cache.get(keys[0]) is not None
+    assert cache.get(keys[3]) is None
+    assert cache.prune() == 2              # legacy full flush
+    assert len(cache) == 0
+
+
+def test_grid_attribution_cells(tmp_path):
+    import pathlib
+    import sys
+    repo = str(pathlib.Path(__file__).resolve().parents[1])
+    if repo not in sys.path:
+        sys.path.insert(0, repo)
+    from benchmarks import gridlib
+    traces = {"scal": scal(256), "axpy": axpy(256)}
+    opts = [OptConfig.baseline(), OptConfig.full()]
+    cache = SweepCache(tmp_path)
+    g1 = gridlib.Grid(params=SimParams(), cache=cache)
+    # Plain cells first: stored without stall vectors...
+    g1.cells(traces, opts)
+    # ...so the attribution pass re-simulates and re-stores them.
+    cells = g1.cells(traces, opts, attribution=True)
+    sim = AraSimulator(params=SimParams())
+    for (name, label), res in cells.items():
+        opt = opts[0] if label == "base" else opts[1]
+        ref = sim.run(traces[name], opt)
+        assert res.stalls is not None
+        np.testing.assert_allclose(res.stalls, ref.stalls,
+                                   rtol=1e-12, atol=1e-9)
+        assert res.ideal == pytest.approx(ref.ideal, rel=1e-12)
+    # Second attribution read is served from the cache.
+    g2 = gridlib.Grid(params=SimParams(), cache=SweepCache(tmp_path))
+    cells2 = g2.cells(traces, opts, attribution=True)
+    assert g2.cache.hits == 4 and g2.cache.misses == 0
+    for k in cells:
+        np.testing.assert_array_equal(cells2[k].stalls, cells[k].stalls)
 
 
 def test_grid_uses_cache(tmp_path):

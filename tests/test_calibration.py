@@ -1,0 +1,61 @@
+"""Calibration plumbing: jax-backend scoring parity + recorded geomean."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.core import calibration as C
+from repro.core.simulator import SimParams
+
+#: All 11 kernels at reduced sizes: the loss reads every kernel, but
+#: backend parity doesn't need paper-sized instruction streams.
+_small_traces = C.parity_traces
+
+
+def test_evaluate_many_jax_backend_parity():
+    jax = pytest.importorskip("jax")
+    del jax
+    traces = _small_traces()
+    plist = [SimParams(),
+             SimParams(mem_latency=70.0, issue_gap_base=4.0)]
+    ref = C.evaluate_many(plist, traces)
+    got = C.evaluate_many(plist, traces, backend="jax")
+    for m_ref, m_got in zip(ref, got):
+        for kernel, s in m_ref["speedup"].items():
+            assert m_got["speedup"][kernel] == pytest.approx(s, rel=1e-6)
+        assert m_got["geomean_speedup"] == \
+            pytest.approx(m_ref["geomean_speedup"], rel=1e-6)
+        assert C.loss(m_got) == pytest.approx(C.loss(m_ref), rel=1e-5)
+
+
+def test_check_backend_parity():
+    pytest.importorskip("jax")
+    diff = C.check_backend_parity("jax")       # default: reduced sizes
+    assert diff <= 1e-6
+
+
+def test_check_backend_parity_rejects_divergence(monkeypatch):
+    calls = {}
+
+    def fake_losses(cands, traces, backend="numpy"):
+        calls[backend] = True
+        return [1.0 if backend == "numpy" else 2.0]
+
+    monkeypatch.setattr(C, "_losses_of", fake_losses)
+    with pytest.raises(RuntimeError, match="disagrees"):
+        C.check_backend_parity("jax", _small_traces())
+    assert calls == {"numpy": True, "jax": True}
+
+
+def test_save_records_geomean(tmp_path):
+    path = tmp_path / "cal.json"
+    params = SimParams()
+    metrics = {"geomean_speedup": 1.25}
+    C.save(params, 0.5, path=path, metrics=metrics)
+    payload = json.loads(path.read_text())
+    assert payload["loss"] == 0.5
+    assert payload["geomean_speedup"] == 1.25
+    assert payload["params"] == dataclasses.asdict(params)
+    assert C.load(path) == params
+    assert C.load_payload(path)["geomean_speedup"] == 1.25
+    assert C.load_payload(tmp_path / "missing.json") == {}

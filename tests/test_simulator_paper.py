@@ -41,6 +41,21 @@ def test_geomean_speedup_near_paper(results):
     assert 1.33 * 0.85 <= gm <= 1.33 * 1.15, gm
 
 
+def test_geomean_matches_calibration_record(results):
+    """Drift tripwire (CI arm of examples/ara_paper_repro.py's gate): the
+    reproduced geomean must stay within 5% of the geomean recorded in
+    ara_calibrated.json at calibration time.  A timing-model edit that
+    shifts it must recalibrate (re-recording the value) rather than
+    silently drift."""
+    from repro.core.calibration import GEOMEAN_DRIFT_TOL, load_payload
+    recorded = load_payload().get("geomean_speedup")
+    assert recorded is not None, \
+        "ara_calibrated.json lacks geomean_speedup; re-run calibration"
+    sp = [b.cycles / o.cycles for _, b, o in results.values()]
+    gm = geomean(sp)
+    assert abs(gm / recorded - 1.0) <= GEOMEAN_DRIFT_TOL, (gm, recorded)
+
+
 # Tolerances are log-space bands reflecting achieved calibration fidelity
 # (EXPERIMENTS.md §Paper-repro discusses the scal/gemm residuals: a strip-
 # level model cannot reproduce every RTL pipeline artifact).
