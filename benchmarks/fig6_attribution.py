@@ -3,13 +3,18 @@
 For all 11 paper kernels x 8 ablation corners, decompose simulated cycles
 into ideal time + the nine stall categories over the paper's three
 critical paths (`repro.core.stalls`), via one batched attribution pass
-per cache-miss signature (`gridlib` / `sweep_cache`).  Emits stacked
-stall-breakdown chart data (CSV) plus one Chrome ``trace_event`` Gantt
-JSON for a representative cell (scal, baseline) — the waveform-style view
-the paper derives by hand from RTL traces.
+per cache-miss signature (`gridlib` / `sweep_cache`).  Each CSV row also
+carries the prologue/steady/tail phase split and the deviation triple
+``(dp, II_eff, dt)`` from `analysis.attribution.phase_decompose_grid`.
+Emits stacked stall-breakdown chart data (CSV, and a rendered PNG with
+``--plot``) plus one Chrome ``trace_event`` Gantt JSON for a
+representative cell (scal, baseline) — the waveform-style view the paper
+derives by hand from RTL traces.  docs/attribution.md walks through how
+to read the output.
 """
 from __future__ import annotations
 
+import argparse
 import pathlib
 import sys
 
@@ -20,7 +25,8 @@ for _p in (str(_REPO), str(_REPO / "src")):
 
 from benchmarks import gridlib
 from benchmarks.common import OUT_DIR, emit
-from repro.analysis.report import breakdown_rows, format_report
+from repro.analysis.report import (breakdown_rows, format_report,
+                                   have_matplotlib, render_stacked_bars)
 from repro.analysis.timeline import export_chrome_trace
 from repro.core.isa import ABLATION_GRID
 from repro.core.simulator import AraSimulator
@@ -50,13 +56,34 @@ def export_example_trace(kernel: str = TRACE_KERNEL) -> pathlib.Path:
     return export_chrome_trace(OUT_DIR / f"{name}.json", tr, res)
 
 
-def main() -> None:
+def plot(rows: list[dict]) -> pathlib.Path:
+    """Render the breakdown rows as stacked bars (one panel per config);
+    this is the figure docs/attribution.md embeds."""
+    name = gridlib.table_name("fig6_attribution")
+    return render_stacked_bars(
+        rows, OUT_DIR / f"{name}.png",
+        title="cycles decomposed: ideal + 9 stall categories "
+              "(3 critical paths)")
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--plot", action="store_true",
+                    help="also render the stacked-bar PNG (needs "
+                         "matplotlib, the [plot] extra)")
+    args = ap.parse_args(argv)
     rows = run()
     emit(rows, gridlib.table_name("fig6_attribution"))
     base_rows = [r for r in rows if r["config"] == gridlib.BASE.label]
     print(format_report(base_rows, title="baseline critical-path shares"))
     path = export_example_trace()
     print(f"# chrome trace -> {path}")
+    if args.plot:
+        if have_matplotlib():
+            print(f"# stacked bars -> {plot(rows)}")
+        else:
+            print("# --plot skipped: matplotlib not installed "
+                  "(pip install -e .[plot])")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,10 @@ a cell gets it for free.
 
 Profiles pick the problem sizes: ``default`` is the paper's Fig. 3 set;
 ``smoke`` shrinks every kernel so the whole benchmark suite finishes in
-seconds on a CPU-only CI runner (`benchmarks/run.py --smoke`).
+seconds on a CPU-only CI runner (`benchmarks/run.py --smoke`); ``large``
+scales every kernel past the paper sizes for sensitivity sweeps beyond
+Fig. 5 (expected runtimes in docs/backends.md — prefer the jax backend
+there).
 """
 from __future__ import annotations
 
@@ -22,6 +25,7 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 if str(REPO / "src") not in sys.path:
     sys.path.insert(0, str(REPO / "src"))
 
+from repro.analysis.attribution import phase_decompose_grid  # noqa: E402
 from repro.core import traces as T  # noqa: E402
 from repro.core.batch_sim import BatchAraSimulator  # noqa: E402
 from repro.core.calibration import load as load_params  # noqa: E402
@@ -45,6 +49,15 @@ PROFILE_SIZES: dict[str, dict[str, tuple]] = {
         "gemv": (16, 64), "symv": (16,), "ger": (32, 32),
         "gemm": (32, 32, 32), "trsm": (16,), "syrk": (16, 16),
         "spmv": (16,), "dwt": (256,),
+    },
+    # Sensitivity sweeps beyond Fig. 5: ~2-4x the paper sizes per axis.
+    # Instruction streams grow accordingly (gemm dominates at ~112k
+    # instructions); see docs/backends.md for measured runtimes.
+    "large": {
+        "scal": (4096,), "axpy": (4096,), "dotp": (4096,),
+        "gemv": (64, 256), "symv": (64,), "ger": (256, 256),
+        "gemm": (192, 192, 192), "trsm": (64,), "syrk": (64, 64),
+        "spmv": (64,), "dwt": (4096,),
     },
 }
 
@@ -103,11 +116,13 @@ class Grid:
 
         Returns `{(trace_key, opt.label): SimResult}` (timings omitted).
         With `attribution`, results carry the kernel ideal/stall
-        decomposition (numpy backend); cached cells stored without it
-        transparently re-simulate.
+        decomposition plus the phase-split columns of
+        `analysis.attribution.phase_decompose_grid` (`SimResult.phases`:
+        prologue/steady/tail, dp/ii_eff/dt, t_ideal), on whichever
+        backend the grid was built with; cached cells stored without
+        either transparently re-simulate.
         """
         opts = list(opts)
-        backend = "numpy" if attribution else self.backend
         out: dict[tuple[str, str], SimResult] = {}
         keys: dict[tuple[str, str], str] = {}
         # Traces grouped by which opts they are missing, so a partial
@@ -121,7 +136,8 @@ class Grid:
                 ck = cell_key(tr, opt, self.params, self.mc, trace_fp=fp)
                 keys[(tname, opt.label)] = ck
                 res = (self.cache.get_result(ck, tr.name,
-                                             attribution=attribution)
+                                             attribution=attribution,
+                                             require_phases=attribution)
                        if self.use_cache else None)
                 if res is None:
                     sig.append(oi)
@@ -130,11 +146,21 @@ class Grid:
             if sig:
                 by_sig.setdefault(tuple(sig), []).append(tname)
 
+        # The cache stores only numpy-computed cells: cell keys don't
+        # encode the backend, and the cache's contract is scalar
+        # bit-exactness — jax results (float64 allclose, not bit-exact)
+        # are served to this call but never persisted.
+        persist = self.use_cache and self.backend == "numpy"
         for sig, tnames in by_sig.items():
             run_opts = [opts[oi] for oi in sig]
-            stacked = stack_traces([traces[t] for t in tnames])
+            run_traces = [traces[t] for t in tnames]
+            stacked = stack_traces(run_traces)
             batch = self.sim.run(stacked, run_opts, self.params,
-                                 backend=backend, attribution=attribution)
+                                 backend=self.backend,
+                                 attribution=attribution)
+            pg = (phase_decompose_grid(run_traces, batch, mc=self.mc,
+                                       params=[self.params])
+                  if attribution else None)
             for bi, tname in enumerate(tnames):
                 for oi, opt in enumerate(run_opts):
                     res = SimResult(
@@ -147,9 +173,11 @@ class Grid:
                         ideal=(float(batch.ideal[bi, oi, 0])
                                if batch.ideal is not None else 0.0),
                         stalls=(batch.stalls[bi, oi, 0].copy()
-                                if batch.stalls is not None else None))
+                                if batch.stalls is not None else None),
+                        phases=(pg.columns(bi, oi, 0)
+                                if pg is not None else None))
                     out[(tname, opt.label)] = res
-                    if self.use_cache:
+                    if persist:
                         self.cache.put_result(keys[(tname, opt.label)], res)
         return out
 

@@ -33,8 +33,10 @@ def main() -> None:
 
     # fig6 first: its attribution=True pass stores stall-carrying cells
     # that every later (plain) reader hits, instead of plain cells the
-    # attribution pass would have to re-simulate.
-    fig6_attribution.main()
+    # attribution pass would have to re-simulate.  The stacked-bar PNG
+    # rides along whenever matplotlib is importable (CI uploads it).
+    from repro.analysis.report import have_matplotlib
+    fig6_attribution.main(["--plot"] if have_matplotlib() else [])
     fig3_speedup.main()
     fig4_roofline.main()
     table1_ablation.main()

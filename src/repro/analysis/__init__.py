@@ -11,14 +11,15 @@ chaining model:
   * `repro.analysis.report` — per-kernel text/CSV stall breakdowns.
 
 The underlying stall vectors come from `repro.core.simulator` (per
-instruction) and `repro.core.batch_sim` (whole grids, numpy backend);
-`repro.core.stalls` defines the category vocabulary.
+instruction) and `repro.core.batch_sim` (whole grids, numpy and jax
+backends); `repro.core.stalls` defines the category vocabulary.
 """
 from repro.analysis.attribution import (KernelAttribution,  # noqa: F401
-                                        PhaseDecomposition, attribute_kernel,
-                                        chain_spec_for, gap_closed_by_path,
-                                        phase_decompose)
+                                        PhaseDecomposition, PhaseGrid,
+                                        attribute_kernel, chain_spec_for,
+                                        gap_closed_by_path, phase_decompose,
+                                        phase_decompose_grid)
 from repro.analysis.report import (breakdown_rows, format_report,  # noqa: F401
-                                   write_csv)
+                                   render_stacked_bars, write_csv)
 from repro.analysis.timeline import (export_chrome_trace,  # noqa: F401
                                      trace_events)

@@ -6,7 +6,12 @@ Two complementary decompositions of the same measured cycles:
     prologue / steady state / tail against a `core.chaining.ChainSpec`
     built structurally from the trace, and back out the paper's deviation
     triple ``(dp, II_eff, dt)`` (Eq. (4)/(5)) with
-    `core.chaining.attribute`.
+    `core.chaining.attribute`.  `phase_decompose_grid` is the batched
+    counterpart: it reads the phase observables a
+    `core.batch_sim.BatchResult` carries (earliest lane ``first_out``,
+    finisher start) and backs out the triple for every
+    `(kernel, opt, params)` cell in one vectorized pass — no scalar loop
+    over cells.
   * **Critical-path accounting** (`attribute_kernel`,
     `gap_closed_by_path`): read the simulator's exact per-category stall
     vector (``ideal + sum(stalls) == cycles``) and aggregate it over the
@@ -16,7 +21,9 @@ Two complementary decompositions of the same measured cycles:
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
+from typing import Mapping, Sequence
+
+import numpy as np
 
 from repro.core.chaining import ChainSpec, Deviation, attribute
 from repro.core.isa import KernelTrace, MachineConfig, OpKind, OptConfig
@@ -143,6 +150,122 @@ def phase_decompose(trace: KernelTrace, result: SimResult,
     dev = attribute(spec, cycles, prologue_real, tail_real)
     return PhaseDecomposition(spec, prologue_real, steady_real, tail_real,
                               dev)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseGrid:
+    """Vectorized phase decomposition of a whole `(B, O, P)` batch grid.
+
+    Ideal-model terms (from `chain_spec_for`) depend only on the trace and
+    params, so they carry `(B, P)` shape; measured phases and the deviation
+    triple are per cell, `(B, O, P)`.  `cell(b, o, p)` reconstructs the
+    scalar `PhaseDecomposition` for one cell.
+    """
+    names: tuple[str, ...]             # (B,) kernel names
+    specs: tuple[tuple[ChainSpec, ...], ...]   # [B][P] ideal chain specs
+    prologue_ideal: np.ndarray         # (B, P) Eq. (1) p_N
+    steady_ideal: np.ndarray           # (B, P) Eq. (2) T_steady
+    tail_ideal: np.ndarray             # (B, P) T_tail
+    t_ideal: np.ndarray                # (B, P) Eq. (3)
+    prologue_real: np.ndarray          # (B, O, P)
+    steady_real: np.ndarray            # (B, O, P)
+    tail_real: np.ndarray              # (B, O, P)
+    dp: np.ndarray                     # (B, O, P) prologue deviation
+    ii_eff: np.ndarray                 # (B, O, P) effective II
+    dt: np.ndarray                     # (B, O, P) tail deviation
+
+    @property
+    def t_real(self) -> np.ndarray:
+        """(B, O, P) measured cycles reconstructed from Eq. (4)."""
+        return self.prologue_real + self.steady_real + self.tail_real
+
+    @property
+    def loss(self) -> np.ndarray:
+        """(B, O, P) Eq. (5): dT = dp + T_steady*(II_eff - 1) + dt."""
+        return (self.dp
+                + self.steady_ideal[:, None, :] * (self.ii_eff - 1.0)
+                + self.dt)
+
+    def cell(self, b: int, o: int, p: int = 0) -> PhaseDecomposition:
+        """Scalar `PhaseDecomposition` view of one grid cell."""
+        dev = Deviation(dp=float(self.dp[b, o, p]),
+                        ii_eff=float(self.ii_eff[b, o, p]),
+                        dt=float(self.dt[b, o, p]))
+        return PhaseDecomposition(
+            spec=self.specs[b][p],
+            prologue_real=float(self.prologue_real[b, o, p]),
+            steady_real=float(self.steady_real[b, o, p]),
+            tail_real=float(self.tail_real[b, o, p]),
+            deviation=dev)
+
+    def columns(self, b: int, o: int, p: int = 0) -> dict[str, float]:
+        """One cell's phase split as flat CSV-friendly columns."""
+        return {
+            "prologue": float(self.prologue_real[b, o, p]),
+            "steady": float(self.steady_real[b, o, p]),
+            "tail": float(self.tail_real[b, o, p]),
+            "dp": float(self.dp[b, o, p]),
+            "ii_eff": float(self.ii_eff[b, o, p]),
+            "dt": float(self.dt[b, o, p]),
+            "t_ideal": float(self.t_ideal[b, p]),
+        }
+
+
+def phase_decompose_grid(traces: Sequence[KernelTrace], result,
+                         mc: MachineConfig = MachineConfig(),
+                         params: SimParams | Sequence[SimParams]
+                         = SimParams()) -> PhaseGrid:
+    """Batched `phase_decompose`: back out ``(dp, II_eff, dt)`` for every
+    `(kernel, opt, params)` cell of a `core.batch_sim.BatchResult` in one
+    vectorized pass.
+
+    `traces` must be the sequence the grid was stacked from (same order as
+    `result` axis 0) and `params` the params axis (axis 2).  The ideal
+    `ChainSpec` terms are structural per `(trace, params)`; the measured
+    phase boundaries come from the phase observables both batch backends
+    carry (`lane_first_out`, `first_first_out`, `finish_start`).  Numbers
+    match per-cell `phase_decompose` of the scalar simulator exactly on
+    the numpy backend (float64 allclose on jax).
+    """
+    if result.lane_first_out is None or result.finish_start is None:
+        raise ValueError("BatchResult carries no phase observables; "
+                         "re-run BatchAraSimulator.run on this engine "
+                         "version")
+    if isinstance(params, SimParams):
+        params = [params]
+    params = list(params)
+    traces = list(traces)
+    B, O, P = result.cycles.shape
+    if len(traces) != B or len(params) != P:
+        raise ValueError(f"grid shape {(B, O, P)} does not match "
+                         f"{len(traces)} traces x {len(params)} params")
+    specs = tuple(tuple(chain_spec_for(tr, mc, p) for p in params)
+                  for tr in traces)
+    prologue_i = np.array([[s.prologue for s in row] for row in specs])
+    steady_i = np.array([[float(s.steady_ideal) for s in row]
+                         for row in specs])
+    tail_i = np.array([[s.tail_time for s in row] for row in specs])
+
+    cycles = result.cycles
+    # Prologue ends at the earliest lane first_out; traces with no lane
+    # instruction fall back to the first instruction's first_out (the
+    # same rule as the scalar `phase_decompose`).
+    lane_fo = result.lane_first_out
+    prologue_real = np.where(np.isfinite(lane_fo), lane_fo,
+                             result.first_first_out)
+    prologue_real = np.minimum(prologue_real, cycles)
+    tail_real = np.minimum(cycles - result.finish_start,
+                           cycles - prologue_real)
+    steady_real = cycles - prologue_real - tail_real
+    dp = prologue_real - prologue_i[:, None, :]
+    dt = tail_real - tail_i[:, None, :]
+    ii_eff = steady_real / np.maximum(steady_i[:, None, :], 1e-12)
+    return PhaseGrid(names=tuple(result.names), specs=specs,
+                     prologue_ideal=prologue_i, steady_ideal=steady_i,
+                     tail_ideal=tail_i,
+                     t_ideal=prologue_i + steady_i + tail_i,
+                     prologue_real=prologue_real, steady_real=steady_real,
+                     tail_real=tail_real, dp=dp, ii_eff=ii_eff, dt=dt)
 
 
 def attribute_kernel(trace: KernelTrace,

@@ -28,6 +28,10 @@ def breakdown_rows(results: Mapping[str, SimResult],
         row["stall_frac"] = (res.cycles - res.ideal) / max(res.cycles, 1e-9)
         top = top_sources(res.stalls, 2)
         row["top1"], row["top2"] = top[0][0], top[1][0]
+        if res.phases:
+            # Phase-split columns (grid attribution passes attach them):
+            # prologue/steady/tail, dp/ii_eff/dt, t_ideal.
+            row.update(res.phases)
         rows.append(row)
     return rows
 
@@ -70,5 +74,85 @@ def _fmt(v) -> str:
     return str(v)
 
 
+#: Stacked-bar segment colors: ideal grey, then one shade family per
+#: critical path (mem_* blues, dep_* oranges, opr_* greens), ordered to
+#: match ``["ideal", *STALL_CATEGORIES]``.
+_BAR_COLORS = ("#d9d9d9",
+               "#08519c", "#3182bd", "#6baed6", "#bdd7e7",
+               "#e6550d", "#fdae6b",
+               "#31a354", "#74c476", "#c7e9c0")
+
+
+def have_matplotlib() -> bool:
+    """True when the optional plotting dependency is importable."""
+    try:
+        import matplotlib  # noqa: F401
+        return True
+    except ImportError:
+        return False
+
+
+def render_stacked_bars(rows: list[dict], path: str | pathlib.Path,
+                        normalize: bool = True,
+                        title: str = "stall breakdown") -> pathlib.Path:
+    """Render breakdown rows (fig6_attribution.csv shape) as stacked bars.
+
+    One subplot per ``config`` value (row order preserved), x axis =
+    kernels, each bar split into the ideal segment plus the nine stall
+    categories shaded by critical path.  ``normalize`` plots fractions of
+    measured cycles (so every bar tops out at 1.0); otherwise absolute
+    cycles.  Needs matplotlib (the ``[plot]`` extra); raises
+    ``RuntimeError`` when it is missing so callers can degrade cleanly
+    via `have_matplotlib`.
+    """
+    if not have_matplotlib():
+        raise RuntimeError(
+            "render_stacked_bars needs matplotlib; install the [plot] "
+            "extra (pip install -e .[plot])")
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    by_cfg: dict[str, list[dict]] = {}
+    for r in rows:
+        by_cfg.setdefault(str(r.get("config", "-")), []).append(r)
+    ncfg = len(by_cfg)
+    ncols = min(ncfg, 4)
+    nrows = -(-ncfg // ncols)
+    fig, axes = plt.subplots(nrows, ncols, sharey=normalize,
+                             figsize=(3.2 * ncols + 1.6, 2.6 * nrows + 0.9),
+                             squeeze=False)
+    segments = ["ideal", *STALL_CATEGORIES]
+    for ax in axes.flat[ncfg:]:
+        ax.set_visible(False)
+    for ax, (cfg, cfg_rows) in zip(axes.flat, by_cfg.items()):
+        kernels = [r["kernel"] for r in cfg_rows]
+        x = range(len(kernels))
+        bottom = [0.0] * len(kernels)
+        denom = [max(r["cycles"], 1e-9) if normalize else 1.0
+                 for r in cfg_rows]
+        for seg, color in zip(segments, _BAR_COLORS):
+            vals = [r[seg] / d for r, d in zip(cfg_rows, denom)]
+            ax.bar(x, vals, bottom=bottom, color=color, width=0.8,
+                   label=seg)
+            bottom = [b + v for b, v in zip(bottom, vals)]
+        ax.set_title(cfg, fontsize=9)
+        ax.set_xticks(list(x))
+        ax.set_xticklabels(kernels, rotation=60, fontsize=7)
+        ax.tick_params(axis="y", labelsize=7)
+    axes.flat[0].set_ylabel("fraction of cycles" if normalize
+                            else "cycles", fontsize=8)
+    handles, labels = axes.flat[0].get_legend_handles_labels()
+    fig.legend(handles, labels, loc="center right", fontsize=7,
+               frameon=False)
+    fig.suptitle(title, fontsize=11)
+    fig.tight_layout(rect=(0, 0, 0.87, 0.96))
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fig.savefig(path, dpi=150)
+    plt.close(fig)
+    return path
+
+
 __all__ = ["breakdown_rows", "format_report", "write_csv",
-           "STALL_CATEGORIES"]
+           "have_matplotlib", "render_stacked_bars", "STALL_CATEGORIES"]

@@ -27,12 +27,23 @@ Two backends:
     program (float64 via `jax.experimental.enable_x64`).  Best for large
     fixed-shape sweeps where compile time amortizes.
 
-Deviation attribution (``attribution=True``, numpy backend): the scan
-carries the same component vectors as `AraSimulator.run` — every hazard
-state array gains a trailing `repro.core.stalls.NCOMP` axis that follows
-the identical max/+ dataflow — so the whole grid yields `(B, O, P)` ideal
-and `(B, O, P, 9)` stall tensors in one batched pass, bit-exact against
-the scalar simulator's accounting.
+Deviation attribution (``attribution=True``): the scan carries the same
+component vectors as `AraSimulator.run` — every hazard state array gains a
+trailing `repro.core.stalls.NCOMP` axis that follows the identical max/+
+dataflow — so the whole grid yields `(B, O, P)` ideal and `(B, O, P, 9)`
+stall tensors in one batched pass.  The numpy backend is bit-exact against
+the scalar simulator's accounting; the jax backend carries the same
+`(B, W, NCOMP)` component state through `lax.scan` (``jnp.where`` on the
+binding-argument index replaces the scalar adoption branches, keeping the
+compiled program a single scan) and matches numpy to float64 allclose,
+with ``ideal + sum(stalls) == cycles`` holding to float64 resolution.
+
+Both backends additionally report the phase observables that
+`repro.analysis.attribution.phase_decompose_grid` needs to back out the
+paper's ``(dp, II_eff, dt)`` deviation triple per cell: the earliest lane
+``first_out`` (prologue end), the first instruction's ``first_out``
+(fallback for lane-free traces), and the finishing instruction's start
+(tail begin).
 """
 from __future__ import annotations
 
@@ -123,6 +134,10 @@ class BatchResult:
     bytes: np.ndarray                  # (B,)
     ideal: np.ndarray | None = None    # (B, O, P) ideal part of cycles
     stalls: np.ndarray | None = None   # (B, O, P, 9) stall categories
+    # Phase observables for `analysis.attribution.phase_decompose_grid`:
+    lane_first_out: np.ndarray | None = None   # (B, O, P) min lane first_out
+    first_first_out: np.ndarray | None = None  # (B, O, P) instr 0 first_out
+    finish_start: np.ndarray | None = None     # (B, O, P) finisher's start
 
     @property
     def gflops(self) -> np.ndarray:
@@ -146,7 +161,9 @@ class BatchAraSimulator:
 
     def __init__(self, mc: MachineConfig = MachineConfig()):
         self.mc = mc
-        self._jax_fn = None
+        # Compiled jax programs, keyed by attribution flag (the component-
+        # carrying scan is a different program than the plain one).
+        self._jax_fns: dict[bool, object] = {}
 
     # -- public API ---------------------------------------------------------
     def run(self, stacked: StackedTraces, opts: Sequence[OptConfig],
@@ -158,15 +175,12 @@ class BatchAraSimulator:
         opts = list(opts)
         params = list(params)
         view = make_views(opts, params)
-        comp = None
         if backend == "numpy":
-            cyc, bf, bb, comp = self._run_numpy(stacked, view, attribution)
+            cyc, bf, bb, comp, lfo, ffo, fst = self._run_numpy(
+                stacked, view, attribution)
         elif backend == "jax":
-            if attribution:
-                raise NotImplementedError(
-                    "attribution tensors are only scanned by the numpy "
-                    "backend; run with backend='numpy'")
-            cyc, bf, bb = self._run_jax(stacked, view)
+            cyc, bf, bb, comp, lfo, ffo, fst = self._run_jax(
+                stacked, view, attribution)
         else:
             raise ValueError(f"unknown backend {backend!r}")
         shape = (stacked.batch, len(opts), len(params))
@@ -179,7 +193,10 @@ class BatchAraSimulator:
                            ideal=(comp[..., IDEAL].reshape(shape)
                                   if comp is not None else None),
                            stalls=(comp[..., 1:].reshape(*shape, NCOMP - 1)
-                                   if comp is not None else None))
+                                   if comp is not None else None),
+                           lane_first_out=lfo.reshape(shape),
+                           first_first_out=ffo.reshape(shape),
+                           finish_start=fst.reshape(shape))
 
     def sweep(self, traces: Sequence[KernelTrace],
               opts: Sequence[OptConfig],
@@ -196,13 +213,17 @@ class BatchAraSimulator:
         cycles = np.zeros((st.batch, W))
         busy_fpu = np.zeros((st.batch, W))
         busy_bus = np.zeros((st.batch, W))
+        lane_fo = np.zeros((st.batch, W))
+        first_fo = np.zeros((st.batch, W))
+        fin_start = np.zeros((st.batch, W))
         comp = np.zeros((st.batch, W, NCOMP)) if attrib else None
         for b in range(st.batch):
-            cycles[b], busy_fpu[b], busy_bus[b], cb = self._scan_row_numpy(
+            (cycles[b], busy_fpu[b], busy_bus[b], cb, lane_fo[b],
+             first_fo[b], fin_start[b]) = self._scan_row_numpy(
                 st, b, v, attrib)
             if attrib:
                 comp[b] = cb
-        return cycles, busy_fpu, busy_bus, comp
+        return cycles, busy_fpu, busy_bus, comp, lane_fo, first_fo, fin_start
 
     def _scan_row_numpy(self, st: StackedTraces, b: int, v: ParamView,
                         attrib: bool = False):
@@ -251,6 +272,12 @@ class BatchAraSimulator:
         busy_bus = np.zeros(W)
         total = np.zeros(W)
         zero = np.zeros(W)
+        # Phase observables (`analysis.attribution.phase_decompose_grid`):
+        # earliest lane first_out, instruction 0's first_out, and the
+        # start of the finishing (first-maximal complete) instruction.
+        lane_fo = np.full(W, np.inf)
+        first_fo = np.zeros(W)
+        fin_start = np.zeros(W)
 
         opt_m, opt_c = v.opt_memory, v.opt_control
         lat_demand = v.mem_latency
@@ -380,6 +407,7 @@ class BatchAraSimulator:
                 addr_free = np.where(opt_m, req_start, req_start + dur_bus)
                 bus_last = _LOAD
                 busy_bus += dur_bus
+                busy_start = req_start
 
             elif k == _STORE:
                 if strides[i] == _INDEXED:
@@ -528,21 +556,32 @@ class BatchAraSimulator:
                     np.maximum(r_rel[s], release, out=r_rel[s])
             if attrib:
                 c_total = sel(complete > total, c_cp, c_total)
+            if i == 0:
+                first_fo = first_out.copy()
+            if k not in (_LOAD, _STORE):
+                np.minimum(lane_fo, first_out, out=lane_fo)
+            fin_start = np.where(complete > total, busy_start, fin_start)
             np.maximum(total, complete, out=total)
 
-        return total, busy_fpu, busy_bus, (c_total if attrib else None)
+        return (total, busy_fpu, busy_bus, (c_total if attrib else None),
+                lane_fo, first_fo, fin_start)
 
     # -- jax backend --------------------------------------------------------
-    def _run_jax(self, st: StackedTraces, v: ParamView):
+    def _run_jax(self, st: StackedTraces, v: ParamView,
+                 attribution: bool = False):
         from jax.experimental import enable_x64
         with enable_x64():
-            if self._jax_fn is None:
-                self._jax_fn = _build_jax_sweep(self.mc)
+            fn = self._jax_fns.get(attribution)
+            if fn is None:
+                fn = _build_jax_sweep(self.mc, attribution)
+                self._jax_fns[attribution] = fn
             fields = _jax_fields(st)
             views = dataclasses.astuple(v)
             R = max(st.max_regs, 1)
-            cyc, bf, bb = self._jax_fn(fields, views, R)
-        return np.asarray(cyc), np.asarray(bf), np.asarray(bb)
+            cyc, bf, bb, lfo, ffo, fst, comp = fn(fields, views, R)
+        return (np.asarray(cyc), np.asarray(bf), np.asarray(bb),
+                np.asarray(comp) if attribution else None,
+                np.asarray(lfo), np.asarray(ffo), np.asarray(fst))
 
 
 def _jax_fields(st: StackedTraces) -> tuple:
@@ -557,12 +596,20 @@ def _jax_fields(st: StackedTraces) -> tuple:
                                  .astype(np.int32)))
 
 
-def _build_jax_sweep(mc: MachineConfig):
+def _build_jax_sweep(mc: MachineConfig, attribution: bool = False):
     """Compile the per-step recurrence as `lax.scan` over instructions.
 
     State lives as `(B, W)` / `(B, R, W)` arrays; one call evaluates the
     whole `(trace x opt x params)` grid.  Padded instruction slots
     (`kind == PAD`) leave state untouched.
+
+    With `attribution`, every time-valued state array carries a companion
+    `(..., NCOMP)` component tensor maintained by the same max/+ dataflow
+    as the numpy backend (see `repro.core.stalls`): `jnp.where` on the
+    binding-argument index replaces the scalar adoption branches and
+    additions charge the responsible category, so the compiled program
+    stays a single scan and the returned decomposition satisfies
+    ``ideal + sum(stalls) == cycles`` to float64 resolution.
     """
     import jax
     import jax.numpy as jnp
@@ -577,30 +624,60 @@ def _build_jax_sweep(mc: MachineConfig):
         (kind, vl, sew, nb, stride, first, isdiv, redlv, dst, srcs) = fields
         (mem_lat, pf_hit, div_f, war_ovh, tx_ovh, idx_ovh, rw_turn,
          store_commit, issue_gap, d_chain, conflict, queue_adv,
-         opt_m, opt_c, _d_fwd) = (jnp.asarray(x) for x in views)
+         opt_m, opt_c, d_fwd) = (jnp.asarray(x) for x in views)
         B = kind.shape[1]
         W = mem_lat.shape[0]
         S = srcs.shape[2]
         fz = jnp.zeros((B, W), jnp.float64)
         opt_m2 = opt_m[None, :]
         opt_c2 = opt_c[None, :]
+        # Chain-propagation split (attribution): the forwarding floor is
+        # ideal prologue, the write-back/re-read excess is operand stall.
+        dci = jnp.minimum(d_chain, d_fwd)
+        dcs = d_chain - dci
+        Zc = jnp.zeros((B, W, NCOMP), jnp.float64)
+
+        def selc(mask, new, old):
+            """Adopt the binding argument's components where `mask`."""
+            return jnp.where(mask[..., None], new, old)
+
+        def bump(c, *pairs):
+            for idx, amount in pairs:
+                c = c.at[..., idx].add(amount)
+            return c
 
         state = dict(
             issue_t=fz, bus_free=fz, wbus_free=fz, addr_free=fz,
             fpu_free=fz, sldu_free=fz, busy_fpu=fz, busy_bus=fz, total=fz,
+            lane_fo=jnp.full((B, W), jnp.inf, jnp.float64),
+            first_fo=fz, fin_start=fz,
+            seen=jnp.zeros((B, 1), bool),
             bus_last=jnp.full((B,), -1, jnp.int32),
             w_first=jnp.zeros((B, R, W), jnp.float64),
             w_compl=jnp.zeros((B, R, W), jnp.float64),
             has_w=jnp.zeros((B, R), bool),
             r_rel=jnp.zeros((B, R, W), jnp.float64),
         )
+        if attribution:
+            state.update(
+                c_issue=Zc, c_bus=Zc, c_wbus=Zc, c_addr=Zc, c_fpu=Zc,
+                c_sldu=Zc, c_total=Zc,
+                wf_c=jnp.zeros((B, R, W, NCOMP), jnp.float64),
+                wc_c=jnp.zeros((B, R, W, NCOMP), jnp.float64),
+                rr_c=jnp.zeros((B, R, W, NCOMP), jnp.float64),
+            )
 
         def gather(tab, idx):                      # (B,R,W),(B,) -> (B,W)
             return jnp.take_along_axis(
                 tab, idx[:, None, None], axis=1)[:, 0, :]
 
+        def gather_c(tab, idx):            # (B,R,W,C),(B,) -> (B,W,C)
+            return jnp.take_along_axis(
+                tab, idx[:, None, None, None], axis=1)[:, 0]
+
         def step(s, x):
             (k, vl_i, sew_i, nb_i, str_i, fs_i, dv_i, rl_i, d_i, sr_i) = x
+            att = attribution
             valid = (k != PAD)[:, None]            # (B, 1)
             is_load = (k == _LOAD)[:, None]
             is_store = (k == _STORE)[:, None]
@@ -611,41 +688,65 @@ def _build_jax_sweep(mc: MachineConfig):
             # ---- dependence constraints -------------------------------
             raw_start = s["issue_t"]
             raw_complete = fz
+            if att:
+                c_raws = s["c_issue"]
+                c_rc = Zc
             for j in range(S):
                 src = sr_i[:, j]
                 srcc = jnp.clip(src, 0, R - 1)
                 ok = ((src >= 0) &
                       jnp.take_along_axis(s["has_w"], srcc[:, None],
                                           axis=1)[:, 0])[:, None]
+                cand_s = gather(s["w_first"], srcc) + d_chain
+                cand_c = gather(s["w_compl"], srcc) + d_chain
+                if att:
+                    c_raws = selc(ok & (cand_s > raw_start),
+                                  bump(gather_c(s["wf_c"], srcc),
+                                       (IDEAL, dci),
+                                       (OPR_CHAIN_DELAY, dcs)), c_raws)
+                    c_rc = selc(ok & (cand_c > raw_complete),
+                                bump(gather_c(s["wc_c"], srcc),
+                                     (IDEAL, dci),
+                                     (OPR_CHAIN_DELAY, dcs)), c_rc)
                 raw_start = jnp.where(
-                    ok, jnp.maximum(raw_start,
-                                    gather(s["w_first"], srcc) + d_chain),
-                    raw_start)
+                    ok, jnp.maximum(raw_start, cand_s), raw_start)
                 raw_complete = jnp.where(
-                    ok, jnp.maximum(raw_complete,
-                                    gather(s["w_compl"], srcc) + d_chain),
-                    raw_complete)
+                    ok, jnp.maximum(raw_complete, cand_c), raw_complete)
             dstc = jnp.clip(d_i, 0, R - 1)
             has_dst = (d_i >= 0)[:, None]
             dst_has_w = jnp.take_along_axis(s["has_w"], dstc[:, None],
                                             axis=1)
-            war_gate = jnp.where(has_dst, gather(s["r_rel"], dstc), 0.0)
-            war_gate = jnp.where(
-                has_dst & dst_has_w,
-                jnp.maximum(war_gate, gather(s["w_first"], dstc)), war_gate)
+            rrel_d = gather(s["r_rel"], dstc)
+            war_gate = jnp.where(has_dst, rrel_d, 0.0)
+            wf_d = gather(s["w_first"], dstc)
+            waw = has_dst & dst_has_w
+            if att:
+                c_wg = selc(has_dst & (rrel_d > 0.0),
+                            gather_c(s["rr_c"], dstc), Zc)
+                c_wg = selc(waw & (wf_d > war_gate),
+                            gather_c(s["wf_c"], dstc), c_wg)
+            war_gate = jnp.where(waw, jnp.maximum(war_gate, wf_d),
+                                 war_gate)
 
             # ---- memory-op shared quantities --------------------------
             nburst = jnp.maximum(1.0, jnp.ceil(nb_i / burst))[:, None]
-            dur_bus = jnp.where((str_i == _INDEXED)[:, None],
+            indexed = (str_i == _INDEXED)[:, None]
+            dur_bus = jnp.where(indexed,
                                 vl2 * (sew_i[:, None] / bpc) + vl2 * idx_ovh,
                                 nb_i[:, None] / bpc + nburst * tx_ovh)
+            if att:
+                dur_ideal_m = jnp.where(indexed,
+                                        vl2 * (sew_i[:, None] / bpc),
+                                        nb_i[:, None] / bpc)
+                dur_stall_m = dur_bus - dur_ideal_m
             # ---- LOAD path --------------------------------------------
             turn_l = jnp.where((s["bus_last"] == _STORE)[:, None],
                                rw_turn, 0.0)
-            req = jnp.maximum(s["issue_t"], raw_start)
-            req = jnp.maximum(req, s["addr_free"])
-            req = jnp.maximum(req, s["bus_free"] + turn_l)
-            req = jnp.maximum(req, war_gate)
+            r0 = jnp.maximum(s["issue_t"], raw_start)
+            r1 = jnp.maximum(r0, s["addr_free"])
+            cand_bus = s["bus_free"] + turn_l
+            r2 = jnp.maximum(r1, cand_bus)
+            req = jnp.maximum(r2, war_gate)
             lat_unit = jnp.where(fs_i[:, None], mem_lat, pf_hit)
             lat_str = jnp.where(fs_i[:, None], mem_lat,
                                 0.5 * (mem_lat + pf_hit))
@@ -654,38 +755,119 @@ def _build_jax_sweep(mc: MachineConfig):
                                         lat_str, mem_lat))
             lat = jnp.where(opt_m2, lat_m, mem_lat)
             data_done = req + lat + dur_bus
-            fo_l = jnp.maximum(req + lat + burst / bpc, war_gate)
-            cp_l = jnp.maximum(data_done, war_gate + vl2 / epc)
+            fo_cand = req + lat + burst / bpc
+            fo_l = jnp.maximum(fo_cand, war_gate)
+            cp_wg = war_gate + vl2 / epc
+            cp_l = jnp.maximum(data_done, cp_wg)
             rd_l = req
             busf_l = req + dur_bus
             addr_l = jnp.where(opt_m2, req, req + dur_bus)
+            if att:
+                c_req = selc(raw_start > s["issue_t"], c_raws,
+                             s["c_issue"])
+                c_req = selc(s["addr_free"] > r0, s["c_addr"], c_req)
+                c_req = selc(cand_bus > r1,
+                             bump(s["c_bus"], (MEM_RW_TURNAROUND, turn_l)),
+                             c_req)
+                c_req = selc(war_gate > r2, c_wg, c_req)
+                lat_ideal = jnp.minimum(lat, pf_hit)
+                lat_stall = lat - lat_ideal
+                c_fo_l = selc(war_gate > fo_cand, c_wg,
+                              bump(c_req, (IDEAL, lat_ideal + burst / bpc),
+                                   (MEM_DEMAND_LATENCY, lat_stall)))
+                c_cp_l = selc(cp_wg > data_done,
+                              bump(c_wg, (IDEAL, vl2 / epc)),
+                              bump(c_req, (IDEAL, lat_ideal + dur_ideal_m),
+                                   (MEM_DEMAND_LATENCY, lat_stall),
+                                   (MEM_TX_OVERHEAD, dur_stall_m)))
+                c_rd_l = c_req
+                c_bus_l = bump(c_req, (IDEAL, dur_ideal_m),
+                               (MEM_TX_OVERHEAD, dur_stall_m))
+                c_addr_l = selc(opt_m2, c_req, c_bus_l)
             # ---- STORE path -------------------------------------------
-            bs_split = jnp.maximum(raw_start, war_gate)
-            bs_split = jnp.maximum(bs_split, s["addr_free"])
-            bs_split = jnp.maximum(bs_split, s["wbus_free"])
+            bs0 = jnp.maximum(raw_start, war_gate)
+            bs1 = jnp.maximum(bs0, s["addr_free"])
+            bs_split = jnp.maximum(bs1, s["wbus_free"])
             turn_s = jnp.where((s["bus_last"] == _LOAD)[:, None],
                                rw_turn, 0.0)
-            bs_uni = jnp.maximum(raw_start, war_gate)
-            bs_uni = jnp.maximum(bs_uni, s["addr_free"])
-            bs_uni = jnp.maximum(bs_uni, s["bus_free"] + turn_s)
+            cand_bus_s = s["bus_free"] + turn_s
+            bs_uni = jnp.maximum(bs1, cand_bus_s)
             bs_s = jnp.where(opt_m2, bs_split, bs_uni)
             wbus_s = jnp.where(opt_m2, bs_split + dur_bus, s["wbus_free"])
             busf_s = jnp.where(
                 opt_m2, jnp.maximum(s["bus_free"], bs_split) + dur_bus,
                 bs_uni + dur_bus + store_commit)
-            cp_s = jnp.maximum(bs_s + dur_bus + mem_lat, raw_complete)
-            rd_s = jnp.maximum(bs_s + vl2 / epc,
-                               bs_s + dur_bus - queue_adv)
+            cp_cand_s = bs_s + dur_bus + mem_lat
+            cp_s = jnp.maximum(cp_cand_s, raw_complete)
+            t1s = bs_s + vl2 / epc
+            t2s = bs_s + dur_bus - queue_adv
+            rd_s = jnp.maximum(t1s, t2s)
             addr_s = jnp.where(opt_m2, bs_s, bs_s + dur_bus)
+            if att:
+                c_bs0 = selc(war_gate > raw_start, c_wg, c_raws)
+                c_bs1 = selc(s["addr_free"] > bs0, s["c_addr"], c_bs0)
+                c_bss = selc(s["wbus_free"] > bs1, s["c_wbus"], c_bs1)
+                c_bsu = selc(cand_bus_s > bs1,
+                             bump(s["c_bus"], (MEM_RW_TURNAROUND, turn_s)),
+                             c_bs1)
+                c_bs_s = selc(opt_m2, c_bss, c_bsu)
+                c_wbus_s = selc(opt_m2,
+                                bump(c_bss, (IDEAL, dur_ideal_m),
+                                     (MEM_TX_OVERHEAD, dur_stall_m)),
+                                s["c_wbus"])
+                c_split_bus = bump(
+                    selc(bs_split > s["bus_free"], c_bss, s["c_bus"]),
+                    (IDEAL, dur_ideal_m), (MEM_TX_OVERHEAD, dur_stall_m))
+                c_uni_bus = bump(c_bsu, (IDEAL, dur_ideal_m),
+                                 (MEM_TX_OVERHEAD, dur_stall_m),
+                                 (MEM_STORE_COMMIT, store_commit))
+                c_bus_s = selc(opt_m2, c_split_bus, c_uni_bus)
+                c_cp_s = selc(raw_complete > cp_cand_s, c_rc,
+                              bump(c_bs_s, (IDEAL, dur_ideal_m),
+                                   (MEM_TX_OVERHEAD, dur_stall_m),
+                                   (MEM_STORE_COMMIT, mem_lat)))
+                c_fo_s = c_cp_s
+                c_rd_s = bump(c_bs_s, (IDEAL, vl2 / epc),
+                              (OPR_QUEUE_LIMIT,
+                               jnp.maximum(t2s - t1s, 0.0)))
+                c_addr_s = selc(opt_m2, c_bs_s,
+                                bump(c_bs_s, (IDEAL, dur_ideal_m),
+                                     (MEM_TX_OVERHEAD, dur_stall_m)))
             # ---- COMPUTE/REDUCE/SLIDE path ----------------------------
             dur_c = jnp.where(dv_i[:, None], (vl2 / epc) * div_f,
                               (vl2 / epc) * conflict) + rl_i[:, None] * ful
             unit_free = jnp.where(is_slide, s["sldu_free"], s["fpu_free"])
-            bs_c = jnp.maximum(jnp.maximum(raw_start, war_gate), unit_free)
-            cp_c = jnp.maximum(bs_c + ful + dur_c, raw_complete)
+            bc0 = jnp.maximum(raw_start, war_gate)
+            bs_c = jnp.maximum(bc0, unit_free)
+            cp_cand_c = bs_c + ful + dur_c
+            cp_c = jnp.maximum(cp_cand_c, raw_complete)
             fo_c = jnp.where(is_red, cp_c, bs_c + ful)
-            rd_c = jnp.maximum(bs_c + vl2 / epc, cp_c - ful - queue_adv)
-            occ = jnp.maximum(bs_c + dur_c, cp_c - ful)
+            t1c = bs_c + vl2 / epc
+            t2c = cp_c - ful - queue_adv
+            rd_c = jnp.maximum(t1c, t2c)
+            t1o = bs_c + dur_c
+            t2o = cp_c - ful
+            occ = jnp.maximum(t1o, t2o)
+            if att:
+                dur_ideal_c = jnp.where(dv_i[:, None],
+                                        (vl2 / epc) * div_f,
+                                        vl2 / epc) + rl_i[:, None] * ful
+                dur_stall_c = dur_c - dur_ideal_c
+                c_unit = selc(is_slide, s["c_sldu"], s["c_fpu"])
+                c_bc0 = selc(war_gate > raw_start, c_wg, c_raws)
+                c_bs_c = selc(unit_free > bc0, c_unit, c_bc0)
+                c_cp_c = selc(raw_complete > cp_cand_c, c_rc,
+                              bump(c_bs_c, (IDEAL, ful + dur_ideal_c),
+                                   (OPR_BANK_CONFLICT, dur_stall_c)))
+                c_fo_c = selc(is_red, c_cp_c,
+                              bump(c_bs_c, (IDEAL, ful)))
+                c_rd_c = bump(c_bs_c, (IDEAL, vl2 / epc),
+                              (OPR_QUEUE_LIMIT,
+                               jnp.maximum(t2c - t1c, 0.0)))
+                c_occ = bump(c_bs_c, (IDEAL, dur_ideal_c),
+                             (OPR_BANK_CONFLICT, dur_stall_c),
+                             (OPR_CHAIN_DELAY,
+                              jnp.maximum(t2o - t1o, 0.0)))
 
             # ---- select by kind & merge -------------------------------
             busy_start = jnp.where(is_load, req,
@@ -719,6 +901,29 @@ def _build_jax_sweep(mc: MachineConfig):
                 jnp.where(is_load[:, 0], _LOAD, _STORE), s["bus_last"])
             ns["issue_t"] = jnp.where(valid, s["issue_t"] + issue_gap,
                                       s["issue_t"])
+            if att:
+                c_cp = selc(is_load, c_cp_l,
+                            selc(is_store, c_cp_s, c_cp_c))
+                c_fo = selc(is_load, c_fo_l,
+                            selc(is_store, c_fo_s, c_fo_c))
+                c_rd = selc(is_load, c_rd_l,
+                            selc(is_store, c_rd_s, c_rd_c))
+                ns["c_bus"] = selc(valid & is_load, c_bus_l,
+                                   selc(valid & is_store, c_bus_s,
+                                        s["c_bus"]))
+                ns["c_addr"] = selc(valid & is_load, c_addr_l,
+                                    selc(valid & is_store, c_addr_s,
+                                         s["c_addr"]))
+                ns["c_wbus"] = selc(valid & is_store, c_wbus_s,
+                                    s["c_wbus"])
+                ns["c_sldu"] = selc(is_comp & is_slide, c_occ,
+                                    s["c_sldu"])
+                ns["c_fpu"] = selc(is_comp & ~is_slide, c_occ,
+                                   s["c_fpu"])
+                ns["c_issue"] = selc(
+                    valid,
+                    bump(s["c_issue"], (DEP_ISSUE_GAP, issue_gap)),
+                    s["c_issue"])
             # writer / reader-release scatter via one-hot rows
             oh_dst = (jnp.arange(R)[None, :] == dstc[:, None]) \
                 & (valid & has_dst)
@@ -727,23 +932,52 @@ def _build_jax_sweep(mc: MachineConfig):
             ns["w_compl"] = jnp.where(oh_dst[:, :, None],
                                       complete[:, None, :], s["w_compl"])
             ns["has_w"] = s["has_w"] | oh_dst
+            if att:
+                ns["wf_c"] = jnp.where(oh_dst[:, :, None, None],
+                                       c_fo[:, None], s["wf_c"])
+                ns["wc_c"] = jnp.where(oh_dst[:, :, None, None],
+                                       c_cp[:, None], s["wc_c"])
             release = jnp.where(opt_c2, read_done,
                                 complete + war_ovh)
+            if att:
+                c_rel = selc(opt_c2, c_rd,
+                             bump(c_cp, (DEP_WAR_RELEASE, war_ovh)))
             r_rel = s["r_rel"]
+            rr_c = s["rr_c"] if att else None
             for j in range(S):
                 src = sr_i[:, j]
                 srcc = jnp.clip(src, 0, R - 1)
                 oh = (jnp.arange(R)[None, :] == srcc[:, None]) \
                     & (valid & (src >= 0)[:, None])
+                if att:
+                    adopt = oh[:, :, None] & (release[:, None, :] > r_rel)
+                    rr_c = jnp.where(adopt[..., None], c_rel[:, None],
+                                     rr_c)
                 r_rel = jnp.where(
                     oh[:, :, None],
                     jnp.maximum(r_rel, release[:, None, :]), r_rel)
             ns["r_rel"] = r_rel
+            if att:
+                ns["rr_c"] = rr_c
+            adopt_t = valid & (complete > s["total"])
+            if att:
+                ns["c_total"] = selc(adopt_t, c_cp, s["c_total"])
+            ns["fin_start"] = jnp.where(adopt_t, busy_start,
+                                        s["fin_start"])
             ns["total"] = jnp.where(valid, jnp.maximum(s["total"], complete),
                                     s["total"])
+            ns["first_fo"] = jnp.where(valid & ~s["seen"], first_out,
+                                       s["first_fo"])
+            ns["seen"] = s["seen"] | valid
+            ns["lane_fo"] = jnp.where(is_comp,
+                                      jnp.minimum(s["lane_fo"], first_out),
+                                      s["lane_fo"])
             return ns, None
 
         final, _ = lax.scan(step, state, fields)
-        return final["total"], final["busy_fpu"], final["busy_bus"]
+        comp = final["c_total"] if attribution else final["total"]
+        return (final["total"], final["busy_fpu"], final["busy_bus"],
+                final["lane_fo"], final["first_fo"], final["fin_start"],
+                comp)
 
     return jax.jit(sweep, static_argnums=(2,))

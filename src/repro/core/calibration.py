@@ -27,11 +27,14 @@ import pathlib
 import random
 from typing import Sequence
 
+import numpy as np
+
 from repro.core import paper
 from repro.core.batch_sim import BatchAraSimulator
 from repro.core.isa import OptConfig, geomean
 from repro.core.roofline import normalized
 from repro.core.simulator import SimParams
+from repro.core.stalls import PATH_NAMES, STALL_CATEGORIES, path_sums
 from repro.core.traces import DEFAULT_TRACES, stack_traces
 
 # Parameter search space: (name, lo, hi).  tx_ovh is bounded low because
@@ -91,20 +94,30 @@ _SIM = BatchAraSimulator()
 
 
 def evaluate_many(params_list: Sequence[SimParams],
-                  traces=None, backend: str = "numpy") -> list[dict]:
+                  traces=None, backend: str = "numpy",
+                  attribution: bool = False) -> list[dict]:
     """Score many candidates with one batched `(kernel x config x
     candidate)` sweep; returns one metrics dict per candidate.
 
     `backend` selects the batched engine: ``numpy`` (bit-exact vs. the
     scalar simulator) or ``jax`` (one compiled `lax.scan` program; wins
     on accelerator hosts once the fixed-shape compile amortizes over the
-    search's repeated same-shape populations)."""
+    search's repeated same-shape populations).  With `attribution` the
+    sweep also carries the stall decomposition (both backends) and each
+    metrics dict gains per-kernel critical-path / category shares of
+    baseline and full-opt cycles (``paths_base/full``,
+    ``stalls_base/full``) for `attribution_loss`."""
     traces = traces or _traces()
     names = list(traces)
     stacked = stack_traces([traces[k] for k in names])
-    res = _SIM.run(stacked, _CONFIGS, list(params_list), backend=backend)
+    res = _SIM.run(stacked, _CONFIGS, list(params_list), backend=backend,
+                   attribution=attribution)
     cycles = res.cycles                        # (kernel, config, candidate)
     gflops = res.gflops
+    if attribution:
+        denom = np.maximum(cycles[..., None], 1e-9)
+        path_share = path_sums(res.stalls) / denom     # (K, C, ci, 3)
+        cat_share = res.stalls / denom                 # (K, C, ci, 9)
 
     outs = []
     for ci in range(cycles.shape[2]):
@@ -123,13 +136,25 @@ def evaluate_many(params_list: Sequence[SimParams],
         out["geomean_speedup"] = geomean(list(out["speedup"].values()))
         out["geomean_norm_base"] = geomean(list(out["norm_base"].values()))
         out["geomean_norm_opt"] = geomean(list(out["norm_opt"].values()))
+        if attribution:
+            for col, tag in ((0, "base"), (1, "full")):
+                out[f"paths_{tag}"] = {
+                    name: dict(zip(PATH_NAMES,
+                                   map(float, path_share[ki, col, ci])))
+                    for ki, name in enumerate(names)}
+                out[f"stalls_{tag}"] = {
+                    name: dict(zip(STALL_CATEGORIES,
+                                   map(float, cat_share[ki, col, ci])))
+                    for ki, name in enumerate(names)}
         outs.append(out)
     return outs
 
 
-def evaluate(params: SimParams, traces=None, backend: str = "numpy") -> dict:
+def evaluate(params: SimParams, traces=None, backend: str = "numpy",
+             attribution: bool = False) -> dict:
     """Simulate everything the loss needs; returns a metrics dict."""
-    return evaluate_many([params], traces, backend=backend)[0]
+    return evaluate_many([params], traces, backend=backend,
+                         attribution=attribution)[0]
 
 
 def loss(metrics: dict) -> float:
@@ -147,10 +172,52 @@ def loss(metrics: dict) -> float:
     return err
 
 
+#: §VI.C anchor: gemm's VRF bank-conflict stretch is 14% at baseline and
+#: 5% with the operand-delivery optimizations — as a share of a fully
+#: lane-bound kernel's cycles that is stretch/(1+stretch).
+_CONFLICT_SHARE = {"base": 0.14 / 1.14, "full": 0.05 / 1.05}
+
+
+def attribution_loss(metrics: dict) -> float:
+    """Score the stall *decomposition* against the paper's §IV / §VI.C
+    narrative, not just end-to-end cycles.
+
+    Terms (all on shares of cycles, so they compose with `loss`):
+      * scal/axpy at baseline must lose primarily to memory-side supply
+        (§IV.A) — squared hinge on any other path overtaking it;
+      * gemm's bank-conflict share is anchored to the measured stretch
+        (§VI.C: 14% baseline -> 5% full);
+      * gemm at baseline must keep operand delivery among its stalls —
+        squared hinge on the operand path falling below half the
+        mem-supply path.
+
+    Needs ``evaluate(..., attribution=True)`` metrics; combine as
+    ``loss(m) + weight * attribution_loss(m)`` (see `calibrate`'s
+    ``attribution_weight``).
+    """
+    err = 0.0
+    pb = metrics["paths_base"]
+    for k in ("scal", "axpy"):
+        other = max(pb[k]["dep_issue"], pb[k]["operand"])
+        err += max(0.0, other - pb[k]["mem_supply"]) ** 2
+    for tag, target in _CONFLICT_SHARE.items():
+        share = metrics[f"stalls_{tag}"]["gemm"]["opr_bank_conflict"]
+        err += (share - target) ** 2
+    err += max(0.0, 0.5 * pb["gemm"]["mem_supply"]
+               - pb["gemm"]["operand"]) ** 2
+    return err
+
+
 def _losses_of(candidates: Sequence[dict], traces,
-               backend: str = "numpy") -> list[float]:
+               backend: str = "numpy",
+               attribution_weight: float = 0.0) -> list[float]:
     params = [SimParams(**vals) for vals in candidates]
-    return [loss(m) for m in evaluate_many(params, traces, backend=backend)]
+    metrics = evaluate_many(params, traces, backend=backend,
+                            attribution=attribution_weight > 0.0)
+    if attribution_weight > 0.0:
+        return [loss(m) + attribution_weight * attribution_loss(m)
+                for m in metrics]
+    return [loss(m) for m in metrics]
 
 
 #: Reduced problem sizes for the backend parity check: every kernel the
@@ -170,18 +237,24 @@ def parity_traces():
 
 
 def check_backend_parity(backend: str, traces=None,
-                         tol: float = 1e-6) -> float:
+                         tol: float = 1e-6,
+                         attribution_weight: float = 0.0) -> float:
     """Cross-check one candidate's loss between `backend` and numpy.
 
     Guards calibration against a silently-divergent accelerated backend;
     returns the absolute loss difference, raising if it exceeds `tol`.
     Defaults to reduced-size traces (`parity_traces`) so the guard stays
-    cheap even on hosts where one backend is slow."""
+    cheap even on hosts where one backend is slow.  A non-zero
+    `attribution_weight` routes the comparison through the attribution-
+    carrying sweep, so the stall-decomposition tensors are parity-checked
+    too."""
     traces = traces or parity_traces()
     vals = dict(dataclasses.asdict(SimParams()), **SEED_CANDIDATE)
     vals["idx_ovh_opt"] = 0.9 * vals["idx_ovh_base"]
-    ref = _losses_of([vals], traces, backend="numpy")[0]
-    got = _losses_of([vals], traces, backend=backend)[0]
+    ref = _losses_of([vals], traces, backend="numpy",
+                     attribution_weight=attribution_weight)[0]
+    got = _losses_of([vals], traces, backend=backend,
+                     attribution_weight=attribution_weight)[0]
     diff = abs(got - ref)
     if not diff <= tol * max(abs(ref), 1.0):
         raise RuntimeError(
@@ -192,11 +265,18 @@ def check_backend_parity(backend: str, traces=None,
 
 def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
               verbose: bool = True, chunk: int = 64,
-              backend: str = "numpy") -> tuple[SimParams, float]:
+              backend: str = "numpy",
+              attribution_weight: float = 0.0) -> tuple[SimParams, float]:
+    """Fit baseline parameters; `attribution_weight` > 0 adds
+    ``attribution_weight * attribution_loss`` to every candidate's score
+    (the sweep then carries stall tensors — supported on both backends,
+    so ``--backend jax`` scores attribution-aware objectives in the same
+    compiled scan)."""
     rng = random.Random(seed)
     traces = _traces()
     if backend != "numpy":
-        diff = check_backend_parity(backend)
+        diff = check_backend_parity(
+            backend, attribution_weight=attribution_weight)
         if verbose:
             print(f"[parity] {backend} vs numpy seed-loss diff={diff:.2e}")
     defaults = dataclasses.asdict(SimParams())
@@ -210,14 +290,16 @@ def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
 
     best_vals = dict(defaults, **SEED_CANDIDATE)
     best_vals["idx_ovh_opt"] = 0.9 * best_vals["idx_ovh_base"]
-    best = _losses_of([best_vals], traces, backend)[0]
+    best = _losses_of([best_vals], traces, backend,
+                      attribution_weight)[0]
     if verbose:
         print(f"[seed] loss={best:.4f}")
     # Random search, `chunk` candidates per batched evaluation.
     done = 0
     while done < iters:
         cands = [sample() for _ in range(min(chunk, iters - done))]
-        for off, l in enumerate(_losses_of(cands, traces, backend)):
+        for off, l in enumerate(_losses_of(cands, traces, backend,
+                                           attribution_weight)):
             if l < best:
                 best, best_vals = l, cands[off]
                 if verbose:
@@ -234,7 +316,8 @@ def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
                 if name == "idx_ovh_base":
                     cand["idx_ovh_opt"] = 0.9 * cand[name]
                 cands.append(cand)
-            for cand, l in zip(cands, _losses_of(cands, traces, backend)):
+            for cand, l in zip(cands, _losses_of(cands, traces, backend,
+                                                 attribution_weight)):
                 if l < best:
                     best, best_vals = l, cand
         if verbose:
@@ -280,10 +363,15 @@ def main() -> None:  # pragma: no cover - CLI
     ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
                     help="batched engine for candidate scoring (jax wins "
                          "on accelerator hosts; parity-checked vs numpy)")
+    ap.add_argument("--attribution-weight", type=float, default=0.0,
+                    help="weight of attribution_loss in candidate scores "
+                         "(0 disables; the sweep then also carries the "
+                         "stall decomposition on either backend)")
     args = ap.parse_args()
     params, best = calibrate(iters=args.iters, seed=args.seed,
                              chunk=args.chunk, refine_rounds=args.refine,
-                             backend=args.backend)
+                             backend=args.backend,
+                             attribution_weight=args.attribution_weight)
     metrics = evaluate(params)
     save(params, best, metrics=metrics)
     print(json.dumps({"loss": best,

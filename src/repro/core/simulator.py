@@ -110,6 +110,11 @@ class SimResult:
     busy_bus: float = 0.0
     ideal: float = 0.0                 # ideal component of `cycles`
     stalls: np.ndarray | None = None   # (9,) stall categories of `cycles`
+    # Phase-split columns (prologue/steady/tail, dp/ii_eff/dt, t_ideal) —
+    # attached by grid-level attribution passes (`benchmarks.gridlib`);
+    # scalar runs leave it None (use `analysis.attribution.phase_decompose`
+    # on the timings instead).
+    phases: dict | None = None
 
     @property
     def gflops(self) -> float:

@@ -71,6 +71,33 @@ PATH_INDICES: dict[str, tuple[int, ...]] = {
     for path, cats in CRITICAL_PATHS.items()
 }
 
+#: Critical-path names in `CRITICAL_PATHS` order (stable row order for
+#: `PATH_MATRIX` / `path_sums`).
+PATH_NAMES: tuple[str, ...] = tuple(CRITICAL_PATHS)
+
+#: `(paths, categories)` 0/1 indicator matrix, rows ordered like
+#: `PATH_NAMES`, columns like `STALL_CATEGORIES`.  ``stalls @
+#: PATH_MATRIX.T`` collapses a `(..., 9)` stall tensor to `(..., 3)`
+#: per-path sums in one matmul — grid-shaped analyses and the batched
+#: calibration objective use this instead of per-cell python loops.
+PATH_MATRIX: np.ndarray = np.zeros(
+    (len(PATH_NAMES), len(STALL_CATEGORIES)), np.float64)
+for _pi, _path in enumerate(PATH_NAMES):
+    for _ci in PATH_INDICES[_path]:
+        PATH_MATRIX[_pi, _ci] = 1.0
+PATH_MATRIX.setflags(write=False)
+
+
+def path_sums(stalls: Sequence[float] | np.ndarray) -> np.ndarray:
+    """Collapse a `(..., 9)` stall tensor to `(..., 3)` critical-path sums
+    (trailing axis ordered like `PATH_NAMES`).  Vectorized counterpart of
+    `group_stalls` for batched grids."""
+    vec = np.asarray(stalls, np.float64)
+    if vec.shape[-1] != len(STALL_CATEGORIES):
+        raise ValueError(f"expected trailing axis of "
+                         f"{len(STALL_CATEGORIES)}, got {vec.shape[-1]}")
+    return vec @ PATH_MATRIX.T
+
 
 def stall_dict(stalls: Sequence[float] | np.ndarray) -> dict[str, float]:
     """Name the entries of a 9-long stall vector."""
@@ -142,7 +169,8 @@ __all__ = [
     "IDEAL", "MEM_DEMAND_LATENCY", "MEM_TX_OVERHEAD", "MEM_RW_TURNAROUND",
     "MEM_STORE_COMMIT", "DEP_ISSUE_GAP", "DEP_WAR_RELEASE",
     "OPR_CHAIN_DELAY", "OPR_BANK_CONFLICT", "OPR_QUEUE_LIMIT", "NCOMP",
-    "STALL_CATEGORIES", "CRITICAL_PATHS", "PATH_INDICES", "stall_dict",
-    "group_stalls", "top_sources", "top_paths", "path_of",
-    "check_invariant", "as_row", "zero_components",
+    "STALL_CATEGORIES", "CRITICAL_PATHS", "PATH_INDICES", "PATH_NAMES",
+    "PATH_MATRIX", "path_sums", "stall_dict", "group_stalls",
+    "top_sources", "top_paths", "path_of", "check_invariant", "as_row",
+    "zero_components",
 ]

@@ -11,8 +11,8 @@ simulator's parameters) changes the key and transparently misses.
 
 Values hold only the scalar outputs (cycles, busy counters, roofline
 accounting, and — when the producer ran with attribution — the kernel
-ideal/stall decomposition), not per-instruction timings, so cells stay a
-few hundred bytes each.
+ideal/stall decomposition plus its prologue/steady/tail phase split),
+not per-instruction timings, so cells stay a few hundred bytes each.
 
 Garbage collection: the store grows one file per distinct cell forever
 unless bounded.  `prune(max_entries=N)` keeps the N most-recently-touched
@@ -160,14 +160,18 @@ class SweepCache:
                 self.prune(max_entries=max(self.max_entries * 9 // 10, 1))
 
     def get_result(self, key: str, kernel: str,
-                   attribution: bool = False) -> SimResult | None:
+                   attribution: bool = False,
+                   require_phases: bool = False) -> SimResult | None:
         """Restore a cached cell.  With `attribution`, a cell stored
         without its stall decomposition counts as a miss so the caller
-        re-simulates with accounting on."""
+        re-simulates with accounting on; `require_phases` additionally
+        demands the phase-split columns (grid attribution passes store
+        them alongside the stall vector)."""
         v = self.get(key)
         if v is None:
             return None
-        if attribution and "stalls" not in v:
+        if (attribution and "stalls" not in v) or \
+                (require_phases and "phases" not in v):
             self.hits -= 1
             self.misses += 1
             return None
@@ -177,7 +181,8 @@ class SweepCache:
                          flops=int(v["flops"]), bytes=int(v["bytes"]),
                          timings=[], busy_fpu=v["busy_fpu"],
                          busy_bus=v["busy_bus"],
-                         ideal=v.get("ideal", 0.0), stalls=stalls)
+                         ideal=v.get("ideal", 0.0), stalls=stalls,
+                         phases=v.get("phases"))
 
     def put_result(self, key: str, res: SimResult) -> None:
         value = {"cycles": res.cycles, "flops": res.flops,
@@ -186,6 +191,8 @@ class SweepCache:
         if res.stalls is not None:
             value["ideal"] = float(res.ideal)
             value["stalls"] = [float(x) for x in res.stalls]
+        if res.phases is not None:
+            value["phases"] = {k: float(x) for k, x in res.phases.items()}
         self.put(key, value)
 
     def prune(self, keep_keys: Iterable[str] | None = None,

@@ -106,11 +106,42 @@ def test_scalar_attribution_off_identical_cycles(traces, corner_results,
                         tr_.read_done)
 
 
-def test_jax_backend_rejects_attribution(traces):
+def test_jax_backend_attribution_no_longer_raises(traces):
+    """Regression: through PR 2 `attribution=True, backend='jax'` raised
+    NotImplementedError; the compiled scan now carries the components."""
     bsim = BatchAraSimulator()
-    with pytest.raises(NotImplementedError):
-        bsim.sweep([traces["scal"]], [OptConfig.baseline()],
-                   backend="jax", attribution=True)
+    res = bsim.sweep([traces["scal"]], [OptConfig.baseline()],
+                     backend="jax", attribution=True)
+    assert res.ideal is not None and res.stalls is not None
+    assert res.stalls.shape == (1, 1, 1, 9)
+    gap = res.cycles - res.ideal - res.stalls.sum(axis=-1)
+    assert np.abs(gap).max() <= 1e-6 + 1e-9 * res.cycles.max()
+
+
+def test_jax_attribution_full_grid_matches_numpy(traces):
+    """Acceptance: on the full 11-kernel x 8-corner grid, the jax
+    backend's stall tensors satisfy ``ideal + sum(stalls) == cycles``
+    and match the numpy backend at float64 (allclose)."""
+    bsim = BatchAraSimulator()
+    st = stack_traces(list(traces.values()))
+    params = load_params()
+    ref = bsim.run(st, ALL_CORNERS, params, attribution=True)
+    got = bsim.run(st, ALL_CORNERS, params, backend="jax",
+                   attribution=True)
+    np.testing.assert_allclose(got.cycles, ref.cycles, rtol=1e-9)
+    np.testing.assert_allclose(got.ideal, ref.ideal, rtol=1e-9,
+                               atol=1e-6)
+    np.testing.assert_allclose(got.stalls, ref.stalls, rtol=1e-9,
+                               atol=1e-6)
+    # Phase observables ride along on both backends.
+    np.testing.assert_allclose(got.lane_first_out, ref.lane_first_out,
+                               rtol=1e-9, atol=1e-6)
+    np.testing.assert_allclose(got.first_first_out, ref.first_first_out,
+                               rtol=1e-9, atol=1e-6)
+    np.testing.assert_allclose(got.finish_start, ref.finish_start,
+                               rtol=1e-9, atol=1e-6)
+    gap = got.cycles - got.ideal - got.stalls.sum(axis=-1)
+    assert np.abs(gap).max() <= 1e-6 + 1e-9 * got.cycles.max()
 
 
 # --- paper §IV narrative ---------------------------------------------------

@@ -85,6 +85,33 @@ def test_jax_backend_matches_numpy():
     np.testing.assert_allclose(got.cycles, ref.cycles, rtol=1e-6)
     np.testing.assert_allclose(got.busy_fpu, ref.busy_fpu, rtol=1e-6)
     np.testing.assert_allclose(got.busy_bus, ref.busy_bus, rtol=1e-6)
+    # Phase observables ride along on both backends, attribution or not.
+    for field in ("lane_first_out", "first_first_out", "finish_start"):
+        a, b = getattr(got, field), getattr(ref, field)
+        assert a is not None and b is not None
+        np.testing.assert_allclose(a, b, rtol=1e-6, err_msg=field)
+
+
+def test_phase_observables_match_scalar_timings(paper_traces, batch_grid):
+    """The batched phase observables equal what the scalar timings say:
+    earliest lane first_out, instruction 0's first_out, finisher start."""
+    from repro.core.isa import OpKind
+    sim = AraSimulator()
+    for bi, (name, tr) in enumerate(paper_traces.items()):
+        for oi, opt in enumerate(ALL_CORNERS):
+            res = sim.run(tr, opt)
+            lane = [t.first_out for t, i in zip(res.timings, tr.instrs)
+                    if i.kind not in (OpKind.LOAD, OpKind.STORE)]
+            finisher = max(res.timings, key=lambda t: t.complete)
+            assert batch_grid.first_first_out[bi, oi, 0] == \
+                res.timings[0].first_out, (name, opt.label)
+            assert batch_grid.finish_start[bi, oi, 0] == \
+                finisher.start, (name, opt.label)
+            got_lane = batch_grid.lane_first_out[bi, oi, 0]
+            if lane:
+                assert got_lane == min(lane), (name, opt.label)
+            else:
+                assert np.isinf(got_lane), (name, opt.label)
 
 
 def test_speedup_vs_baseline(batch_grid):

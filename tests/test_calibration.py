@@ -37,7 +37,8 @@ def test_check_backend_parity():
 def test_check_backend_parity_rejects_divergence(monkeypatch):
     calls = {}
 
-    def fake_losses(cands, traces, backend="numpy"):
+    def fake_losses(cands, traces, backend="numpy",
+                    attribution_weight=0.0):
         calls[backend] = True
         return [1.0 if backend == "numpy" else 2.0]
 
@@ -45,6 +46,35 @@ def test_check_backend_parity_rejects_divergence(monkeypatch):
     with pytest.raises(RuntimeError, match="disagrees"):
         C.check_backend_parity("jax", _small_traces())
     assert calls == {"numpy": True, "jax": True}
+
+
+def test_evaluate_attribution_metrics():
+    """attribution=True attaches per-kernel path/category shares of
+    baseline and full-opt cycles, and attribution_loss consumes them."""
+    from repro.core.stalls import PATH_NAMES, STALL_CATEGORIES
+    m = C.evaluate(SimParams(), _small_traces(), attribution=True)
+    for tag in ("base", "full"):
+        assert set(m[f"paths_{tag}"]["scal"]) == set(PATH_NAMES)
+        assert set(m[f"stalls_{tag}"]["gemm"]) == set(STALL_CATEGORIES)
+        for kernel, shares in m[f"paths_{tag}"].items():
+            for path, share in shares.items():
+                assert -1e-9 <= share <= 1.0 + 1e-9, (kernel, path)
+    al = C.attribution_loss(m)
+    assert al >= 0.0
+    # The calibrated model keeps the paper's narrative: scal/axpy lose
+    # to mem-supply at baseline, so those hinge terms are inactive.
+    pb = m["paths_base"]
+    for k in ("scal", "axpy"):
+        assert pb[k]["mem_supply"] >= max(pb[k]["dep_issue"],
+                                          pb[k]["operand"])
+
+
+def test_attribution_weighted_loss_jax_parity():
+    """--backend jax scores attribution-aware objectives: weighted loss
+    matches numpy through the compiled attribution scan."""
+    pytest.importorskip("jax")
+    diff = C.check_backend_parity("jax", attribution_weight=0.5)
+    assert diff <= 1e-6
 
 
 def test_save_records_geomean(tmp_path):

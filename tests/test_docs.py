@@ -1,0 +1,34 @@
+"""Docs tree contracts: links resolve, stall vocabulary stays in sync.
+
+The CI `docs` job runs `tools/check_docs.py` standalone; running the
+same checks in tier-1 keeps a broken doc from ever reaching that job.
+"""
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_required_docs_exist():
+    for rel in ("README.md", "docs/architecture.md",
+                "docs/attribution.md", "docs/backends.md"):
+        assert (REPO / rel).is_file(), f"{rel} missing"
+
+
+def test_intra_repo_links_resolve():
+    assert check_docs.check_links() == []
+
+
+def test_stall_vocabulary_in_sync():
+    assert check_docs.check_stall_vocabulary() == []
+
+
+def test_roadmap_points_at_docs():
+    """The stall-report prose moved out of ROADMAP.md; the pointer must
+    survive future edits."""
+    text = (REPO / "ROADMAP.md").read_text()
+    assert "docs/attribution.md" in text
+    assert "docs/backends.md" in text

@@ -1,0 +1,232 @@
+"""Batched phase decomposition + jax attribution parity.
+
+Contracts: `phase_decompose_grid` equals per-cell `phase_decompose` of
+the scalar simulator on every cell (bit-equal via the numpy backend,
+including on arbitrary hypothesis-generated traces); the jax backend
+agrees across all 8 ablation corners; phase splits thread through
+gridlib into the sweep cache and the fig6 CSV rows; stacked-bar
+rendering works when matplotlib is present.
+"""
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.analysis.attribution import (phase_decompose,
+                                        phase_decompose_grid)
+from repro.analysis.report import (breakdown_rows, have_matplotlib,
+                                   render_stacked_bars)
+from repro.core import stalls as S
+from repro.core.batch_sim import BatchAraSimulator, BatchResult
+from repro.core.isa import ABLATION_GRID, OptConfig
+from repro.core.simulator import AraSimulator, SimParams
+from repro.core.traces import axpy, dotp, scal, spmv, stack_traces
+
+ALL_CORNERS = (OptConfig.baseline(), *ABLATION_GRID)
+_PARAMS = [SimParams(), SimParams(mem_latency=90.0, d_chain_base=20.0)]
+
+
+def _small_traces():
+    return [scal(256), axpy(256), dotp(256), spmv(16)]
+
+
+@pytest.fixture(scope="module")
+def batch():
+    traces = _small_traces()
+    res = BatchAraSimulator().run(stack_traces(traces), ALL_CORNERS,
+                                  _PARAMS, attribution=True)
+    return traces, res
+
+
+def test_phase_grid_matches_per_cell(batch):
+    traces, res = batch
+    pg = phase_decompose_grid(traces, res, params=_PARAMS)
+    for pi, params in enumerate(_PARAMS):
+        sim = AraSimulator(params=params)
+        for bi, tr in enumerate(traces):
+            for oi, opt in enumerate(ALL_CORNERS):
+                ref = phase_decompose(tr, sim.run(tr, opt), params=params)
+                cell = pg.cell(bi, oi, pi)
+                assert cell.prologue_real == ref.prologue_real
+                assert cell.steady_real == ref.steady_real
+                assert cell.tail_real == ref.tail_real
+                assert cell.deviation == ref.deviation
+                assert cell.spec == ref.spec
+
+
+def test_phase_grid_reconstructs_cycles(batch):
+    """Eq. (4)/(5) in tensor form: t_real == cycles and loss ==
+    cycles - t_ideal, for every cell at once."""
+    traces, res = batch
+    pg = phase_decompose_grid(traces, res, params=_PARAMS)
+    np.testing.assert_allclose(pg.t_real, res.cycles, rtol=1e-12)
+    np.testing.assert_allclose(
+        pg.loss, res.cycles - pg.t_ideal[:, None, :], rtol=1e-9,
+        atol=1e-6)
+
+
+def test_phase_grid_shape_validation(batch):
+    traces, res = batch
+    with pytest.raises(ValueError, match="does not match"):
+        phase_decompose_grid(traces[:2], res, params=_PARAMS)
+    hollow = BatchResult(names=res.names, cycles=res.cycles,
+                         busy_fpu=res.busy_fpu, busy_bus=res.busy_bus,
+                         flops=res.flops, bytes=res.bytes)
+    with pytest.raises(ValueError, match="phase observables"):
+        phase_decompose_grid(traces, hollow, params=_PARAMS)
+
+
+def test_jax_attribution_parity_all_corners():
+    """Satellite contract: jax-vs-numpy attribution parity across all 8
+    ablation corners, >= 3 kernels, and a widened params axis."""
+    traces = _small_traces()
+    st_ = stack_traces(traces)
+    bsim = BatchAraSimulator()
+    ref = bsim.run(st_, ALL_CORNERS, _PARAMS, attribution=True)
+    got = bsim.run(st_, ALL_CORNERS, _PARAMS, backend="jax",
+                   attribution=True)
+    np.testing.assert_allclose(got.cycles, ref.cycles, rtol=1e-9)
+    np.testing.assert_allclose(got.ideal, ref.ideal, rtol=1e-9,
+                               atol=1e-9)
+    np.testing.assert_allclose(got.stalls, ref.stalls, rtol=1e-9,
+                               atol=1e-9)
+    # The same grid's phase decomposition agrees backend-to-backend.
+    pg_ref = phase_decompose_grid(traces, ref, params=_PARAMS)
+    pg_got = phase_decompose_grid(traces, got, params=_PARAMS)
+    for field in ("prologue_real", "steady_real", "tail_real",
+                  "dp", "ii_eff", "dt"):
+        np.testing.assert_allclose(getattr(pg_got, field),
+                                   getattr(pg_ref, field),
+                                   rtol=1e-9, atol=1e-9, err_msg=field)
+
+
+def test_path_matrix_matches_group_stalls(batch):
+    _, res = batch
+    sums = S.path_sums(res.stalls)             # (B, O, P, 3)
+    assert sums.shape == (*res.stalls.shape[:-1], 3)
+    grouped = S.group_stalls(res.stalls[0, 0, 0])
+    for pi, name in enumerate(S.PATH_NAMES):
+        assert sums[0, 0, 0, pi] == pytest.approx(grouped[name])
+    np.testing.assert_allclose(sums.sum(-1), res.stalls.sum(-1),
+                               rtol=1e-12)
+
+
+# --- hypothesis property test ----------------------------------------------
+
+from test_attribution import _build_trace, _instr_tuples  # noqa: E402
+
+
+@given(raw=_instr_tuples)
+@settings(max_examples=25, deadline=None)
+def test_property_phase_grid_matches_per_cell(raw):
+    """On arbitrary traces, the vectorized grid decomposition equals the
+    scalar per-cell path bit-for-bit (numpy backend)."""
+    tr = _build_trace(raw)
+    corners = (OptConfig.baseline(), OptConfig.full())
+    res = BatchAraSimulator().run(stack_traces([tr]), corners,
+                                  attribution=True)
+    pg = phase_decompose_grid([tr], res)
+    sim = AraSimulator(params=SimParams())
+    for oi, opt in enumerate(corners):
+        ref = phase_decompose(tr, sim.run(tr, opt))
+        cell = pg.cell(0, oi, 0)
+        assert cell.prologue_real == ref.prologue_real
+        assert cell.steady_real == ref.steady_real
+        assert cell.tail_real == ref.tail_real
+        assert cell.deviation == ref.deviation
+
+
+# --- gridlib threading + rendering -----------------------------------------
+
+def test_grid_cells_attach_and_cache_phases(tmp_path):
+    import pathlib
+    import sys
+    repo = str(pathlib.Path(__file__).resolve().parents[1])
+    if repo not in sys.path:
+        sys.path.insert(0, repo)
+    from benchmarks import gridlib
+    from repro.launch.sweep_cache import SweepCache
+    traces = {"scal": scal(256), "axpy": axpy(256)}
+    opts = [OptConfig.baseline(), OptConfig.full()]
+    cache = SweepCache(tmp_path)
+    g1 = gridlib.Grid(params=SimParams(), cache=cache)
+    cells = g1.cells(traces, opts, attribution=True)
+    for (name, label), res in cells.items():
+        assert res.phases is not None, (name, label)
+        assert set(res.phases) == {"prologue", "steady", "tail",
+                                   "dp", "ii_eff", "dt", "t_ideal"}
+        total = (res.phases["prologue"] + res.phases["steady"]
+                 + res.phases["tail"])
+        assert total == pytest.approx(res.cycles, rel=1e-9)
+        ref = phase_decompose(traces[name],
+                              AraSimulator(params=SimParams()).run(
+                                  traces[name],
+                                  opts[0] if label == "base" else opts[1]))
+        assert res.phases["ii_eff"] == ref.deviation.ii_eff
+    # Second grid instance: phases survive the cache roundtrip.
+    g2 = gridlib.Grid(params=SimParams(), cache=SweepCache(tmp_path))
+    cells2 = g2.cells(traces, opts, attribution=True)
+    assert g2.cache.hits == 4 and g2.cache.misses == 0
+    for key, res in cells.items():
+        assert cells2[key].phases == pytest.approx(res.phases)
+    # Rows built from these cells carry the phase columns.
+    rows = breakdown_rows({n: cells[(n, "base")] for n in traces},
+                          config="base")
+    assert all("ii_eff" in r and "prologue" in r for r in rows)
+
+
+def test_jax_grid_does_not_pollute_cache(tmp_path):
+    """Cell keys don't encode the backend and the cache's contract is
+    scalar bit-exactness, so jax-backed grids must not persist their
+    (allclose-only) results where numpy readers would hit them."""
+    import pathlib
+    import sys
+    repo = str(pathlib.Path(__file__).resolve().parents[1])
+    if repo not in sys.path:
+        sys.path.insert(0, repo)
+    from benchmarks import gridlib
+    from repro.launch.sweep_cache import SweepCache
+    traces = {"scal": scal(256)}
+    opts = [OptConfig.baseline()]
+    cache = SweepCache(tmp_path)
+    gj = gridlib.Grid(params=SimParams(), cache=cache, backend="jax")
+    cells = gj.cells(traces, opts, attribution=True)
+    assert cells[("scal", "base")].stalls is not None
+    assert len(cache) == 0                 # nothing persisted
+    gn = gridlib.Grid(params=SimParams(), cache=cache)
+    gn.cells(traces, opts, attribution=True)
+    assert len(cache) == 1                 # numpy cells do persist
+
+
+def test_plain_cached_cells_miss_attribution_phase_reads(tmp_path):
+    """A cell stored without phases must not satisfy an attribution read
+    (the grid re-simulates instead of emitting rows missing columns)."""
+    from repro.launch.sweep_cache import SweepCache
+    cache = SweepCache(tmp_path)
+    key = "ab" + "0" * 62
+    cache.put(key, {"cycles": 1.0, "flops": 1, "bytes": 1,
+                    "busy_fpu": 0.0, "busy_bus": 0.0,
+                    "ideal": 0.5, "stalls": [0.0] * 9})
+    assert cache.get_result(key, "scal", attribution=True) is not None
+    assert cache.get_result(key, "scal", attribution=True,
+                            require_phases=True) is None
+
+
+@pytest.mark.skipif(not have_matplotlib(),
+                    reason="matplotlib not installed ([plot] extra)")
+def test_render_stacked_bars(tmp_path):
+    traces = {"scal": scal(256), "axpy": axpy(256)}
+    sim = AraSimulator(params=SimParams())
+    rows = []
+    for opt in (OptConfig.baseline(), OptConfig.full()):
+        results = {n: sim.run(tr, opt) for n, tr in traces.items()}
+        rows.extend(breakdown_rows(results, config=opt.label))
+    out = render_stacked_bars(rows, tmp_path / "bars.png")
+    assert out.is_file() and out.stat().st_size > 0
+
+
+def test_render_stacked_bars_degrades_without_matplotlib(monkeypatch,
+                                                         tmp_path):
+    import repro.analysis.report as R
+    monkeypatch.setattr(R, "have_matplotlib", lambda: False)
+    with pytest.raises(RuntimeError, match="matplotlib"):
+        R.render_stacked_bars([], tmp_path / "bars.png")

@@ -1,0 +1,88 @@
+"""Docs consistency checker (CI `docs` job; also run by tier-1 via
+`tests/test_docs.py`).
+
+Two checks:
+
+1. **Intra-repo links resolve.**  Every relative markdown link in
+   `README.md` and `docs/**/*.md` must point at a file that exists in
+   the repo.  Links under `experiments/` are generated artifacts
+   (gitignored) and only checked for staying under that prefix;
+   absolute URLs and pure anchors are skipped.
+2. **Stall vocabulary stays in sync.**  Every stall-category-shaped
+   token (``mem_*``/``dep_*``/``opr_*``) in `docs/attribution.md` must
+   name a real category or critical path in `repro.core.stalls`, and
+   all nine categories plus all three paths must be documented.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+_LINK = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+_IMG = re.compile(r"!\[[^\]]*\]\(([^)\s]+)\)")
+_STALLISH = re.compile(r"\b(?:mem|dep|opr)_[a-z_]+\b")
+
+
+def _doc_files() -> list[pathlib.Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("**/*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links() -> list[str]:
+    errors: list[str] = []
+    for doc in _doc_files():
+        rel_doc = doc.relative_to(REPO)
+        text = doc.read_text()
+        targets = _LINK.findall(text) + _IMG.findall(text)
+        for target in targets:
+            if "://" in target or target.startswith(("mailto:", "#")):
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:
+                continue
+            resolved = (doc.parent / path_part).resolve()
+            try:
+                rel = resolved.relative_to(REPO)
+            except ValueError:
+                errors.append(f"{rel_doc}: link escapes the repo: "
+                              f"{target}")
+                continue
+            if rel.parts and rel.parts[0] == "experiments":
+                continue                   # generated artifact, not in git
+            if not resolved.exists():
+                errors.append(f"{rel_doc}: broken link: {target}")
+    return errors
+
+
+def check_stall_vocabulary() -> list[str]:
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.core.stalls import CRITICAL_PATHS, STALL_CATEGORIES
+    doc = REPO / "docs" / "attribution.md"
+    if not doc.exists():
+        return ["docs/attribution.md is missing"]
+    text = doc.read_text()
+    known = set(STALL_CATEGORIES) | set(CRITICAL_PATHS)
+    errors = [f"docs/attribution.md names unknown stall category/path "
+              f"{tok!r} (not in repro.core.stalls)"
+              for tok in sorted(set(_STALLISH.findall(text)) - known)]
+    errors += [f"docs/attribution.md does not document {name!r}"
+               for name in (*STALL_CATEGORIES, *CRITICAL_PATHS)
+               if name not in text]
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_stall_vocabulary()
+    for e in errors:
+        print(f"ERROR: {e}")
+    if not errors:
+        print(f"docs check OK ({len(_doc_files())} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
