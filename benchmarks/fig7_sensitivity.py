@@ -1,0 +1,156 @@
+"""Fig. 7 (analysis artifact): parameter-sensitivity sweep.
+
+Which microarchitectural knobs does the reproduced speedup hinge on?
+For all 11 paper kernels, sweep every `SimParams` field around the
+calibrated point (`repro.launch.sensitivity`): per-field 1-D traversals
+(OAT) reduced to per-knob elasticities and tornado rankings, one
+pairwise 2-D grid reduced to a gap-closed-ratio surface, and a
+Latin-hypercube joint sample reduced to robustness bands.  Everything
+runs as wide-params batched sweeps through `BatchAraSimulator`
+(chunked P axis, content-addressed cell cache); ``--backend auto``
+picks jax once the grid is wide enough (docs/backends.md records the
+measured crossover).  docs/sensitivity.md explains every knob and how
+to read the output.
+
+    python benchmarks/fig7_sensitivity.py --profile smoke        # CI
+    python benchmarks/fig7_sensitivity.py --profile large --plot
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_REPO), str(_REPO / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks import gridlib
+from benchmarks.common import OUT_DIR, emit
+from repro.analysis.report import (have_matplotlib, render_param_heatmap,
+                                   render_tornado)
+from repro.launch import sensitivity as S
+
+#: Per-profile design sizes: OAT points per knob, pairwise grid side,
+#: LHS joint-sample count.  smoke stays tiny for CI; `large` pairs the
+#: past-paper problem sizes with a lean design so the full suite stays
+#: in minutes (see docs/backends.md for measured runtimes).
+DESIGN_SIZES = {
+    "smoke": {"points": 2, "pair_points": 3, "lhs": 8},
+    "default": {"points": 5, "pair_points": 5, "lhs": 32},
+    "large": {"points": 2, "pair_points": 3, "lhs": 8},
+}
+
+#: Default pairwise surface: the dominant memory-side knob against the
+#: dominant issue-side knob (the paper's §IV.A vs §IV.B tension).
+DEFAULT_PAIR = ("mem_latency", "issue_gap_base")
+
+
+def run(points: int, pair: tuple[str, str], pair_points: int, lhs_n: int,
+        backend: str = "auto") -> dict[str, list[dict]]:
+    """Run the three designs and reduce to row lists (keys: ``knobs``,
+    ``pair``, ``lhs``)."""
+    g = gridlib.grid()
+    traces = gridlib.paper_traces()
+    center = g.params
+    kw = dict(mc=g.mc, backend=backend, cache=g.cache,
+              use_cache=g.use_cache, sim=g.sim)
+
+    oat = S.oat_design(center, points=points)
+    t = S.sweep_design(traces, oat, **kw)
+    out = {"knobs": S.knob_rows(oat, t)}
+
+    pd = S.pair_design(center, pair, points=pair_points)
+    out["pair"] = S.pair_rows(pd, S.sweep_design(traces, pd, **kw))
+
+    ld = S.lhs_design(center, n=lhs_n)
+    out["lhs"] = S.lhs_rows(ld, S.sweep_design(traces, ld, **kw))
+    return out
+
+
+def top_knobs(rows: list[dict], n: int = 3) -> dict[str, list[str]]:
+    """Per-kernel top-`n` knobs by tornado rank."""
+    by_kernel: dict[str, list[dict]] = {}
+    for r in rows:
+        by_kernel.setdefault(str(r["kernel"]), []).append(r)
+    return {k: [r["knob"] for r in
+                sorted(v, key=lambda r: r["tornado_rank"])[:n]]
+            for k, v in by_kernel.items()}
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--profile", choices=tuple(gridlib.PROFILE_SIZES),
+                    default=None,
+                    help="problem-size profile (default: the active "
+                         "gridlib profile)")
+    ap.add_argument("--backend", choices=("auto", "numpy", "jax"),
+                    default="auto",
+                    help="auto picks jax past the measured width "
+                         "crossover (docs/backends.md)")
+    ap.add_argument("--points", type=int, default=None,
+                    help="OAT traversal points per knob")
+    ap.add_argument("--pair", default=",".join(DEFAULT_PAIR),
+                    help="two knobs for the pairwise surface, "
+                         "comma-separated")
+    ap.add_argument("--pair-points", type=int, default=None)
+    ap.add_argument("--lhs", type=int, default=None,
+                    help="Latin-hypercube joint-sample count")
+    ap.add_argument("--plot", action="store_true",
+                    help="also render tornado + heatmap PNGs (needs "
+                         "matplotlib, the [plot] extra)")
+    args = ap.parse_args(argv)
+
+    prev_profile = gridlib.active_profile()
+    if args.profile:
+        gridlib.set_profile(args.profile)
+    try:
+        sizes = DESIGN_SIZES.get(gridlib.active_profile(),
+                                 DESIGN_SIZES["default"])
+        points = args.points if args.points is not None else \
+            sizes["points"]
+        pair_points = args.pair_points if args.pair_points is not None \
+            else sizes["pair_points"]
+        lhs_n = args.lhs if args.lhs is not None else sizes["lhs"]
+        pair = tuple(args.pair.split(","))
+        if len(pair) != 2:
+            ap.error(f"--pair needs exactly two knobs, got {args.pair!r}")
+
+        t0 = time.perf_counter()
+        out = run(points, pair, pair_points, lhs_n, backend=args.backend)
+        dt = time.perf_counter() - t0
+
+        emit(out["knobs"], gridlib.table_name("fig7_sensitivity"))
+        emit(out["pair"],
+             gridlib.table_name(f"fig7_pair_{pair[0]}_{pair[1]}"))
+        emit(out["lhs"], gridlib.table_name("fig7_lhs"))
+        print(f"# fig7 sweep: {dt:.1f}s "
+              f"(profile={gridlib.active_profile()}, "
+              f"backend={args.backend}, points={points})")
+        print("# top-3 knobs per kernel (tornado rank):")
+        for kernel, knobs in top_knobs(out["knobs"]).items():
+            print(f"#   {kernel:<6} {', '.join(knobs)}")
+
+        if args.plot:
+            if have_matplotlib():
+                p = render_tornado(
+                    out["knobs"],
+                    OUT_DIR / f"{gridlib.table_name('fig7_tornado')}.png",
+                    title="per-kernel knob tornado")
+                print(f"# tornado -> {p}")
+                p = render_param_heatmap(
+                    out["pair"], pair,
+                    OUT_DIR / (gridlib.table_name(
+                        f"fig7_pair_{pair[0]}_{pair[1]}") + ".png"))
+                print(f"# pair heatmap -> {p}")
+            else:
+                print("# --plot skipped: matplotlib not installed "
+                      "(pip install -e .[plot])")
+    finally:
+        gridlib.set_profile(prev_profile)
+
+
+if __name__ == "__main__":
+    main()

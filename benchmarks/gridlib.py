@@ -181,6 +181,29 @@ class Grid:
                         self.cache.put_result(keys[(tname, opt.label)], res)
         return out
 
+    def param_cells(self, traces: Mapping[str, KernelTrace],
+                    opts: Sequence[OptConfig],
+                    params_list: Sequence[SimParams],
+                    attribution: bool = True,
+                    p_chunk: int | None = None
+                    ) -> dict[tuple[str, str, int], SimResult]:
+        """Wide-params cells: `{(trace_key, opt.label, param_index):
+        SimResult}` over an explicit params axis.
+
+        The sensitivity counterpart of `cells`: evaluation, caching
+        (content-addressed on the params block) and phase-column
+        threading are delegated to `repro.launch.sensitivity.run_grid`,
+        which chunks the P axis so `large`-profile grids fit memory and
+        resolves the backend by grid width when this grid was built
+        with ``backend="auto"``.
+        """
+        from repro.launch.sensitivity import DEFAULT_P_CHUNK, run_grid
+        return run_grid(traces, params_list, opts, mc=self.mc,
+                        backend=self.backend, attribution=attribution,
+                        cache=self.cache, use_cache=self.use_cache,
+                        p_chunk=p_chunk if p_chunk is not None
+                        else DEFAULT_P_CHUNK, sim=self.sim)
+
     def base_and_full(self, traces: Mapping[str, KernelTrace]
                       ) -> dict[tuple[str, str], SimResult]:
         return self.cells(traces, [BASE, FULL])

@@ -26,8 +26,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (dryrun_table, fig3_speedup, fig4_roofline,
-                            fig5_sensitivity, fig6_attribution, gridlib,
-                            kernel_bench, table1_ablation, table2_efficiency)
+                            fig5_sensitivity, fig6_attribution,
+                            fig7_sensitivity, gridlib, kernel_bench,
+                            table1_ablation, table2_efficiency)
     if args.smoke:
         gridlib.set_profile("smoke")
 
@@ -42,11 +43,18 @@ def main() -> None:
     table1_ablation.main()
     fig5_sensitivity.main()
     table2_efficiency.main()
+    # fig7 parameter sensitivity: a tiny grid at smoke sizes for CI, the
+    # wide params axis at `large` sizes in the full profile (the sweep
+    # that actually exercises `large`; fig7 restores the active profile
+    # on exit so it never leaks into later benchmarks).
+    plot = ["--plot"] if have_matplotlib() else []
     if args.smoke:
+        fig7_sensitivity.main(["--profile", "smoke", *plot])
         from benchmarks.common import emit
         emit(kernel_bench.batch_grid_rows(),
              gridlib.table_name("kernel_bench"))
     else:
+        fig7_sensitivity.main(["--profile", "large", *plot])
         kernel_bench.main()
         dryrun_table.main()
 

@@ -3,12 +3,16 @@ Fig. 3 (speedups), Fig. 4 (gap-closed), Table I (ablation),
 Fig. 5 (size sensitivity), plus the deviation-attribution summary
 (top stall sources per kernel against the ideal chaining model).
 
-Exits non-zero if the reproduced geomean speedup drifts more than 5%
-from the value recorded at calibration time in ``ara_calibrated.json``
-— a silent-model-drift tripwire for CI and local hacking alike.
+Exits non-zero if the reproduced geomean speedup drifts more than the
+tolerance recorded at calibration time in ``ara_calibrated.json``
+(``drift_tol``, falling back to `calibration.GEOMEAN_DRIFT_TOL`) —
+a silent-model-drift tripwire for CI and local hacking alike.  When
+fig7 sensitivity artifacts exist (`benchmarks/fig7_sensitivity.py`),
+also prints the top-3 most influential knobs per kernel.
 
     PYTHONPATH=src python examples/ara_paper_repro.py
 """
+import csv
 import pathlib
 import sys
 
@@ -21,6 +25,30 @@ from benchmarks import (fig3_speedup, fig4_roofline, fig5_sensitivity,
 from repro.analysis.attribution import summarize
 from repro.core.calibration import GEOMEAN_DRIFT_TOL as DRIFT_TOL
 from repro.core.calibration import load_payload
+
+
+def print_sensitivity_top3() -> None:
+    """Top-3 knobs per kernel from the newest fig7 artifact, if any
+    profile's CSV exists (see docs/sensitivity.md for how to read it)."""
+    out_dir = REPO / "experiments" / "benchmarks"
+    candidates = sorted(out_dir.glob("fig7_sensitivity*.csv"),
+                        key=lambda p: p.stat().st_mtime, reverse=True)
+    if not candidates:
+        return
+    path = candidates[0]
+    with path.open() as fh:
+        rows = list(csv.DictReader(fh))
+    if not rows or "tornado_rank" not in rows[0]:
+        return
+    by_kernel: dict[str, list[dict]] = {}
+    for r in rows:
+        by_kernel.setdefault(r["kernel"], []).append(r)
+    print(f"\n# sensitivity: top-3 knobs per kernel ({path.name})")
+    for kernel, krows in by_kernel.items():
+        top = sorted(krows, key=lambda r: int(r["tornado_rank"]))[:3]
+        knobs = ", ".join(f"{r['knob']} (swing {float(r['swing_speedup']):.3f})"
+                          for r in top)
+        print(f"{kernel:<6} {knobs}")
 
 
 def main() -> int:
@@ -46,19 +74,24 @@ def main() -> int:
         print(f"{name:<6} cycles={info['cycles']:>9.0f} "
               f"ideal={info['ideal']:>9.0f}  {srcs}")
     fig6_attribution.export_example_trace()
+    print_sensitivity_top3()
 
-    # Drift gate: reproduced geomean vs the calibration-time record.
+    # Drift gate: reproduced geomean vs the calibration-time record,
+    # at the tolerance the record itself carries (metadata written by
+    # `calibration.save`; code-constant fallback for old records).
     gm = next(r["speedup_sim"] for r in fig3_rows
               if r["kernel"] == "GEOMEAN")
-    recorded = load_payload().get("geomean_speedup")
+    payload = load_payload()
+    recorded = payload.get("geomean_speedup")
+    tol = float(payload.get("drift_tol", DRIFT_TOL))
     if recorded is None:
         print("\n[drift] no recorded geomean in ara_calibrated.json "
               "(re-run calibration to arm the tripwire)")
         return 0
     drift = abs(gm / recorded - 1.0)
     print(f"\n[drift] geomean speedup {gm:.4f} vs recorded {recorded:.4f} "
-          f"({100 * drift:.2f}% drift, tolerance {100 * DRIFT_TOL:.0f}%)")
-    if drift > DRIFT_TOL:
+          f"({100 * drift:.2f}% drift, tolerance {100 * tol:.0f}%)")
+    if drift > tol:
         print("[drift] FAIL: simulator output drifted from the calibrated "
               "record — recalibrate or fix the regression", file=sys.stderr)
         return 1

@@ -154,5 +154,117 @@ def render_stacked_bars(rows: list[dict], path: str | pathlib.Path,
     return path
 
 
+#: Critical-path accent colors for tornado bars (same families as the
+#: stacked-bar shades: mem blues, dep oranges, opr greens; inherent and
+#: unknown knobs grey).
+_PATH_COLORS = {"mem_supply": "#3182bd", "dep_issue": "#e6550d",
+                "operand": "#31a354", "inherent": "#969696"}
+
+
+def render_tornado(rows: list[dict], path: str | pathlib.Path,
+                   value: str = "swing_speedup", top: int = 8,
+                   title: str = "sensitivity tornado") -> pathlib.Path:
+    """Render fig7 knob rows (`launch.sensitivity.knob_rows` shape) as
+    per-kernel tornado charts: horizontal bars, one per knob, widest
+    (lowest `tornado_rank`) on top, colored by the knob's critical
+    path.  `top` bounds the knobs shown per kernel."""
+    if not have_matplotlib():
+        raise RuntimeError(
+            "render_tornado needs matplotlib; install the [plot] "
+            "extra (pip install -e .[plot])")
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    by_kernel: dict[str, list[dict]] = {}
+    for r in rows:
+        by_kernel.setdefault(str(r["kernel"]), []).append(r)
+    nk = len(by_kernel)
+    ncols = min(nk, 4)
+    nrows = -(-nk // ncols)
+    fig, axes = plt.subplots(nrows, ncols,
+                             figsize=(3.4 * ncols + 1.2, 2.4 * nrows + 0.8),
+                             squeeze=False)
+    for ax in axes.flat[nk:]:
+        ax.set_visible(False)
+    for ax, (kernel, krows) in zip(axes.flat, by_kernel.items()):
+        ranked = sorted(krows, key=lambda r: r["tornado_rank"])[:top]
+        ranked = ranked[::-1]              # widest bar on top
+        y = range(len(ranked))
+        vals = [r[value] for r in ranked]
+        colors = [_PATH_COLORS.get(r.get("path", ""), "#969696")
+                  for r in ranked]
+        ax.barh(list(y), vals, color=colors, height=0.7)
+        ax.set_yticks(list(y))
+        ax.set_yticklabels([r["knob"] for r in ranked], fontsize=6)
+        ax.tick_params(axis="x", labelsize=6)
+        ax.set_title(kernel, fontsize=9)
+    fig.suptitle(f"{title} ({value})", fontsize=11)
+    fig.tight_layout(rect=(0, 0, 1, 0.95))
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fig.savefig(path, dpi=150)
+    plt.close(fig)
+    return path
+
+
+def render_param_heatmap(rows: list[dict], knobs: tuple[str, str],
+                         path: str | pathlib.Path,
+                         value: str = "gap_closed",
+                         title: str = "pairwise sensitivity"
+                         ) -> pathlib.Path:
+    """Render fig7 pairwise rows (`launch.sensitivity.pair_rows` shape)
+    as one heatmap per kernel: knob 1 on x, knob 2 on y, cell color =
+    `value` (gap-closed ratio by default)."""
+    if not have_matplotlib():
+        raise RuntimeError(
+            "render_param_heatmap needs matplotlib; install the [plot] "
+            "extra (pip install -e .[plot])")
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+    import numpy as np
+
+    f1, f2 = knobs
+    by_kernel: dict[str, list[dict]] = {}
+    for r in rows:
+        by_kernel.setdefault(str(r["kernel"]), []).append(r)
+    nk = len(by_kernel)
+    ncols = min(nk, 4)
+    nrows = -(-nk // ncols)
+    fig, axes = plt.subplots(nrows, ncols,
+                             figsize=(3.0 * ncols + 1.4, 2.6 * nrows + 0.8),
+                             squeeze=False)
+    for ax in axes.flat[nk:]:
+        ax.set_visible(False)
+    im = None
+    for ax, (kernel, krows) in zip(axes.flat, by_kernel.items()):
+        xs = sorted({r[f1] for r in krows})
+        ys = sorted({r[f2] for r in krows})
+        grid = np.full((len(ys), len(xs)), np.nan)
+        for r in krows:
+            grid[ys.index(r[f2]), xs.index(r[f1])] = r[value]
+        im = ax.imshow(grid, origin="lower", aspect="auto",
+                       cmap="viridis")
+        ax.set_xticks(range(len(xs)))
+        ax.set_xticklabels([f"{x:.3g}" for x in xs], fontsize=6,
+                           rotation=45)
+        ax.set_yticks(range(len(ys)))
+        ax.set_yticklabels([f"{y:.3g}" for y in ys], fontsize=6)
+        ax.set_xlabel(f1, fontsize=7)
+        ax.set_ylabel(f2, fontsize=7)
+        ax.set_title(kernel, fontsize=9)
+    if im is not None:
+        fig.colorbar(im, ax=axes.ravel().tolist(), fraction=0.02,
+                     label=value)
+    fig.suptitle(f"{title} ({value})", fontsize=11)
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fig.savefig(path, dpi=150)
+    plt.close(fig)
+    return path
+
+
 __all__ = ["breakdown_rows", "format_report", "write_csv",
-           "have_matplotlib", "render_stacked_bars", "STALL_CATEGORIES"]
+           "have_matplotlib", "render_stacked_bars", "render_tornado",
+           "render_param_heatmap", "STALL_CATEGORIES"]

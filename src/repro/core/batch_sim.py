@@ -93,33 +93,61 @@ class ParamView:
         return len(self.mem_latency)
 
 
+def stack_params(params: Sequence[SimParams]) -> dict[str, np.ndarray]:
+    """Stack a params axis into struct-of-arrays form: one `(P,)` float64
+    column per `SimParams` field.
+
+    This is the wide-axis analogue of `stack_traces` for the P axis —
+    sensitivity sweeps build hundreds-to-thousands of `SimParams`
+    variants and every per-cell view below is then a vectorized select
+    over these columns instead of a Python loop over cells.
+    """
+    cols = {f.name: np.empty(len(params), np.float64)
+            for f in dataclasses.fields(SimParams)}
+    for pi, p in enumerate(params):
+        for name, col in cols.items():
+            col[pi] = getattr(p, name)
+    return cols
+
+
 def make_views(opts: Sequence[OptConfig],
                params: Sequence[SimParams]) -> ParamView:
-    """Cross `opts` x `params` into flat per-cell views (opt-major)."""
-    cells = [(o, p) for o in opts for p in params]
-    f = lambda fn: np.array([fn(o, p) for o, p in cells], np.float64)
-    b = lambda fn: np.array([fn(o, p) for o, p in cells], bool)
+    """Cross `opts` x `params` into flat per-cell views (opt-major).
+
+    Built from `stack_params` columns: each view field is one
+    `np.where` select over the `(O, P)` broadcast, so wide params axes
+    never loop per cell.  Values are identical (bit-for-bit) to the
+    per-cell conditional expressions of `AraSimulator._view`.
+    """
+    sp = stack_params(params)
+    O, P = len(opts), len(params)
+    om = np.fromiter((o.memory for o in opts), bool, O)
+    oc = np.fromiter((o.control for o in opts), bool, O)
+    oo = np.fromiter((o.operand for o in opts), bool, O)
+
+    def cross(name):                       # (P,) -> (O*P,) opt-major
+        return np.broadcast_to(sp[name], (O, P)).ravel()
+
+    def pick(flag, opt_name, base_name):   # per-opt-class select
+        return np.where(flag[:, None], sp[opt_name][None, :],
+                        sp[base_name][None, :]).ravel()
+
     return ParamView(
-        mem_latency=f(lambda o, p: p.mem_latency),
-        prefetch_hit=f(lambda o, p: p.prefetch_hit),
-        div_factor=f(lambda o, p: p.div_factor),
-        war_release_ovh=f(lambda o, p: p.war_release_ovh),
-        tx_ovh=f(lambda o, p: p.tx_ovh_opt if o.memory else p.tx_ovh_base),
-        idx_ovh=f(lambda o, p: p.idx_ovh_opt if o.memory else p.idx_ovh_base),
-        rw_turn=f(lambda o, p: p.rw_turnaround_opt if o.memory
-                  else p.rw_turnaround_base),
-        store_commit=f(lambda o, p: p.store_commit_opt if o.memory
-                       else p.store_commit_base),
-        issue_gap=f(lambda o, p: p.issue_gap_opt if o.control
-                    else p.issue_gap_base),
-        d_chain=f(lambda o, p: p.d_fwd if o.operand else p.d_chain_base),
-        conflict=f(lambda o, p: 1.0 + (p.conflict_opt if o.operand
-                                       else p.conflict_base)),
-        queue_adv=f(lambda o, p: p.queue_adv_opt if o.operand
-                    else p.queue_adv_base),
-        opt_memory=b(lambda o, p: o.memory),
-        opt_control=b(lambda o, p: o.control),
-        d_fwd=f(lambda o, p: p.d_fwd),
+        mem_latency=cross("mem_latency"),
+        prefetch_hit=cross("prefetch_hit"),
+        div_factor=cross("div_factor"),
+        war_release_ovh=cross("war_release_ovh"),
+        tx_ovh=pick(om, "tx_ovh_opt", "tx_ovh_base"),
+        idx_ovh=pick(om, "idx_ovh_opt", "idx_ovh_base"),
+        rw_turn=pick(om, "rw_turnaround_opt", "rw_turnaround_base"),
+        store_commit=pick(om, "store_commit_opt", "store_commit_base"),
+        issue_gap=pick(oc, "issue_gap_opt", "issue_gap_base"),
+        d_chain=pick(oo, "d_fwd", "d_chain_base"),
+        conflict=1.0 + pick(oo, "conflict_opt", "conflict_base"),
+        queue_adv=pick(oo, "queue_adv_opt", "queue_adv_base"),
+        opt_memory=np.repeat(om, P),
+        opt_control=np.repeat(oc, P),
+        d_fwd=cross("d_fwd"),
     )
 
 
@@ -156,6 +184,32 @@ class BatchResult:
         return self.cycles[:, base_opt:base_opt + 1, :] / self.cycles
 
 
+def _per_cell_fields(res: BatchResult) -> list[str]:
+    """BatchResult fields carrying a params axis: every array of rank
+    >= 3 is `(B, O, P, ...)` by construction, so chunk slicing/concat
+    derives the list instead of hardcoding it — a future per-cell
+    field (as PR 2 added ideal/stalls) is chunked automatically."""
+    return [f.name for f in dataclasses.fields(res)
+            if isinstance(getattr(res, f.name), np.ndarray)
+            and getattr(res, f.name).ndim >= 3]
+
+
+def _slice_p(res: BatchResult, n: int) -> BatchResult:
+    """Drop padded params columns (keep the first `n` of axis 2/P)."""
+    return dataclasses.replace(
+        res, **{name: getattr(res, name)[:, :, :n]
+                for name in _per_cell_fields(res)})
+
+
+def _concat_p(parts: Sequence[BatchResult]) -> BatchResult:
+    """Concatenate chunked results along the params axis (axis 2)."""
+    return dataclasses.replace(
+        parts[0],
+        **{name: np.concatenate([getattr(p, name) for p in parts],
+                                axis=2)
+           for name in _per_cell_fields(parts[0])})
+
+
 class BatchAraSimulator:
     """Evaluate `(traces x opts x params)` grids in one batched call."""
 
@@ -169,11 +223,33 @@ class BatchAraSimulator:
     def run(self, stacked: StackedTraces, opts: Sequence[OptConfig],
             params: SimParams | Sequence[SimParams] = SimParams(),
             backend: str = "numpy",
-            attribution: bool = False) -> BatchResult:
+            attribution: bool = False,
+            p_chunk: int | None = None) -> BatchResult:
+        """Evaluate the `(trace x opt x params)` grid.
+
+        `p_chunk` splits the params axis into chunks of at most that
+        width so `large`-profile grids with hundreds-to-thousands of
+        `SimParams` variants fit memory (state is `(B, R, W, NCOMP)` with
+        `W = O * P`); results are concatenated back and bit-identical to
+        the unchunked run (chunks are independent grid columns).  On the
+        jax backend the last chunk is padded up to `p_chunk` (and the
+        padding sliced off) so every chunk reuses one compiled shape.
+        """
         if isinstance(params, SimParams):
             params = [params]
         opts = list(opts)
         params = list(params)
+        if p_chunk is not None and p_chunk < 1:
+            raise ValueError(f"p_chunk must be >= 1, got {p_chunk}")
+        if p_chunk is not None and len(params) > p_chunk:
+            parts = []
+            for lo in range(0, len(params), p_chunk):
+                chunk = params[lo:lo + p_chunk]
+                pad = p_chunk - len(chunk) if backend == "jax" else 0
+                part = self.run(stacked, opts, chunk + [chunk[-1]] * pad,
+                                backend=backend, attribution=attribution)
+                parts.append(_slice_p(part, len(chunk)) if pad else part)
+            return _concat_p(parts)
         view = make_views(opts, params)
         if backend == "numpy":
             cyc, bf, bb, comp, lfo, ffo, fst = self._run_numpy(

@@ -281,12 +281,18 @@ def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
             print(f"[parity] {backend} vs numpy seed-loss diff={diff:.2e}")
     defaults = dataclasses.asdict(SimParams())
 
-    def sample() -> dict:
-        vals = dict(defaults)
-        for name, lo, hi in SPACE:
-            vals[name] = rng.uniform(lo, hi)
-        vals["idx_ovh_opt"] = 0.9 * vals["idx_ovh_base"]
-        return vals
+    def population(k: int) -> list[dict]:
+        # Latin-hypercube population seeding (the sensitivity
+        # subsystem's stratified sampler): every batched evaluation
+        # covers each knob's full range instead of clumping, which a
+        # plain uniform draw does at small chunk sizes.
+        from repro.launch.sensitivity import lhs_candidates
+        outs = []
+        for over in lhs_candidates(SPACE, k, rng):
+            vals = dict(defaults, **over)
+            vals["idx_ovh_opt"] = 0.9 * vals["idx_ovh_base"]
+            outs.append(vals)
+        return outs
 
     best_vals = dict(defaults, **SEED_CANDIDATE)
     best_vals["idx_ovh_opt"] = 0.9 * best_vals["idx_ovh_base"]
@@ -297,7 +303,7 @@ def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
     # Random search, `chunk` candidates per batched evaluation.
     done = 0
     while done < iters:
-        cands = [sample() for _ in range(min(chunk, iters - done))]
+        cands = population(min(chunk, iters - done))
         for off, l in enumerate(_losses_of(cands, traces, backend,
                                            attribution_weight)):
             if l < best:
@@ -330,11 +336,17 @@ def save(params: SimParams, loss_value: float,
     """Persist calibrated params + headline fidelity numbers.
 
     The recorded ``geomean_speedup`` is the drift sentinel
-    `examples/ara_paper_repro.py` checks reproduced runs against."""
+    `examples/ara_paper_repro.py` checks reproduced runs against;
+    ``drift_tol`` records the tolerance the sentinel should apply, so a
+    recalibration can tighten or relax the tripwire without a code
+    change (consumers fall back to `GEOMEAN_DRIFT_TOL`).  A tolerance
+    already present in the record survives recalibration."""
     if metrics is None:
         metrics = evaluate(params)
+    prior_tol = load_payload(path).get("drift_tol", GEOMEAN_DRIFT_TOL)
     payload = {"params": dataclasses.asdict(params), "loss": loss_value,
-               "geomean_speedup": metrics["geomean_speedup"]}
+               "geomean_speedup": metrics["geomean_speedup"],
+               "drift_tol": prior_tol}
     path.write_text(json.dumps(payload, indent=2))
 
 

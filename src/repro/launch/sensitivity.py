@@ -1,0 +1,607 @@
+"""Parameter-sensitivity sweep subsystem: the wide params axis.
+
+The repro's artifacts evaluate a single calibrated `SimParams` point
+(`ara_calibrated.json`); this module asks the question the paper's
+calibration leaves open — *which microarchitectural knobs does the
+reproduced speedup actually hinge on?* — by stacking
+hundreds-to-thousands of `SimParams` variants into one wide P axis and
+running them through `repro.core.batch_sim.BatchAraSimulator` in a
+single batched call per cache-miss signature.
+
+Three sampler designs build the axis around a center point
+(`Design.variants[0]` is always the unmodified center):
+
+  * `oat_design`   — per-field 1-D traversals (one-at-a-time): every
+    knob swept across its bounds with all other knobs at the center;
+  * `pair_design`  — pairwise 2-D grids for interaction surfaces;
+  * `lhs_design`   — Latin-hypercube joint samples for robustness bands
+    (`lhs_candidates` is the raw stratified sampler, reused by
+    `repro.core.calibration` for population seeding).
+
+Reductions collapse the `(kernel x opt x variant)` cycle/stall tensors
+to per-knob **elasticities** (d ln cycles / d ln knob), **tornado
+rankings** (per-kernel speedup swing, the paper-facing "what does the
+1.33x geomean hinge on" ordering), and **gap-closed-ratio** values
+(fraction of baseline stall cycles the full optimization removes, per
+variant — a surface over `pair_design` grids).
+
+Execution: `run_grid` is cache-backed through the content-addressed
+`repro.launch.sweep_cache` (cells are keyed by the params block, so a
+re-run of the same design is free) and chunks the P axis
+(`BatchAraSimulator.run(..., p_chunk=...)`) so `large`-profile grids
+fit memory.  This is the first subsystem where the **jax backend is
+the intended default for wide grids on accelerator hosts**:
+`resolve_backend("auto", width)` picks jax once the grid width crosses
+`JAX_WIDTH_THRESHOLD` and jax reports a non-CPU device (the measured
+CPU numbers in docs/backends.md show numpy ahead at every width on
+CPU-only hosts, so auto never degrades a laptop/CI run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.analysis.attribution import phase_decompose_grid
+from repro.core.batch_sim import BatchAraSimulator
+from repro.core.calibration import SPACE
+from repro.core.calibration import load as load_calibrated
+from repro.core.isa import KernelTrace, MachineConfig, OptConfig
+from repro.core.simulator import SimParams, SimResult
+from repro.core.stalls import PATH_INDICES, STALL_CATEGORIES
+from repro.core.traces import stack_traces
+from repro.launch.sweep_cache import (SweepCache, cell_key,
+                                      params_fingerprint,
+                                      trace_fingerprint)
+
+#: Critical path each `SimParams` knob acts on (docs/sensitivity.md
+#: documents the same mapping; `div_factor` is inherent serialization —
+#: it moves ideal time, not a stall category).
+KNOB_PATHS: dict[str, str] = {
+    "mem_latency": "mem_supply",
+    "prefetch_hit": "mem_supply",
+    "tx_ovh_base": "mem_supply",
+    "tx_ovh_opt": "mem_supply",
+    "idx_ovh_base": "mem_supply",
+    "idx_ovh_opt": "mem_supply",
+    "rw_turnaround_base": "mem_supply",
+    "rw_turnaround_opt": "mem_supply",
+    "store_commit_base": "mem_supply",
+    "store_commit_opt": "mem_supply",
+    "issue_gap_base": "dep_issue",
+    "issue_gap_opt": "dep_issue",
+    "war_release_ovh": "dep_issue",
+    "d_chain_base": "operand",
+    "d_fwd": "operand",
+    "conflict_base": "operand",
+    "conflict_opt": "operand",
+    "queue_adv_base": "operand",
+    "queue_adv_opt": "operand",
+    "div_factor": "inherent",
+}
+
+_SPACE_BOUNDS = {name: (lo, hi) for name, lo, hi in SPACE}
+
+#: Grid width (`len(opts) * len(variants)`) above which
+#: `resolve_backend("auto", ...)` prefers the jax backend — on
+#: accelerator hosts only.  The measured CPU numbers in
+#: docs/backends.md show numpy ahead at every width on CPU, so this
+#: threshold never flips a CPU-only run to jax; it gates when a
+#: non-CPU device makes compiling the one-program scan worthwhile.
+JAX_WIDTH_THRESHOLD = 512
+
+#: Default P-axis chunk so `large`-profile grids fit memory: hazard
+#: state is `(B, R, W, NCOMP)` with `W = O * P`, so a 2-opt x 256-param
+#: chunk stays in the tens of MB even for register-rich matrix kernels.
+DEFAULT_P_CHUNK = 256
+
+
+def all_knobs() -> tuple[str, ...]:
+    """Every `SimParams` field, in declaration order."""
+    return tuple(f.name for f in dataclasses.fields(SimParams))
+
+
+def knob_bounds(center: SimParams, name: str, span: float = 2.0,
+                local: bool = False) -> tuple[float, float]:
+    """Traversal bounds for one knob.
+
+    Calibration-searched knobs reuse the `calibration.SPACE` bounds
+    (widened to include the center if it drifted outside); the rest get
+    a multiplicative `[center/span, center*span]` band, or `[0, 1]` for
+    zero-valued centers (additive knobs like `store_commit_opt`).
+    `local` skips the SPACE branch and always uses the multiplicative
+    band — the LHS robustness design jitters *around* the calibrated
+    point rather than re-exploring the whole search space.
+    """
+    c = float(getattr(center, name))
+    if name in _SPACE_BOUNDS and not local:
+        lo, hi = _SPACE_BOUNDS[name]
+        return min(lo, c), max(hi, c)
+    if c == 0.0:
+        return 0.0, 1.0
+    return c / span, c * span
+
+
+@dataclasses.dataclass(frozen=True)
+class Design:
+    """A params-axis design: the P axis plus its bookkeeping.
+
+    `variants[0]` is always the unmodified center; `assignments[i]`
+    records exactly the knob overrides applied to `variants[i]` (empty
+    for the center), which is what the reductions use to find each
+    knob's traversal.
+    """
+    kind: str                              # "oat" | "pair" | "lhs"
+    center: SimParams
+    knobs: tuple[str, ...]
+    variants: tuple[SimParams, ...]
+    assignments: tuple[Mapping[str, float], ...]
+
+    @property
+    def width(self) -> int:
+        return len(self.variants)
+
+    def indices_for(self, knob: str) -> list[int]:
+        """Variant indices on `knob`'s traversal (center excluded)."""
+        return [i for i, a in enumerate(self.assignments) if knob in a]
+
+    def fingerprint(self) -> str:
+        """Content hash of the params block (all variants, in order)."""
+        return params_fingerprint(self.variants)[:16]
+
+
+def center_params(center: SimParams | None = None) -> SimParams:
+    """Default design center: the calibrated point."""
+    return center if center is not None else load_calibrated()
+
+
+def oat_design(center: SimParams | None = None,
+               knobs: Sequence[str] | None = None,
+               points: int = 5, span: float = 2.0) -> Design:
+    """One-at-a-time design: per-field 1-D traversals.
+
+    `points` evenly-spaced values per knob across `knob_bounds`, all
+    other knobs held at the center — `1 + len(knobs) * points`
+    variants total.
+    """
+    center = center_params(center)
+    knobs = tuple(knobs if knobs is not None else all_knobs())
+    variants: list[SimParams] = [center]
+    assigns: list[dict[str, float]] = [{}]
+    for k in knobs:
+        lo, hi = knob_bounds(center, k, span)
+        for v in np.linspace(lo, hi, points):
+            variants.append(dataclasses.replace(center, **{k: float(v)}))
+            assigns.append({k: float(v)})
+    return Design("oat", center, knobs, tuple(variants), tuple(assigns))
+
+
+def pair_design(center: SimParams | None = None,
+                pair: tuple[str, str] = ("mem_latency", "issue_gap_base"),
+                points: int = 5, span: float = 2.0) -> Design:
+    """Pairwise 2-D grid: `points x points` joint settings of two knobs."""
+    center = center_params(center)
+    f1, f2 = pair
+    g1 = np.linspace(*knob_bounds(center, f1, span), points)
+    g2 = np.linspace(*knob_bounds(center, f2, span), points)
+    variants: list[SimParams] = [center]
+    assigns: list[dict[str, float]] = [{}]
+    for v1 in g1:
+        for v2 in g2:
+            over = {f1: float(v1), f2: float(v2)}
+            variants.append(dataclasses.replace(center, **over))
+            assigns.append(over)
+    return Design("pair", center, (f1, f2), tuple(variants),
+                  tuple(assigns))
+
+
+def lhs_candidates(space: Sequence[tuple[str, float, float]], n: int,
+                   rng) -> list[dict[str, float]]:
+    """`n` Latin-hypercube samples over a `(name, lo, hi)` space.
+
+    Each dimension is split into `n` equal strata with exactly one
+    sample per stratum (independently permuted per dimension), so small
+    populations still cover every knob's full range — this is the
+    sampler `repro.core.calibration.calibrate` seeds its random-search
+    populations with.  `rng` is a `random.Random` (stdlib), matching
+    calibration's seeded search.
+    """
+    cols: dict[str, list[float]] = {}
+    for name, lo, hi in space:
+        strata = list(range(n))
+        rng.shuffle(strata)
+        cols[name] = [lo + (s + rng.random()) * (hi - lo) / n
+                      for s in strata]
+    return [{name: cols[name][i] for name, _, _ in space}
+            for i in range(n)]
+
+
+def lhs_design(center: SimParams | None = None,
+               knobs: Sequence[str] | None = None,
+               n: int = 64, span: float = 1.25, seed: int = 0) -> Design:
+    """Latin-hypercube joint design: `n` stratified samples of all
+    `knobs` at once, jittered in a local multiplicative `span` band
+    around the center (robustness of the headline numbers to joint
+    calibration error, not a re-exploration of the search space)."""
+    import random
+    center = center_params(center)
+    knobs = tuple(knobs if knobs is not None else all_knobs())
+    space = [(k, *knob_bounds(center, k, span, local=True))
+             for k in knobs]
+    variants: list[SimParams] = [center]
+    assigns: list[dict[str, float]] = [{}]
+    for over in lhs_candidates(space, n, random.Random(seed)):
+        variants.append(dataclasses.replace(center, **over))
+        assigns.append(over)
+    return Design("lhs", center, knobs, tuple(variants), tuple(assigns))
+
+
+# -- execution ------------------------------------------------------------
+
+def have_jax() -> bool:
+    try:
+        import jax  # noqa: F401
+        return True
+    except ImportError:                    # pragma: no cover - env-dep
+        return False
+
+
+def jax_accelerator() -> bool:
+    """True when jax is importable and backed by a non-CPU device."""
+    if not have_jax():
+        return False
+    import jax
+    try:
+        return jax.default_backend() != "cpu"
+    except RuntimeError:                   # pragma: no cover - env-dep
+        return False
+
+
+def resolve_backend(backend: str, width: int) -> str:
+    """Resolve ``auto`` to a concrete engine by grid width and host.
+
+    The sensitivity subsystem is where the jax backend is *intended*
+    to take over: one compiled `lax.scan` over a `width = O * P` grid,
+    amortized across a design's chunks.  The measured CPU numbers in
+    docs/backends.md, however, show the interpreter-side numpy loop
+    still ahead at every width we sweep on CPU-only hosts (the scan's
+    per-step dispatch dominates), so ``auto`` only picks jax when the
+    width crosses `JAX_WIDTH_THRESHOLD` *and* jax reports an
+    accelerator device; everything else falls back to numpy.
+    """
+    if backend != "auto":
+        return backend
+    if width >= JAX_WIDTH_THRESHOLD and jax_accelerator():
+        return "jax"
+    return "numpy"
+
+
+def run_grid(traces: Mapping[str, KernelTrace],
+             params_list: Sequence[SimParams],
+             opts: Sequence[OptConfig] = (OptConfig.baseline(),
+                                          OptConfig.full()),
+             *, mc: MachineConfig = MachineConfig(),
+             backend: str = "auto", attribution: bool = True,
+             cache: SweepCache | None = None, use_cache: bool = True,
+             p_chunk: int | None = DEFAULT_P_CHUNK,
+             sim: BatchAraSimulator | None = None
+             ) -> dict[tuple[str, str, int], SimResult]:
+    """Evaluate `(trace x opt x params)` cells, batch-running only
+    cache misses; returns `{(trace_key, opt.label, param_index):
+    SimResult}`.
+
+    The wide-params analogue of `benchmarks.gridlib.Grid.cells`: cells
+    are keyed content-addressed on the params block (`sweep_cache
+    .cell_key` hashes the full `SimParams`).  With `attribution`,
+    results carry the stall decomposition plus the phase-split columns
+    (`SimResult.phases`), exactly as fig6's grid pass stores them.
+
+    Caching vs. backends: only numpy-computed cells are persisted (the
+    cache's bit-exactness contract — jax results are float64-allclose,
+    not bit-exact, and must never be served to scalar consumers), so
+    ``auto`` is resolved against each *miss* batch's width, not the
+    design's: a warm or mostly-warm re-run stays on cached numpy cells
+    and any small remainder runs (and persists) through numpy, while a
+    cold wide grid on an accelerator host goes through the compiled
+    jax scan — served to the caller but re-simulated on the next cold
+    run.
+    """
+    opts = list(opts)
+    params_list = list(params_list)
+    cache = cache if cache is not None else SweepCache()
+    simulator = sim if sim is not None else BatchAraSimulator(mc)
+
+    out: dict[tuple[str, str, int], SimResult] = {}
+    keys: dict[tuple[str, str, int], str] = {}
+    by_sig: dict[tuple[tuple[int, ...], tuple[int, ...]], list[str]] = {}
+    for tname, tr in traces.items():
+        fp = trace_fingerprint(tr)         # hash the stream once
+        missing: set[tuple[int, int]] = set()
+        for pi, p in enumerate(params_list):
+            for oi, opt in enumerate(opts):
+                ck = cell_key(tr, opt, p, mc, trace_fp=fp)
+                keys[(tname, opt.label, pi)] = ck
+                res = (cache.get_result(ck, tr.name,
+                                        attribution=attribution,
+                                        require_phases=attribution)
+                       if use_cache else None)
+                if res is None:
+                    missing.add((oi, pi))
+                else:
+                    out[(tname, opt.label, pi)] = res
+        if missing:
+            # Run the bounding (opts x params) product of the missing
+            # cells: designs re-run all-or-nothing in practice, so the
+            # product rarely exceeds the miss set.
+            sig = (tuple(sorted({oi for oi, _ in missing})),
+                   tuple(sorted({pi for _, pi in missing})))
+            by_sig.setdefault(sig, []).append(tname)
+
+    for (ois, pis), tnames in by_sig.items():
+        run_backend = resolve_backend(backend, len(ois) * len(pis))
+        persist = use_cache and run_backend == "numpy"
+        run_opts = [opts[oi] for oi in ois]
+        run_params = [params_list[pi] for pi in pis]
+        run_traces = [traces[t] for t in tnames]
+        stacked = stack_traces(run_traces)
+        batch = simulator.run(stacked, run_opts, run_params,
+                              backend=run_backend,
+                              attribution=attribution,
+                              p_chunk=p_chunk)
+        pg = (phase_decompose_grid(run_traces, batch, mc=mc,
+                                   params=run_params)
+              if attribution else None)
+        for bi, tname in enumerate(tnames):
+            for ci, oi in enumerate(ois):
+                for cj, pi in enumerate(pis):
+                    res = SimResult(
+                        kernel=traces[tname].name,
+                        cycles=float(batch.cycles[bi, ci, cj]),
+                        flops=int(batch.flops[bi]),
+                        bytes=int(batch.bytes[bi]), timings=[],
+                        busy_fpu=float(batch.busy_fpu[bi, ci, cj]),
+                        busy_bus=float(batch.busy_bus[bi, ci, cj]),
+                        ideal=(float(batch.ideal[bi, ci, cj])
+                               if batch.ideal is not None else 0.0),
+                        stalls=(batch.stalls[bi, ci, cj].copy()
+                                if batch.stalls is not None else None),
+                        phases=(pg.columns(bi, ci, cj)
+                                if pg is not None else None))
+                    out[(tname, opts[oi].label, pi)] = res
+                    if persist:
+                        cache.put_result(keys[(tname, opts[oi].label, pi)],
+                                         res)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepTensors:
+    """Dense `(B, O, P)` tensors assembled from `run_grid` cells."""
+    names: tuple[str, ...]                 # (B,) trace keys
+    opt_labels: tuple[str, ...]            # (O,)
+    cycles: np.ndarray                     # (B, O, P)
+    ideal: np.ndarray | None               # (B, O, P)
+    stalls: np.ndarray | None              # (B, O, P, 9)
+    ii_eff: np.ndarray | None              # (B, O, P) phase column
+
+
+def tensors_from_cells(cells: Mapping[tuple[str, str, int], SimResult],
+                       names: Sequence[str],
+                       opt_labels: Sequence[str],
+                       n_params: int) -> SweepTensors:
+    """Re-assemble `run_grid`'s per-cell dict into dense grid tensors
+    (mixing cache hits and freshly-computed cells is fine — both carry
+    the same numbers, bit-exact on the numpy backend)."""
+    names = tuple(names)
+    opt_labels = tuple(opt_labels)
+    B, O, P = len(names), len(opt_labels), n_params
+    cycles = np.zeros((B, O, P))
+    first = cells[(names[0], opt_labels[0], 0)]
+    attrib = first.stalls is not None
+    ideal = np.zeros((B, O, P)) if attrib else None
+    stalls = np.zeros((B, O, P, len(STALL_CATEGORIES))) if attrib else None
+    ii_eff = (np.zeros((B, O, P))
+              if attrib and first.phases is not None else None)
+    for bi, tname in enumerate(names):
+        for oi, ol in enumerate(opt_labels):
+            for pi in range(P):
+                res = cells[(tname, ol, pi)]
+                cycles[bi, oi, pi] = res.cycles
+                if attrib:
+                    ideal[bi, oi, pi] = res.ideal
+                    stalls[bi, oi, pi] = res.stalls
+                    if ii_eff is not None and res.phases is not None:
+                        ii_eff[bi, oi, pi] = res.phases["ii_eff"]
+    return SweepTensors(names, opt_labels, cycles, ideal, stalls, ii_eff)
+
+
+def sweep_design(traces: Mapping[str, KernelTrace], design: Design,
+                 opts: Sequence[OptConfig] = (OptConfig.baseline(),
+                                              OptConfig.full()),
+                 **kwargs) -> SweepTensors:
+    """`run_grid` a design and assemble the dense tensors."""
+    opts = list(opts)
+    cells = run_grid(traces, design.variants, opts, **kwargs)
+    return tensors_from_cells(cells, list(traces),
+                              [o.label for o in opts], design.width)
+
+
+# -- reductions -----------------------------------------------------------
+
+def _elasticity(vals: np.ndarray, cyc: np.ndarray,
+                center_v: float) -> float:
+    """d ln(output) / d ln(knob) over a 1-D traversal (endpoint secant).
+
+    Exactly 0.0 for a knob with zero influence (the endpoint outputs
+    are then bit-identical, so the numerator is exactly zero).  Knobs
+    whose traversal touches zero fall back to a relative secant
+    normalized by the center value (log-log is undefined there).
+    """
+    lo_i, hi_i = int(np.argmin(vals)), int(np.argmax(vals))
+    dc = cyc[hi_i] - cyc[lo_i]
+    if dc == 0.0 or vals[hi_i] == vals[lo_i]:
+        return 0.0
+    if vals[lo_i] > 0.0 and cyc[lo_i] > 0.0 and cyc[hi_i] > 0.0:
+        return float(np.log(cyc[hi_i] / cyc[lo_i])
+                     / np.log(vals[hi_i] / vals[lo_i]))
+    scale = center_v if center_v > 0.0 else vals[hi_i] - vals[lo_i]
+    mid = 0.5 * (cyc[hi_i] + cyc[lo_i])
+    return float((dc / mid) / ((vals[hi_i] - vals[lo_i]) / scale))
+
+
+def gap_closed(t: SweepTensors, base_col: int = 0,
+               full_col: int = -1, eps: float = 1e-9) -> np.ndarray:
+    """`(B, P)` fraction of baseline *stall* cycles the full
+    configuration removes, per params variant (the sensitivity analogue
+    of `analysis.attribution.gap_closed_by_path`, collapsed over
+    paths).  Needs attribution tensors."""
+    if t.ideal is None:
+        raise ValueError("gap_closed needs attribution tensors "
+                         "(sweep_design(..., attribution=True))")
+    stall_base = t.cycles[:, base_col, :] - t.ideal[:, base_col, :]
+    closed = t.cycles[:, base_col, :] - t.cycles[:, full_col, :]
+    return closed / np.maximum(stall_base, eps)
+
+
+def knob_rows(design: Design, t: SweepTensors, base_col: int = 0,
+              full_col: int = -1) -> list[dict]:
+    """Per-`(kernel, knob)` sensitivity rows for an OAT design.
+
+    Columns: knob metadata (critical path, center/lo/hi values), center
+    cycles and speedup, per-knob elasticities of baseline cycles,
+    full-opt cycles and speedup, tornado swings and per-kernel rank
+    (descending speedup swing, deterministic name tie-break so the
+    ordering is invariant under design/param reordering), gap-closed
+    ratio at the traversal endpoints, the steady-state `ii_eff` swing,
+    and the stall category the traversal moves most.
+    """
+    if design.kind != "oat":
+        raise ValueError(f"knob_rows needs an 'oat' design, got "
+                         f"{design.kind!r}")
+    rows: list[dict] = []
+    gc = gap_closed(t, base_col, full_col) if t.ideal is not None else None
+    for bi, kernel in enumerate(t.names):
+        cyc_b = t.cycles[bi, base_col]
+        cyc_f = t.cycles[bi, full_col]
+        speedup = cyc_b / np.maximum(cyc_f, 1e-9)
+        kernel_rows: list[dict] = []
+        for knob in design.knobs:
+            idx = [0] + design.indices_for(knob)   # center + traversal
+            vals = np.array([design.assignments[i].get(
+                knob, getattr(design.center, knob)) for i in idx])
+            center_v = float(getattr(design.center, knob))
+            lo_i, hi_i = idx[int(np.argmin(vals))], idx[int(np.argmax(vals))]
+            row = {
+                "kernel": kernel, "knob": knob,
+                "path": KNOB_PATHS.get(knob, "unknown"),
+                "center": center_v,
+                "lo": float(vals.min()), "hi": float(vals.max()),
+                "cycles_base": float(cyc_b[0]),
+                "speedup": float(speedup[0]),
+                "elast_base": _elasticity(vals, cyc_b[idx], center_v),
+                "elast_full": _elasticity(vals, cyc_f[idx], center_v),
+                "elast_speedup": _elasticity(vals, speedup[idx],
+                                             center_v),
+                "swing_base": float(cyc_b[idx].max() - cyc_b[idx].min()),
+                "swing_speedup": float(speedup[idx].max()
+                                       - speedup[idx].min()),
+            }
+            if gc is not None:
+                row["gap_closed_lo"] = float(gc[bi, lo_i])
+                row["gap_closed_hi"] = float(gc[bi, hi_i])
+            if t.ii_eff is not None:
+                ii = t.ii_eff[bi, base_col, idx]
+                row["dii_eff_base"] = float(ii.max() - ii.min())
+            if t.stalls is not None:
+                delta = (t.stalls[bi, base_col, hi_i]
+                         - t.stalls[bi, base_col, lo_i])
+                row["top_moved"] = ("none" if not np.abs(delta).any()
+                                    else STALL_CATEGORIES[
+                                        int(np.argmax(np.abs(delta)))])
+            kernel_rows.append(row)
+        # Tornado rank: 1 = largest speedup swing; ties break on the
+        # knob name so the ranking never depends on traversal order.
+        ranked = sorted(kernel_rows,
+                        key=lambda r: (-r["swing_speedup"], r["knob"]))
+        for rank, row in enumerate(ranked, 1):
+            row["tornado_rank"] = rank
+        rows.extend(kernel_rows)
+    return rows
+
+
+def pair_rows(design: Design, t: SweepTensors, base_col: int = 0,
+              full_col: int = -1) -> list[dict]:
+    """Per-`(kernel, variant)` surface rows for a pairwise design:
+    joint knob values, cycles, speedup, and the gap-closed ratio — a
+    `(points x points)` surface per kernel."""
+    if design.kind != "pair":
+        raise ValueError(f"pair_rows needs a 'pair' design, got "
+                         f"{design.kind!r}")
+    f1, f2 = design.knobs
+    gc = gap_closed(t, base_col, full_col) if t.ideal is not None else None
+    rows = []
+    for bi, kernel in enumerate(t.names):
+        for pi in range(1, design.width):       # skip the center point
+            a = design.assignments[pi]
+            row = {
+                "kernel": kernel, f1: a[f1], f2: a[f2],
+                "cycles_base": float(t.cycles[bi, base_col, pi]),
+                "cycles_full": float(t.cycles[bi, full_col, pi]),
+                "speedup": float(t.cycles[bi, base_col, pi]
+                                 / max(t.cycles[bi, full_col, pi], 1e-9)),
+            }
+            if gc is not None:
+                row["gap_closed"] = float(gc[bi, pi])
+            rows.append(row)
+    return rows
+
+
+def lhs_rows(design: Design, t: SweepTensors, base_col: int = 0,
+             full_col: int = -1) -> list[dict]:
+    """Per-kernel robustness bands over a Latin-hypercube design: how
+    far the speedup and gap-closed ratio move when *all* knobs jitter
+    jointly around the calibrated point."""
+    if design.kind != "lhs":
+        raise ValueError(f"lhs_rows needs an 'lhs' design, got "
+                         f"{design.kind!r}")
+    gc = gap_closed(t, base_col, full_col) if t.ideal is not None else None
+    rows = []
+    joint = slice(1, design.width)              # exclude the center
+    for bi, kernel in enumerate(t.names):
+        sp = (t.cycles[bi, base_col, joint]
+              / np.maximum(t.cycles[bi, full_col, joint], 1e-9))
+        sp_c = (t.cycles[bi, base_col, 0]
+                / max(t.cycles[bi, full_col, 0], 1e-9))
+        row = {"kernel": kernel, "n": design.width - 1,
+               "speedup_center": float(sp_c),
+               "speedup_min": float(sp.min()),
+               "speedup_mean": float(sp.mean()),
+               "speedup_max": float(sp.max())}
+        if gc is not None:
+            row["gap_closed_min"] = float(gc[bi, joint].min())
+            row["gap_closed_max"] = float(gc[bi, joint].max())
+        rows.append(row)
+    return rows
+
+
+def path_stall_delta(t: SweepTensors, pi_from: int, pi_to: int,
+                     opt_col: int = 0) -> dict[str, np.ndarray]:
+    """`(B,)` per-critical-path stall deltas between two variants —
+    used by the locality property test (a knob's traversal should move
+    its own critical path whenever it moves cycles at all)."""
+    if t.stalls is None:
+        raise ValueError("path_stall_delta needs attribution tensors")
+    delta = t.stalls[:, opt_col, pi_to] - t.stalls[:, opt_col, pi_from]
+    return {path: delta[:, list(idx)].sum(axis=-1)
+            for path, idx in PATH_INDICES.items()}
+
+
+__all__ = [
+    "KNOB_PATHS", "JAX_WIDTH_THRESHOLD", "DEFAULT_P_CHUNK", "Design",
+    "all_knobs", "knob_bounds", "center_params", "oat_design",
+    "pair_design", "lhs_design", "lhs_candidates", "resolve_backend",
+    "have_jax", "run_grid", "sweep_design", "SweepTensors",
+    "tensors_from_cells", "gap_closed", "knob_rows", "pair_rows",
+    "lhs_rows", "path_stall_delta",
+]

@@ -26,7 +26,7 @@ import hashlib
 import json
 import os
 import pathlib
-from typing import Iterable
+from typing import Iterable, Sequence
 
 import numpy as np
 
@@ -63,6 +63,22 @@ def trace_fingerprint(trace: KernelTrace) -> str:
             f"{ins.name}|{ins.kind.value}|{ins.vl}|{ins.sew}|{ins.dst}|"
             f"{','.join(ins.srcs)}|{ins.stride.value}|{ins.flops}|"
             f"{ins.stream}|{ins.first_strip}".encode())
+    return h.hexdigest()
+
+
+def params_fingerprint(params: Sequence[SimParams]) -> str:
+    """Content hash of a whole params block (an ordered sequence of
+    `SimParams` variants).
+
+    Cell keys already hash each cell's own params; this names the
+    *block* — sensitivity designs use it as their identity
+    (`repro.launch.sensitivity.Design.fingerprint`) so artifacts and
+    logs can say "this CSV came from exactly these variants" without
+    enumerating them."""
+    h = hashlib.sha256()
+    for p in params:
+        h.update(json.dumps(dataclasses.asdict(p),
+                            sort_keys=True).encode())
     return h.hexdigest()
 
 

@@ -14,7 +14,8 @@ import check_docs  # noqa: E402
 
 def test_required_docs_exist():
     for rel in ("README.md", "docs/architecture.md",
-                "docs/attribution.md", "docs/backends.md"):
+                "docs/attribution.md", "docs/backends.md",
+                "docs/sensitivity.md", "docs/figures.md"):
         assert (REPO / rel).is_file(), f"{rel} missing"
 
 
@@ -24,6 +25,31 @@ def test_intra_repo_links_resolve():
 
 def test_stall_vocabulary_in_sync():
     assert check_docs.check_stall_vocabulary() == []
+
+
+def test_simparams_knob_table_in_sync():
+    """docs/sensitivity.md's knob table must match
+    `dataclasses.fields(SimParams)` exactly — a renamed field fails."""
+    assert check_docs.check_simparams_table() == []
+
+
+def test_simparams_check_catches_renames(monkeypatch, tmp_path):
+    """The checker really is bidirectional: a doc row for a
+    nonexistent field and a missing row both surface as errors."""
+    doc = tmp_path / "docs" / "sensitivity.md"
+    doc.parent.mkdir()
+    real = (REPO / "docs" / "sensitivity.md").read_text()
+    doc.write_text(real.replace("`mem_latency`", "`mem_latencyy`", 1))
+    monkeypatch.setattr(check_docs, "REPO", tmp_path)
+    errors = check_docs.check_simparams_table()
+    assert any("mem_latencyy" in e for e in errors)          # unknown row
+    assert any("'mem_latency'" in e for e in errors)         # missing row
+
+
+def test_every_figure_script_documented():
+    """Every benchmarks/fig*.py needs a 'how to read it' doc under
+    docs/ (docs/figures.md or a more specific page)."""
+    assert check_docs.check_figure_docs() == []
 
 
 def test_roadmap_points_at_docs():

@@ -1,0 +1,303 @@
+"""Sensitivity-subsystem contracts (repro.launch.sensitivity).
+
+Load-bearing invariants:
+
+  * chunked P-axis execution is bit-exact vs. the unchunked numpy run
+    (chunks are independent grid columns);
+  * the jax backend agrees with numpy (float64 allclose) on wide
+    params axes, including through the chunk-padding path;
+  * a knob with zero influence reports an elasticity of exactly 0.0;
+  * tornado rankings are invariant under design/param reordering;
+  * fig7 cells round-trip through the content-addressed sweep cache;
+  * (property) perturbing one knob moves stall categories on its own
+    critical path — whenever a traversal moves measured cycles, the
+    knob's mapped path (or the ideal component) moves with it, and the
+    exact decomposition invariant survives every perturbation.
+"""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.batch_sim import BatchAraSimulator, stack_params
+from repro.core.isa import OptConfig
+from repro.core.simulator import SimParams
+from repro.core.stalls import check_invariant
+from repro.core.traces import axpy, gemm, scal, spmv, stack_traces
+from repro.launch import sensitivity as S
+from repro.launch.sweep_cache import SweepCache
+
+BASE, FULL = OptConfig.baseline(), OptConfig.full()
+
+
+def _traces():
+    return {"scal": scal(256), "axpy": axpy(256),
+            "gemm": gemm(16, 16, 16), "spmv": spmv(8)}
+
+
+def _stacked():
+    return stack_traces(list(_traces().values()))
+
+
+# -- stack_params / designs ----------------------------------------------
+
+def test_stack_params_columns():
+    plist = [SimParams(), SimParams(mem_latency=99.0, d_fwd=3.0)]
+    cols = stack_params(plist)
+    assert set(cols) == {f.name for f in dataclasses.fields(SimParams)}
+    assert list(cols["mem_latency"]) == [38.0, 99.0]
+    assert list(cols["d_fwd"]) == [2.0, 3.0]
+
+
+def test_knob_paths_cover_every_simparams_field():
+    assert set(S.KNOB_PATHS) == set(S.all_knobs())
+
+
+def test_oat_design_shape_and_center():
+    d = S.oat_design(SimParams(), knobs=("mem_latency", "d_fwd"),
+                     points=3)
+    assert d.width == 1 + 2 * 3
+    assert d.variants[0] == SimParams()
+    assert d.assignments[0] == {}
+    assert len(d.indices_for("mem_latency")) == 3
+    lo, hi = S.knob_bounds(SimParams(), "mem_latency")
+    vals = [d.assignments[i]["mem_latency"]
+            for i in d.indices_for("mem_latency")]
+    assert min(vals) == lo and max(vals) == hi
+
+
+def test_lhs_candidates_stratified_within_bounds():
+    space = [("a", 0.0, 10.0), ("b", 5.0, 6.0)]
+    cands = S.lhs_candidates(space, 8, random.Random(0))
+    assert len(cands) == 8
+    for name, lo, hi in space:
+        vals = sorted(c[name] for c in cands)
+        assert all(lo <= v <= hi for v in vals)
+        # one sample per stratum per dimension
+        strata = sorted(int(8 * (v - lo) / (hi - lo)) for v in vals)
+        assert strata == list(range(8))
+
+
+def test_lhs_design_jitters_locally():
+    center = SimParams()
+    d = S.lhs_design(center, n=6, span=1.25, seed=1)
+    assert d.width == 7
+    for over in d.assignments[1:]:
+        for name, v in over.items():
+            c = getattr(center, name)
+            if c > 0:
+                assert c / 1.25 - 1e-9 <= v <= c * 1.25 + 1e-9, name
+
+
+# -- execution parity ----------------------------------------------------
+
+def test_p_chunk_bitexact_vs_unchunked_numpy():
+    d = S.oat_design(SimParams(),
+                     knobs=("mem_latency", "issue_gap_base",
+                            "d_chain_base"), points=3)
+    st_ = _stacked()
+    sim = BatchAraSimulator()
+    full = sim.run(st_, [BASE, FULL], list(d.variants),
+                   attribution=True)
+    chunked = sim.run(st_, [BASE, FULL], list(d.variants),
+                      attribution=True, p_chunk=4)
+    for field in ("cycles", "busy_fpu", "busy_bus", "ideal", "stalls",
+                  "lane_first_out", "first_first_out", "finish_start"):
+        assert np.array_equal(getattr(full, field),
+                              getattr(chunked, field),
+                              equal_nan=True), field
+
+
+def test_p_chunk_validation():
+    with pytest.raises(ValueError, match="p_chunk"):
+        BatchAraSimulator().run(_stacked(), [BASE], [SimParams()],
+                                p_chunk=0)
+
+
+def test_jax_matches_numpy_on_wide_params_axis():
+    pytest.importorskip("jax")
+    d = S.oat_design(SimParams(), knobs=("mem_latency", "d_fwd"),
+                     points=4)                       # P = 9
+    st_ = _stacked()
+    sim = BatchAraSimulator()
+    ref = sim.run(st_, [BASE, FULL], list(d.variants),
+                  attribution=True)
+    # p_chunk=4 exercises the jax padding path (9 = 4 + 4 + pad(1->4)),
+    # with every chunk reusing one compiled shape.
+    got = sim.run(st_, [BASE, FULL], list(d.variants), backend="jax",
+                  attribution=True, p_chunk=4)
+    np.testing.assert_allclose(got.cycles, ref.cycles, rtol=1e-9)
+    np.testing.assert_allclose(got.ideal, ref.ideal, rtol=1e-9,
+                               atol=1e-6)
+    np.testing.assert_allclose(got.stalls, ref.stalls, rtol=1e-9,
+                               atol=1e-6)
+
+
+def test_resolve_backend():
+    assert S.resolve_backend("numpy", 10_000) == "numpy"
+    assert S.resolve_backend("jax", 1) == "jax"
+    narrow = S.resolve_backend("auto", 2)
+    assert narrow == "numpy"
+    wide = S.resolve_backend("auto", S.JAX_WIDTH_THRESHOLD)
+    # CPU-only hosts keep numpy regardless of width (docs/backends.md);
+    # accelerator hosts switch to jax.
+    assert wide == ("jax" if S.jax_accelerator() else "numpy")
+
+
+# -- reductions ----------------------------------------------------------
+
+def _sweep(design, traces=None, **kw):
+    traces = traces if traces is not None else _traces()
+    kw.setdefault("backend", "numpy")
+    kw.setdefault("use_cache", False)
+    return S.sweep_design(traces, design, **kw)
+
+
+def test_elasticity_of_zero_influence_knob_is_exactly_zero():
+    # No paper kernel in this set issues vfdiv, so div_factor cannot
+    # move any cell: the elasticity must be *exactly* 0.0, not small.
+    traces = {"scal": scal(256), "axpy": axpy(256)}
+    d = S.oat_design(SimParams(), knobs=("div_factor",), points=3)
+    rows = S.knob_rows(d, _sweep(d, traces))
+    assert rows
+    for r in rows:
+        assert r["elast_base"] == 0.0
+        assert r["elast_full"] == 0.0
+        assert r["elast_speedup"] == 0.0
+        assert r["swing_base"] == 0.0
+        assert r["top_moved"] == "none"
+
+
+def test_tornado_ordering_invariant_under_param_reordering():
+    knobs = ("mem_latency", "rw_turnaround_base", "d_chain_base",
+             "issue_gap_base")
+    d_fwdo = S.oat_design(SimParams(), knobs=knobs, points=2)
+    d_rev = S.oat_design(SimParams(), knobs=knobs[::-1], points=2)
+    rows_f = S.knob_rows(d_fwdo, _sweep(d_fwdo))
+    rows_r = S.knob_rows(d_rev, _sweep(d_rev))
+
+    def ranking(rows):
+        out = {}
+        for r in rows:
+            out.setdefault(r["kernel"], {})[r["tornado_rank"]] = r["knob"]
+        return {k: [v[i] for i in sorted(v)] for k, v in out.items()}
+
+    assert ranking(rows_f) == ranking(rows_r)
+
+
+def test_pair_rows_surface_shape():
+    d = S.pair_design(SimParams(), ("mem_latency", "issue_gap_base"),
+                      points=3)
+    rows = S.pair_rows(d, _sweep(d))
+    assert len(rows) == len(_traces()) * 9
+    assert {"kernel", "mem_latency", "issue_gap_base", "cycles_base",
+            "cycles_full", "speedup", "gap_closed"} <= set(rows[0])
+
+
+def test_lhs_rows_band_brackets_center():
+    d = S.lhs_design(SimParams(), n=6, span=1.05, seed=2)
+    rows = S.lhs_rows(d, _sweep(d))
+    for r in rows:
+        assert r["n"] == 6
+        # A +-5% joint jitter keeps the band around the center point.
+        assert r["speedup_min"] <= r["speedup_center"] * 1.10
+        assert r["speedup_max"] >= r["speedup_center"] * 0.90
+
+
+# -- cache round-trip ----------------------------------------------------
+
+def test_fig7_cell_cache_roundtrip(tmp_path):
+    cache = SweepCache(tmp_path)
+    traces = {"scal": scal(256), "gemm": gemm(16, 16, 16)}
+    d = S.oat_design(SimParams(), knobs=("mem_latency",), points=2)
+    cells = S.run_grid(traces, d.variants, [BASE, FULL], cache=cache,
+                       backend="numpy")
+    n_cells = len(traces) * 2 * d.width
+    assert len(cells) == n_cells
+    assert cache.misses == n_cells and cache.hits == 0
+
+    again = S.run_grid(traces, d.variants, [BASE, FULL], cache=cache,
+                       backend="numpy")
+    assert cache.hits == n_cells
+    for key, res in cells.items():
+        got = again[key]
+        assert got.cycles == res.cycles
+        assert got.ideal == res.ideal
+        np.testing.assert_array_equal(got.stalls, res.stalls)
+        assert got.phases == pytest.approx(res.phases)
+    t1 = S.tensors_from_cells(cells, list(traces), [BASE.label,
+                                                    FULL.label], d.width)
+    t2 = S.tensors_from_cells(again, list(traces), [BASE.label,
+                                                    FULL.label], d.width)
+    assert np.array_equal(t1.cycles, t2.cycles)
+    assert np.array_equal(t1.stalls, t2.stalls)
+
+
+# -- locality property ---------------------------------------------------
+
+#: Knobs whose perturbation the property test samples, with the
+#: critical path `KNOB_PATHS` maps them to.  Only baseline-side knobs:
+#: under the BASE config the `*_opt` values are structurally unused.
+_PROP_KNOBS = ("mem_latency", "tx_ovh_base", "rw_turnaround_base",
+               "store_commit_base", "issue_gap_base", "war_release_ovh",
+               "d_chain_base", "conflict_base", "queue_adv_base")
+
+
+@pytest.fixture(scope="module")
+def prop_traces():
+    return {"scal": scal(128), "axpy": axpy(128), "spmv": spmv(8)}
+
+
+@given(knob=st.sampled_from(_PROP_KNOBS),
+       scale=st.floats(min_value=1.05, max_value=1.6))
+@settings(max_examples=12, deadline=None)
+def test_perturbing_one_knob_moves_its_own_critical_path(
+        prop_traces, knob, scale):
+    """Perturbing one field only moves stall categories on its
+    critical path: whenever the traversal moves measured cycles at
+    all, the knob's mapped path (or the ideal component — forwarding
+    floors and latency floors are ideal time) moves with it.  The
+    binding-argument adoption can additionally shift *other* paths'
+    attribution (a cell flipping from lane-bound to memory-bound), so
+    the sound direction is cycles-change => own-path-change, plus the
+    exact decomposition invariant on every perturbed cell.
+    """
+    center = SimParams()
+    varied = dataclasses.replace(
+        center, **{knob: getattr(center, knob) * scale})
+    res = BatchAraSimulator().run(
+        stack_traces(list(prop_traces.values())), [BASE],
+        [center, varied], attribution=True)
+    t = S.SweepTensors(tuple(prop_traces), (BASE.label,), res.cycles,
+                       res.ideal, res.stalls, None)
+    deltas = S.path_stall_delta(t, 0, 1, opt_col=0)
+    own_path = S.KNOB_PATHS[knob]
+    for bi in range(res.cycles.shape[0]):
+        for pi in range(2):
+            assert check_invariant(res.ideal[bi, 0, pi],
+                                   res.stalls[bi, 0, pi],
+                                   res.cycles[bi, 0, pi])
+        dcyc = res.cycles[bi, 0, 1] - res.cycles[bi, 0, 0]
+        if abs(dcyc) > 1e-6:
+            dideal = res.ideal[bi, 0, 1] - res.ideal[bi, 0, 0]
+            assert (abs(deltas[own_path][bi]) > 1e-9
+                    or abs(dideal) > 1e-9), (knob, bi, dcyc)
+
+
+def test_opt_side_knobs_are_inert_under_baseline():
+    """The strict form of locality: under the BASE config, perturbing
+    any `*_opt` knob changes nothing at all — cycles and every stall
+    component stay bit-identical."""
+    center = SimParams()
+    variants = [center] + [
+        dataclasses.replace(center, **{k: getattr(center, k) * 1.5})
+        for k in ("tx_ovh_opt", "rw_turnaround_opt", "issue_gap_opt",
+                  "conflict_opt", "queue_adv_opt")]
+    res = BatchAraSimulator().run(_stacked(), [BASE], variants,
+                                  attribution=True)
+    for pi in range(1, len(variants)):
+        assert np.array_equal(res.cycles[:, :, pi], res.cycles[:, :, 0])
+        assert np.array_equal(res.stalls[:, :, pi], res.stalls[:, :, 0])
+        assert np.array_equal(res.ideal[:, :, pi], res.ideal[:, :, 0])

@@ -1,7 +1,7 @@
 """Docs consistency checker (CI `docs` job; also run by tier-1 via
 `tests/test_docs.py`).
 
-Two checks:
+Four checks:
 
 1. **Intra-repo links resolve.**  Every relative markdown link in
    `README.md` and `docs/**/*.md` must point at a file that exists in
@@ -12,6 +12,14 @@ Two checks:
    token (``mem_*``/``dep_*``/``opr_*``) in `docs/attribution.md` must
    name a real category or critical path in `repro.core.stalls`, and
    all nine categories plus all three paths must be documented.
+3. **The knob table stays in sync.**  The table between the
+   ``knob-table-start``/``knob-table-end`` markers in
+   `docs/sensitivity.md` must document exactly the fields of
+   `repro.core.simulator.SimParams` — a renamed/added/dropped field
+   fails the check in both directions.
+4. **Every figure script is documented.**  Each `benchmarks/fig*.py`
+   must be named by at least one doc under `docs/` that carries a
+   "how to read" section.
 """
 from __future__ import annotations
 
@@ -75,8 +83,54 @@ def check_stall_vocabulary() -> list[str]:
     return errors
 
 
+def check_simparams_table() -> list[str]:
+    """docs/sensitivity.md's knob table == dataclasses.fields(SimParams).
+
+    The table rows between the explicit markers are parsed for their
+    first backticked column; the resulting set must equal the SimParams
+    field set, so a renamed simulator knob fails CI until the doc row
+    is renamed with it (the same contract as the stall vocabulary)."""
+    import dataclasses
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.core.simulator import SimParams
+    doc = REPO / "docs" / "sensitivity.md"
+    if not doc.exists():
+        return ["docs/sensitivity.md is missing"]
+    text = doc.read_text()
+    m = re.search(r"<!-- knob-table-start -->(.*?)<!-- knob-table-end -->",
+                  text, re.S)
+    if m is None:
+        return ["docs/sensitivity.md lacks the knob-table-start/"
+                "knob-table-end markers"]
+    documented = set(re.findall(r"^\|\s*`([A-Za-z0-9_]+)`", m.group(1),
+                                re.M))
+    fields = {f.name for f in dataclasses.fields(SimParams)}
+    errors = [f"docs/sensitivity.md knob table names unknown SimParams "
+              f"field {name!r}" for name in sorted(documented - fields)]
+    errors += [f"docs/sensitivity.md knob table does not document "
+               f"SimParams field {name!r}"
+               for name in sorted(fields - documented)]
+    return errors
+
+
+def check_figure_docs() -> list[str]:
+    """Every benchmarks/fig*.py has a "how to read it" doc under docs/."""
+    docs = [(p, p.read_text()) for p in sorted((REPO / "docs")
+                                               .glob("**/*.md"))]
+    errors = []
+    for script in sorted((REPO / "benchmarks").glob("fig*.py")):
+        hits = [p for p, text in docs
+                if script.name in text and re.search(r"how to read",
+                                                     text, re.I)]
+        if not hits:
+            errors.append(f"no doc under docs/ with a 'how to read' "
+                          f"section mentions benchmarks/{script.name}")
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_stall_vocabulary()
+    errors = (check_links() + check_stall_vocabulary()
+              + check_simparams_table() + check_figure_docs())
     for e in errors:
         print(f"ERROR: {e}")
     if not errors:
