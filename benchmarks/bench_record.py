@@ -1,0 +1,181 @@
+"""Record/check the measured execution-strategy crossovers behind
+`repro.core.api.resolve_plan`.
+
+Benchmarks the three strategy axes of `api.simulate` on the smoke-sized
+Table I ablation grid (6 kernels x 8 opt corners):
+
+  * scalar loop vs one batched numpy call   (is batching worth it?)
+  * numpy scan vs compiled jax scan         (backend crossover)
+  * jax scan vs jax max-plus assoc engine   (method crossover)
+
+Results land in ``benchmarks/BENCH_simulate.json`` keyed by a machine
+fingerprint (arch + cpu count + jax device kind), so numbers measured on
+different hosts never compare against each other.  The recorded steady
+numbers are the evidence behind the ``auto`` policy constants
+(`api.JAX_WIDTH_CROSSOVER`, `api.ASSOC_INSTR_CROSSOVER`) and the tables
+in docs/backends.md.
+
+    python benchmarks/bench_record.py --check    # CI: drift gate
+    python benchmarks/bench_record.py --record   # refresh this machine
+
+``--check`` re-measures and fails (exit 1) only when this machine has a
+recorded entry and a steady timing regressed beyond ``--tol`` (default
+4x — wall-clock on shared CI runners is noisy; the gate catches
+order-of-magnitude regressions like an accidentally-disabled jit, not
+percent-level drift).  An unknown machine records a fresh entry and
+exits 0, so a new runner fleet never fails CI on its first run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import platform
+import sys
+import time
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_REPO), str(_REPO / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks import gridlib  # noqa: E402
+from benchmarks.common import timed  # noqa: E402
+from repro.core import api  # noqa: E402
+from repro.core.calibration import load as load_params  # noqa: E402
+from repro.core.isa import ABLATION_GRID, OptConfig  # noqa: E402
+from repro.core.simulator import AraSimulator  # noqa: E402
+from repro.core.traces import stack_traces  # noqa: E402
+
+BENCH_PATH = _REPO / "benchmarks" / "BENCH_simulate.json"
+
+#: Steady timings the drift gate compares (compile times are excluded:
+#: they move with jax versions and dominate nothing at steady state).
+GATED = ("scalar_loop_us", "numpy_scan_us", "jax_scan_us", "jax_assoc_us")
+
+
+def machine_key() -> str:
+    import jax
+    return (f"{platform.machine()}-{os.cpu_count()}cpu-"
+            f"{jax.default_backend()}")
+
+
+def _first_call_us(fn) -> float:
+    """Wall time of one cold call (captures trace+compile for jax fns)."""
+    import jax
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) * 1e6
+
+
+def measure() -> dict:
+    """Measure every strategy on the smoke Table I grid; returns the
+    entry dict stored under this machine's key."""
+    from benchmarks.table1_ablation import KERNELS
+    params = load_params()
+    traces = {k: tr for k, tr in
+              gridlib.paper_traces("smoke").items() if k in KERNELS}
+    opts = [OptConfig.baseline(), *ABLATION_GRID]
+    stacked = stack_traces(list(traces.values()))
+    n_instrs = int(stacked.kind.shape[1])
+
+    sim = AraSimulator(params=params, attribution=False)
+
+    def scalar_loop():
+        return [sim.run(tr, o).cycles
+                for tr in traces.values() for o in opts]
+
+    def run(backend, method):
+        return lambda: api.simulate(stacked, opts, params,
+                                    backend=backend, method=method)
+
+    timings = {
+        "scalar_loop_us": timed(scalar_loop),
+        "numpy_scan_us": timed(run("numpy", "scan")),
+        "jax_scan_compile_us": _first_call_us(run("jax", "scan")),
+        "jax_scan_us": timed(run("jax", "scan")),
+        "jax_assoc_compile_us": _first_call_us(run("jax", "assoc")),
+        "jax_assoc_us": timed(run("jax", "assoc")),
+    }
+    t = timings
+    return {
+        "recorded_at": time.strftime("%Y-%m-%d"),
+        "grid": {"profile": "smoke", "kernels": len(traces),
+                 "corners": len(opts), "n_instrs": n_instrs},
+        "timings": {k: round(v, 1) for k, v in t.items()},
+        "ratios": {
+            "batched_vs_scalar": round(
+                t["scalar_loop_us"] / t["numpy_scan_us"], 3),
+            "numpy_vs_jax_scan": round(
+                t["numpy_scan_us"] / t["jax_scan_us"], 3),
+            "scan_vs_assoc": round(
+                t["jax_scan_us"] / t["jax_assoc_us"], 3),
+        },
+    }
+
+
+def load_records() -> dict:
+    if BENCH_PATH.exists():
+        return json.loads(BENCH_PATH.read_text())
+    return {}
+
+
+def save_records(records: dict) -> None:
+    BENCH_PATH.write_text(json.dumps(records, indent=2, sort_keys=True)
+                          + "\n")
+
+
+def check(entry: dict, recorded: dict, tol: float) -> list[str]:
+    """Steady-timing regressions of `entry` vs `recorded` beyond `tol`x."""
+    problems = []
+    for name in GATED:
+        old = recorded.get("timings", {}).get(name)
+        new = entry["timings"][name]
+        if old and new > tol * old:
+            problems.append(f"{name}: {new:.0f}us vs recorded "
+                            f"{old:.0f}us (> {tol:g}x)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--record", action="store_true",
+                    help="measure and (over)write this machine's entry")
+    ap.add_argument("--check", action="store_true",
+                    help="measure and fail on drift vs this machine's "
+                         "recorded entry (records fresh if absent)")
+    ap.add_argument("--tol", type=float, default=4.0,
+                    help="allowed steady-timing slowdown factor")
+    args = ap.parse_args(argv)
+    if not (args.record or args.check):
+        ap.error("pass --record and/or --check")
+
+    key = machine_key()
+    records = load_records()
+    entry = measure()
+    print(f"# {key}: "
+          + ", ".join(f"{k}={v}" for k, v in entry["timings"].items()))
+    print(f"# ratios: {entry['ratios']}")
+
+    rc = 0
+    if args.check and key in records:
+        problems = check(entry, records[key], args.tol)
+        for p in problems:
+            print(f"[bench-drift] {p}", file=sys.stderr)
+        rc = 1 if problems else 0
+        if rc == 0:
+            print(f"# check ok vs {key} (tol {args.tol:g}x)")
+    elif args.check:
+        print(f"# no record for {key}: recording fresh entry")
+        args.record = True
+
+    if args.record and rc == 0:
+        records[key] = entry
+        save_records(records)
+        print(f"# recorded -> {BENCH_PATH.relative_to(_REPO)}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

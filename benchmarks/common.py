@@ -33,6 +33,27 @@ def _fmt(v) -> str:
     return str(v)
 
 
+def execution_args(ap) -> None:
+    """Attach the shared ``--backend``/``--method`` execution-strategy
+    flags (every fig script accepts them; see docs/figures.md)."""
+    ap.add_argument("--backend", choices=("numpy", "jax", "auto"),
+                    default=None,
+                    help="array engine for the batched grid passes "
+                         "(default: the shared grid's current setting)")
+    ap.add_argument("--method", choices=("scan", "assoc", "auto"),
+                    default=None,
+                    help="jax instruction-axis algorithm: sequential "
+                         "lax.scan or the log-depth max-plus assoc "
+                         "engine (default: the shared grid's setting)")
+
+
+def apply_execution_args(args) -> None:
+    """Route parsed ``--backend``/``--method`` into the shared grid."""
+    if args.backend is not None or args.method is not None:
+        from benchmarks import gridlib
+        gridlib.set_execution(backend=args.backend, method=args.method)
+
+
 def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall-time per call in microseconds (CPU-interpret numbers;
     structural, not TPU perf — see DESIGN.md §8)."""

@@ -10,7 +10,7 @@ for _p in (str(_REPO), str(_REPO / "src")):
         sys.path.insert(0, _p)
 
 from benchmarks import gridlib
-from benchmarks.common import emit
+from benchmarks.common import apply_execution_args, emit, execution_args
 from repro.core import paper
 from repro.core.isa import geomean
 from repro.core.roofline import gap_closed, normalized, p_ideal
@@ -51,9 +51,13 @@ def run() -> list[dict]:
     return rows
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    execution_args(ap)
+    apply_execution_args(ap.parse_args(argv or []))
     emit(run(), gridlib.table_name("fig4_roofline"))
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -10,7 +10,7 @@ for _p in (str(_REPO), str(_REPO / "src")):
         sys.path.insert(0, _p)
 
 from benchmarks import gridlib
-from benchmarks.common import emit
+from benchmarks.common import apply_execution_args, emit, execution_args
 from repro.core.traces import gemm, scal
 
 #: Sweep points per profile (smoke trims the gemm sizes for CI runners).
@@ -54,11 +54,15 @@ def check_paper_trends(rows: list[dict]) -> dict:
     }
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    execution_args(ap)
+    apply_execution_args(ap.parse_args(argv or []))
     rows = run()
     emit(rows, gridlib.table_name("fig5_sensitivity"))
     print("# trends:", check_paper_trends(rows))
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -67,11 +67,14 @@ def plot(rows: list[dict]) -> pathlib.Path:
 
 
 def main(argv: list[str] | None = None) -> None:
+    from benchmarks.common import apply_execution_args, execution_args
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--plot", action="store_true",
                     help="also render the stacked-bar PNG (needs "
                          "matplotlib, the [plot] extra)")
+    execution_args(ap)
     args = ap.parse_args(argv)
+    apply_execution_args(args)
     rows = run()
     emit(rows, gridlib.table_name("fig6_attribution"))
     base_rows = [r for r in rows if r["config"] == gridlib.BASE.label]

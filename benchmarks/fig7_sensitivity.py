@@ -49,13 +49,14 @@ DEFAULT_PAIR = ("mem_latency", "issue_gap_base")
 
 
 def run(points: int, pair: tuple[str, str], pair_points: int, lhs_n: int,
-        backend: str = "auto") -> dict[str, list[dict]]:
+        backend: str = "auto", method: str = "auto"
+        ) -> dict[str, list[dict]]:
     """Run the three designs and reduce to row lists (keys: ``knobs``,
     ``pair``, ``lhs``)."""
     g = gridlib.grid()
     traces = gridlib.paper_traces()
     center = g.params
-    kw = dict(mc=g.mc, backend=backend, cache=g.cache,
+    kw = dict(mc=g.mc, backend=backend, method=method, cache=g.cache,
               use_cache=g.use_cache, sim=g.sim)
 
     oat = S.oat_design(center, points=points)
@@ -90,6 +91,11 @@ def main(argv: list[str] | None = None) -> None:
                     default="auto",
                     help="auto picks jax past the measured width "
                          "crossover (docs/backends.md)")
+    ap.add_argument("--method", choices=("auto", "scan", "assoc"),
+                    default="auto",
+                    help="jax instruction-axis algorithm; auto picks the "
+                         "max-plus assoc engine only on accelerator "
+                         "hosts (docs/backends.md)")
     ap.add_argument("--points", type=int, default=None,
                     help="OAT traversal points per knob")
     ap.add_argument("--pair", default=",".join(DEFAULT_PAIR),
@@ -119,7 +125,8 @@ def main(argv: list[str] | None = None) -> None:
             ap.error(f"--pair needs exactly two knobs, got {args.pair!r}")
 
         t0 = time.perf_counter()
-        out = run(points, pair, pair_points, lhs_n, backend=args.backend)
+        out = run(points, pair, pair_points, lhs_n, backend=args.backend,
+                  method=args.method)
         dt = time.perf_counter() - t0
 
         emit(out["knobs"], gridlib.table_name("fig7_sensitivity"))

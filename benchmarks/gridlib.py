@@ -26,6 +26,7 @@ if str(REPO / "src") not in sys.path:
     sys.path.insert(0, str(REPO / "src"))
 
 from repro.analysis.attribution import phase_decompose_grid  # noqa: E402
+from repro.core import api  # noqa: E402
 from repro.core import traces as T  # noqa: E402
 from repro.core.batch_sim import BatchAraSimulator  # noqa: E402
 from repro.core.calibration import load as load_params  # noqa: E402
@@ -62,6 +63,8 @@ PROFILE_SIZES: dict[str, dict[str, tuple]] = {
 }
 
 _profile = "default"
+_backend = "numpy"
+_method = "scan"
 
 
 def set_profile(name: str) -> None:
@@ -74,6 +77,32 @@ def set_profile(name: str) -> None:
 
 def active_profile() -> str:
     return _profile
+
+
+def set_execution(backend: str | None = None,
+                  method: str | None = None) -> None:
+    """Select the execution strategy for the shared grid (`grid()`).
+
+    ``backend`` in ``numpy``/``jax``/``auto``; ``method`` in
+    ``scan``/``assoc``/``auto`` — the ``--backend``/``--method`` flags of
+    the fig scripts land here.  Choices are validated by
+    `repro.core.api.resolve_plan` at evaluation time (so ``auto`` can
+    resolve per miss-batch); an already-built shared grid is updated in
+    place, keeping its cache and compiled programs."""
+    global _backend, _method
+    if backend is not None:
+        _backend = backend
+    if method is not None:
+        _method = method
+    if _shared is not None:
+        if backend is not None:
+            _shared.backend = backend
+        if method is not None:
+            _shared.method = method
+
+
+def active_method() -> str:
+    return _method
 
 
 def table_name(base: str) -> str:
@@ -100,12 +129,13 @@ class Grid:
     def __init__(self, params: SimParams | None = None,
                  mc: MachineConfig = MachineConfig(),
                  cache: SweepCache | None = None, use_cache: bool = True,
-                 backend: str = "numpy"):
+                 backend: str = "numpy", method: str = "scan"):
         self.params = params if params is not None else load_params()
         self.mc = mc
         self.cache = cache if cache is not None else SweepCache()
         self.use_cache = use_cache
         self.backend = backend
+        self.method = method
         self.sim = BatchAraSimulator(mc)
 
     def cells(self, traces: Mapping[str, KernelTrace],
@@ -146,18 +176,24 @@ class Grid:
             if sig:
                 by_sig.setdefault(tuple(sig), []).append(tname)
 
-        # The cache stores only numpy-computed cells: cell keys don't
-        # encode the backend, and the cache's contract is scalar
-        # bit-exactness — jax results (float64 allclose, not bit-exact)
-        # are served to this call but never persisted.
-        persist = self.use_cache and self.backend == "numpy"
         for sig, tnames in by_sig.items():
             run_opts = [opts[oi] for oi in sig]
             run_traces = [traces[t] for t in tnames]
             stacked = stack_traces(run_traces)
-            batch = self.sim.run(stacked, run_opts, self.params,
-                                 backend=self.backend,
-                                 attribution=attribution)
+            plan = api.resolve_plan(backend=self.backend,
+                                    method=self.method,
+                                    width=len(run_opts),
+                                    n_instrs=int(stacked.kind.shape[1]))
+            # The cache stores only numpy/scan-computed cells: cell keys
+            # don't encode the execution plan, and the cache's contract
+            # is scalar bit-exactness — jax results (float64 allclose,
+            # not bit-exact) are served to this call but never persisted.
+            persist = (self.use_cache and plan.backend == "numpy"
+                       and plan.method == "scan")
+            batch = api.simulate(stacked, run_opts, self.params,
+                                 mc=self.mc, backend=plan.backend,
+                                 method=plan.method,
+                                 attribution=attribution, sim=self.sim)
             pg = (phase_decompose_grid(run_traces, batch, mc=self.mc,
                                        params=[self.params])
                   if attribution else None)
@@ -199,7 +235,8 @@ class Grid:
         """
         from repro.launch.sensitivity import DEFAULT_P_CHUNK, run_grid
         return run_grid(traces, params_list, opts, mc=self.mc,
-                        backend=self.backend, attribution=attribution,
+                        backend=self.backend, method=self.method,
+                        attribution=attribution,
                         cache=self.cache, use_cache=self.use_cache,
                         p_chunk=p_chunk if p_chunk is not None
                         else DEFAULT_P_CHUNK, sim=self.sim)
@@ -217,5 +254,5 @@ def grid() -> Grid:
     so fig3/fig4/table1/... cooperate through one cache/simulator)."""
     global _shared
     if _shared is None:
-        _shared = Grid()
+        _shared = Grid(backend=_backend, method=_method)
     return _shared

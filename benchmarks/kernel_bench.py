@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from benchmarks import gridlib
 from benchmarks.common import emit, timed
-from repro.core.batch_sim import BatchAraSimulator
+from repro.core import api
 from repro.core.calibration import load as load_params
 from repro.core.isa import ABLATION_GRID, OptConfig
 from repro.core.roofline import TPU_V5E
@@ -55,10 +55,10 @@ def batch_grid_rows() -> list[dict]:
                 for tr in traces.values() for o in opts]
 
     stacked = stack_traces(list(traces.values()))
-    bsim = BatchAraSimulator()
 
     def batched():
-        return bsim.run(stacked, opts, params)
+        return api.simulate(stacked, opts, params,
+                            backend="numpy", method="scan")
 
     scalar_us = timed(scalar_loop)
     batch_us = timed(batched)

@@ -11,7 +11,13 @@ fig7 sensitivity artifacts exist (`benchmarks/fig7_sensitivity.py`),
 also prints the top-3 most influential knobs per kernel.
 
     PYTHONPATH=src python examples/ara_paper_repro.py
+
+All simulation goes through the unified `repro.core.api.simulate`
+entrypoint (via `benchmarks.gridlib`); ``--backend``/``--method`` pick
+the execution strategy (e.g. ``--method assoc`` reproduces the paper
+through the log-depth max-plus engine instead of the sequential scan).
 """
+import argparse
 import csv
 import pathlib
 import sys
@@ -51,7 +57,18 @@ def print_sensitivity_top3() -> None:
         print(f"{kernel:<6} {knobs}")
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", choices=("numpy", "jax", "auto"),
+                    default="numpy",
+                    help="array engine for the batched grid passes")
+    ap.add_argument("--method", choices=("scan", "assoc", "auto"),
+                    default="scan",
+                    help="jax instruction-axis algorithm (assoc = the "
+                         "max-plus associative-scan engine)")
+    args = ap.parse_args(argv)
+    gridlib.set_execution(backend=args.backend, method=args.method)
+
     # Attribution cells first: they carry everything the plain readers
     # below need, so fig3/fig4/table1 then hit the cache instead of the
     # attribution pass re-simulating their plain cells.

@@ -1,0 +1,185 @@
+"""Unified simulation entrypoint: `simulate(traces, opts, params, ...)`.
+
+Before this module, execution strategy lived in kwargs scattered across
+five callers (`benchmarks.gridlib`, `launch.sensitivity`,
+`core.calibration`, the examples, ad-hoc scripts), each re-implementing
+backend resolution.  `simulate()` makes the strategy a declared
+capability:
+
+    from repro.core import api
+    res = api.simulate(traces, opts, params,
+                       backend="auto",      # "numpy" | "jax" | "auto"
+                       method="auto",       # "scan" | "assoc" | "auto"
+                       attribution=True)
+
+* ``backend`` picks the array engine (`numpy` mirrors the scalar
+  simulator bit-for-bit; `jax` compiles the grid into one program).
+* ``method`` picks the instruction-axis algorithm on the jax backend:
+  ``scan`` is the sequential `lax.scan` recurrence, ``assoc`` the
+  log-depth max-plus `associative_scan` engine (`repro.core.assoc_sim`).
+  numpy only supports ``scan``.
+* ``auto`` resolves both from the *measured* crossover points recorded in
+  docs/backends.md (`resolve_plan` below) instead of the former CPU-only
+  heuristic in `launch.sensitivity.resolve_backend`.
+
+`BatchAraSimulator.run` / `.sweep` survive as deprecation shims for one
+PR; the old-call → new-call mapping is documented in docs/architecture.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+from repro.core.batch_sim import BatchAraSimulator, BatchResult
+from repro.core.isa import KernelTrace, MachineConfig, OptConfig
+from repro.core.simulator import SimParams
+from repro.core.traces import StackedTraces, stack_traces
+
+__all__ = [
+    "ExecutionPlan", "simulate", "resolve_plan", "have_jax",
+    "jax_accelerator", "JAX_WIDTH_CROSSOVER", "ASSOC_INSTR_CROSSOVER",
+]
+
+#: Measured numpy-vs-jax crossover (grid width ``O * P``): the numbers in
+#: docs/backends.md show the numpy loop ahead of the compiled jax scan at
+#: every width we sweep on CPU-only hosts, so this threshold only gates
+#: when an accelerator device is present (where compiling the one-program
+#: scan is worthwhile once the grid is wide enough to amortize it).
+JAX_WIDTH_CROSSOVER = 512
+
+#: Measured scan-vs-assoc crossover (padded instruction count): the assoc
+#: engine does ~``D = 8 + 3R`` times the per-instruction work of the scan
+#: to buy log-depth over instructions, and the BENCH_simulate.json numbers
+#: (see docs/backends.md) show the sequential scan ahead on CPU at every
+#: profile we run — CPU throughput, not latency, is the binding
+#: constraint.  ``auto`` therefore only picks assoc on accelerator hosts,
+#: and only for traces long enough that scan depth dominates compile+run.
+ASSOC_INSTR_CROSSOVER = 4096
+
+
+def have_jax() -> bool:
+    try:
+        import jax  # noqa: F401
+        return True
+    except ImportError:                    # pragma: no cover - env-dep
+        return False
+
+
+def jax_accelerator() -> bool:
+    """True when jax is importable and backed by a non-CPU device."""
+    if not have_jax():
+        return False
+    import jax
+    try:
+        return jax.default_backend() != "cpu"
+    except RuntimeError:                   # pragma: no cover - env-dep
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """A fully-resolved execution strategy for one `simulate` call."""
+    backend: str                       # "numpy" | "jax"
+    method: str                        # "scan" | "assoc"
+    attribution: bool = False
+    p_chunk: int | None = None         # params-axis chunking
+    assoc_chunk: int | None = None     # assoc instruction-chunk length
+    use_pallas: bool = False           # fuse the assoc combine via Pallas
+
+    def __post_init__(self):
+        if self.backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.method not in ("scan", "assoc"):
+            raise ValueError(f"unknown method {self.method!r}")
+        if self.backend == "numpy" and self.method == "assoc":
+            raise ValueError("method='assoc' requires backend='jax' "
+                             "(the max-plus engine is jax-only)")
+
+
+def resolve_plan(*, backend: str = "auto", method: str = "auto",
+                 width: int = 1, n_instrs: int = 0,
+                 attribution: bool = False, p_chunk: int | None = None,
+                 assoc_chunk: int | None = None,
+                 use_pallas: bool = False) -> ExecutionPlan:
+    """Resolve ``auto`` strategy choices against the measured crossovers.
+
+    ``width`` is the grid width ``len(opts) * len(params)``; ``n_instrs``
+    the (longest) trace length.  The decision table (measured numbers in
+    docs/backends.md):
+
+    * backend ``auto`` → ``jax`` only on accelerator hosts with
+      ``width >= JAX_WIDTH_CROSSOVER``; otherwise ``numpy`` (on CPU the
+      numpy loop wins at every measured width).
+    * method ``auto`` → ``assoc`` only on an accelerator backend with
+      ``n_instrs >= ASSOC_INSTR_CROSSOVER``; otherwise ``scan`` (on CPU
+      the sequential scan wins at every measured trace length — the
+      assoc engine trades ~``D``x work for log depth, which only pays
+      when depth, not throughput, is the bottleneck).
+    """
+    if backend == "auto":
+        backend = ("jax" if width >= JAX_WIDTH_CROSSOVER
+                   and jax_accelerator() else "numpy")
+    if method == "auto":
+        method = ("assoc" if backend == "jax" and jax_accelerator()
+                  and n_instrs >= ASSOC_INSTR_CROSSOVER else "scan")
+    return ExecutionPlan(backend=backend, method=method,
+                         attribution=attribution, p_chunk=p_chunk,
+                         assoc_chunk=assoc_chunk, use_pallas=use_pallas)
+
+
+_SIMS: dict[tuple, BatchAraSimulator] = {}
+
+
+def _shared_sim(mc: MachineConfig) -> BatchAraSimulator:
+    """Process-wide simulator per machine config, so every `simulate`
+    caller shares one compiled-program cache."""
+    key = dataclasses.astuple(mc)
+    sim = _SIMS.get(key)
+    if sim is None:
+        sim = BatchAraSimulator(mc)
+        _SIMS[key] = sim
+    return sim
+
+
+def _as_stacked(traces) -> StackedTraces:
+    if isinstance(traces, StackedTraces):
+        return traces
+    if isinstance(traces, KernelTrace):
+        return stack_traces([traces])
+    if isinstance(traces, Mapping):
+        return stack_traces(list(traces.values()))
+    return stack_traces(list(traces))
+
+
+def simulate(traces, opts: Sequence[OptConfig],
+             params: SimParams | Sequence[SimParams] = SimParams(),
+             *, mc: MachineConfig = MachineConfig(),
+             backend: str = "auto", method: str = "auto",
+             attribution: bool = False, p_chunk: int | None = None,
+             assoc_chunk: int | None = None, use_pallas: bool = False,
+             sim: BatchAraSimulator | None = None) -> BatchResult:
+    """Evaluate the `(traces x opts x params)` grid under one resolved
+    execution plan.
+
+    `traces` may be a single `KernelTrace`, a sequence or mapping of
+    them, or an already-stacked `StackedTraces`.  Strategy kwargs are
+    resolved by `resolve_plan` (pass concrete values to pin them); `sim`
+    optionally reuses a caller-owned `BatchAraSimulator` (its compiled
+    jax programs) instead of the shared per-`mc` instance.
+    """
+    stacked = _as_stacked(traces)
+    opts = list(opts)
+    if isinstance(params, SimParams):
+        params = [params]
+    params = list(params)
+    plan = resolve_plan(backend=backend, method=method,
+                        width=len(opts) * len(params),
+                        n_instrs=int(stacked.kind.shape[1]),
+                        attribution=attribution, p_chunk=p_chunk,
+                        assoc_chunk=assoc_chunk, use_pallas=use_pallas)
+    simulator = sim if sim is not None else _shared_sim(mc)
+    return simulator._run(stacked, opts, params, backend=plan.backend,
+                          attribution=plan.attribution,
+                          p_chunk=plan.p_chunk, method=plan.method,
+                          assoc_chunk=plan.assoc_chunk,
+                          use_pallas=plan.use_pallas)

@@ -1,0 +1,673 @@
+"""Log-depth (max, +) associative-scan execution of the batched timing model.
+
+`repro.core.batch_sim` evaluates the per-instruction timing recurrence with
+`lax.scan`: wall-clock depth grows linearly with trace length even though
+every `(trace, opt, params)` cell is independent.  The recurrence, however,
+is *tropically linear*: every state update is a `max` of `state + constant`
+terms, i.e. an affine map in the (max, +) semiring.  Affine tropical maps
+compose associatively, so a trace of `I` instructions can be evaluated in
+`O(log I)` composition depth via `jax.lax.associative_scan` — this module
+implements that ``method="assoc"`` engine.
+
+Formulation
+-----------
+The hazard state is embedded in a basis of ``D = 8 + 3R`` components::
+
+    [const, issue_t, bus_free, wbus_free, addr_free, fpu_free, sldu_free,
+     total,  w_first[0..R), w_compl[0..R), r_rel[0..R)]
+
+Every tracked quantity is a *row* ``v`` of length ``D`` meaning
+``value = max_j ( v[j] + state[j] )`` over the state at some reference
+point; the ``const`` component is pinned to 0 so constants live in the
+``const`` column and absent transitions are ``-inf``.  One instruction's
+update is then a ``D x D`` transfer matrix, and a *chunk* of ``L``
+instructions composes into one matrix by running the per-instruction row
+step under a short `lax.scan` (pass 1).  Chunk matrices compose under
+`associative_scan` with the tropical matmul of `repro.core.pallas_step`
+(optionally Pallas-fused), giving the end-to-end matrix *and* every
+chunk-entry state in log depth.  A second, embarrassingly-parallel pass
+re-runs the same row step in *value mode* (``D = 1``, absolute times seeded
+from the chunk-entry states) to recover the per-instruction observables
+(`first_out` / `complete` / `busy_start`) that the phase decomposition
+needs.
+
+Attribution provenance
+----------------------
+With ``attribution=True`` every finite matrix entry ``V[i, j]`` carries a
+payload ``P[i, j] in R^NCOMP`` (ideal + 9 stall categories, see
+`repro.core.stalls`) with the invariant ``sum(P[i, j]) == V[i, j]`` (up to
+float64 re-association).  Composition routes payloads through the argmax
+binding index ``K`` of the tropical matmul::
+
+    P_C[i, j] = P_B[i, K[i, j]] + P_A[K[i, j], j]
+
+so the invariant is preserved exactly, and the final decomposition
+satisfies ``ideal + sum(stalls) == cycles`` to float64 resolution.  The
+per-category split matches the `lax.scan` engine's accounting on the
+common dataflow; where the scan engine flattens a state-dependent max
+(store/compute `read_done`, unit occupancy) into a relu charge, the row
+step applies the same relu *per matrix entry* (`_rmax_shift` below), which
+can route a tie differently than the sequential engine — the parity
+contract only guarantees allclose cycles and the exact sum invariant, not
+bit-equal category splits.
+
+Cost model
+----------
+Transfer matrices are ``(nC, B, W, D, D)`` (+ payload ``x NCOMP``), so
+memory grows with ``R^2``; `assoc_bytes` estimates the footprint and
+`run_assoc` refuses grids beyond ``REPRO_ASSOC_MEM_LIMIT`` (default 4 GiB)
+with a pointer at ``method="scan"`` or a larger ``chunk``.  See
+docs/backends.md for measured scan-vs-assoc crossovers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from repro.core.isa import MachineConfig
+from repro.core.stalls import (DEP_ISSUE_GAP, DEP_WAR_RELEASE, IDEAL,
+                               MEM_DEMAND_LATENCY, MEM_RW_TURNAROUND,
+                               MEM_STORE_COMMIT, MEM_TX_OVERHEAD, NCOMP,
+                               OPR_BANK_CONFLICT, OPR_CHAIN_DELAY,
+                               OPR_QUEUE_LIMIT)
+from repro.core.traces import PAD, StackedTraces
+
+_LOAD, _STORE, _COMPUTE, _REDUCE, _SLIDE = 0, 1, 2, 3, 4
+_UNIT, _STRIDED, _INDEXED = 0, 1, 2
+
+#: default instructions per chunk (pass-1 scan length); the matrix count is
+#: ``ceil(I / chunk)`` so larger chunks trade scan depth for fewer/cheaper
+#: compositions.
+DEFAULT_CHUNK = 64
+MEM_LIMIT_ENV = "REPRO_ASSOC_MEM_LIMIT"
+DEFAULT_MEM_LIMIT = 4 * 2 ** 30
+
+# State-basis component indices (the fixed scalar components; register
+# tables follow at _NFIX + {0, R, 2R}).
+_CONST, _ISSUE, _BUS, _WBUS, _ADDR, _FPU, _SLDU, _TOTAL = range(8)
+_NFIX = 8
+
+
+def basis_dim(n_regs: int) -> int:
+    """Tropical state-basis size for `n_regs` architectural registers."""
+    return _NFIX + 3 * max(n_regs, 1)
+
+
+def assoc_bytes(n_instrs: int, batch: int, width: int, n_regs: int,
+                attribution: bool = False,
+                chunk: int = DEFAULT_CHUNK) -> int:
+    """Rough peak-memory estimate (bytes) for an assoc run.
+
+    Dominated by the chunk transfer matrices ``(nC, B, W, D, D)`` plus
+    payloads; the factor 3 covers the `associative_scan` working set and
+    the pass-1 carry."""
+    D = basis_dim(n_regs)
+    n_chunks = max(1, -(-n_instrs // chunk))
+    per = n_chunks * batch * width * D * D * 8
+    if attribution:
+        per *= 1 + NCOMP
+    return 3 * per
+
+
+def _prep(st: StackedTraces, chunk: int):
+    """Host-side precompute: padded instruction-major fields plus the
+    trace-deterministic hazard metadata that frees the row step from
+    non-(max,+) state.
+
+    Returns ``(fields, n_chunks, padded_len)`` where every field is
+    ``(L, nC*B, ...)`` — chunk-major so chunk ``c`` of trace ``b`` lands at
+    merged index ``c*B + b``.  The metadata (all exact, data-independent):
+
+      * ``blast``  — kind of the last *memory* instruction strictly before
+        this one (-1 if none): replaces the scan's ``bus_last`` state.
+      * ``sok``    — per source slot: the register was written earlier
+        (replaces ``has_w`` gathers).
+      * ``dhw``    — the destination register was written earlier (WAW).
+    """
+    B, I = st.kind.shape
+    S = st.srcs.shape[2]
+    n_chunks = max(1, -(-I // chunk))
+    I2 = n_chunks * chunk
+    R = max(int(st.max_regs), 1)
+
+    def pad_im(a, dtype, fill=0):
+        out = np.full((I2, B) + a.shape[2:], fill, dtype)
+        out[:I] = np.swapaxes(np.asarray(a), 0, 1).astype(dtype)
+        return out
+
+    kind = pad_im(st.kind, np.int32, PAD)
+    vl = pad_im(st.vl, np.float64)
+    sew = pad_im(st.sew, np.float64)
+    nb = pad_im(st.nbytes, np.float64)
+    stride = pad_im(st.stride, np.int32)
+    first = pad_im(st.first_strip, bool)
+    isdiv = pad_im(st.is_div, bool)
+    redlv = pad_im(st.red_levels, np.float64)
+    dst = pad_im(st.dst, np.int32, -1)
+    srcs = pad_im(st.srcs, np.int32, PAD if PAD < 0 else -1)
+
+    valid = kind != PAD                                     # (I2, B)
+    mem = valid & ((kind == _LOAD) | (kind == _STORE))
+    # bus_last: index of the previous memory instruction, forward-filled.
+    idx = np.arange(I2)[:, None]
+    last_mem = np.maximum.accumulate(np.where(mem, idx, -1), axis=0)
+    prev_mem = np.vstack([np.full((1, B), -1), last_mem[:-1]])
+    cols = np.broadcast_to(np.arange(B), (I2, B))
+    blast = np.where(prev_mem >= 0,
+                     kind[np.clip(prev_mem, 0, None), cols],
+                     -1).astype(np.int32)
+    # has_w prefix: register r written by some earlier valid instruction.
+    writes = ((dst[:, :, None] == np.arange(R)[None, None, :])
+              & (valid & (dst >= 0))[:, :, None])           # (I2, B, R)
+    seen = np.cumsum(writes, axis=0, dtype=np.int32) - writes
+    hw_before = seen > 0
+    dhw = np.take_along_axis(
+        hw_before, np.clip(dst, 0, R - 1)[:, :, None], axis=2)[:, :, 0]
+    sok = (srcs >= 0) & np.take_along_axis(
+        hw_before, np.clip(srcs, 0, R - 1), axis=2)
+
+    def cm(a):            # (I2, B, ...) -> (L, nC*B, ...)
+        a = a.reshape(n_chunks, chunk, B, *a.shape[2:])
+        a = np.swapaxes(a, 0, 1)
+        return np.ascontiguousarray(
+            a.reshape(chunk, n_chunks * B, *a.shape[3:]))
+
+    fields = tuple(cm(x) for x in (kind, vl, sew, nb, stride, first,
+                                   isdiv, redlv, dst, srcs, blast, sok,
+                                   dhw))
+    return fields, n_chunks, I2
+
+
+def _build_assoc(mc: MachineConfig, attribution: bool, use_pallas: bool):
+    """Compile the two-pass assoc engine for one machine config.
+
+    Returns ``fn(fields, views, R, B) -> (cycles, comp, fo, cp, bs)`` with
+    ``R``/``B`` static (they fix the basis size and the chunk/batch
+    factorisation of the merged axis)."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.core.pallas_step import tropical_compose
+
+    epc = float(mc.elems_per_cycle)
+    bpc = float(mc.axi_bytes_per_cycle)
+    burst = float(mc.burst_bytes)
+    ful = float(mc.fu_latency)
+    att = attribution
+
+    def run(fields, views, R, B):
+        (kind, vl, sew, nb, stride, first, isdiv, redlv, dst, srcs,
+         blast, sok, dhw) = fields
+        (mem_lat, pf_hit, div_f, war_ovh, tx_ovh, idx_ovh, rw_turn,
+         store_commit, issue_gap, d_chain, conflict, queue_adv,
+         opt_m, opt_c, d_fwd) = (jnp.asarray(x) for x in views)
+        L, M = kind.shape
+        S = srcs.shape[2]
+        W = mem_lat.shape[0]
+        D = _NFIX + 3 * R
+        n_chunks = M // B
+        opt_mb = opt_m[None, :, None]
+        opt_cb = opt_c[None, :, None]
+        dci = jnp.minimum(d_chain, d_fwd)
+        dcs = d_chain - dci
+
+        # ---- row algebra -------------------------------------------------
+        # A "row" is a pair (v, p): v[..., Db] values over the basis (or a
+        # single absolute value in pass-2 value mode, Db == 1), p the
+        # optional (..., Db, NCOMP) payload with sum(p) == v on finite
+        # entries.  All primitives keep that invariant.
+        def _exp(x):
+            x = jnp.asarray(x, jnp.float64)
+            return x[..., None] if x.ndim else x
+
+        def rmax(a, b):
+            """max(a, b); strict winners adopt b's payload (ties keep the
+            incumbent a, matching the scan engine's `selc`)."""
+            va, pa = a
+            vb, pb = b
+            take = vb > va
+            v = jnp.where(take, vb, va)
+            p = None if pa is None else jnp.where(take[..., None], pb, pa)
+            return (v, p)
+
+        def selr(mask, a, b):
+            v = jnp.where(mask, a[0], b[0])
+            p = (None if a[1] is None
+                 else jnp.where(mask[..., None], a[1], b[1]))
+            return (v, p)
+
+        def sel_rmax(mask, a, b):
+            """rmax(a, b) where `mask`, else a."""
+            return selr(mask, rmax(a, b), a)
+
+        def radd(a, amount, *bumps):
+            """Shift a row by `amount`, charging the bump categories.
+            The bump amounts must sum to `amount` (invariant)."""
+            v, p = a
+            v = v + _exp(amount)
+            if p is not None:
+                for ci, amt in bumps:
+                    p = p.at[..., ci].add(_exp(amt))
+            return (v, p)
+
+        def rmax_shift(a, b, shift, cat):
+            """``max(a, b + shift)`` for the scan engine's flattened
+            state-dependent maxima (read_done / occupancy): where the
+            shifted b wins over a *finite* a-entry, the excess is charged
+            to `cat` on top of a's payload (the per-entry analogue of the
+            scan's relu charge); where a's entry is -inf, b's payload is
+            adopted with `shift` itself charged to `cat`.  Either way
+            sum(p) == v stays exact."""
+            va, pa = a
+            vb = b[0] + _exp(shift)
+            take = vb > va
+            v = jnp.where(take, vb, va)
+            if pa is None:
+                return (v, None)
+            fin = va > -jnp.inf
+            extra = jnp.where(take & fin, vb - va, 0.0)
+            p_flat = pa.at[..., cat].add(extra)
+            p_adopt = b[1].at[..., cat].add(_exp(shift))
+            p = jnp.where((take & ~fin)[..., None], p_adopt, p_flat)
+            return (v, p)
+
+        # Register-table rows: (M, R, W, Db) (+ payload).
+        def gather_r(tab, idx):
+            tv, tp = tab
+            v = jnp.take_along_axis(
+                tv, idx[:, None, None, None], axis=1)[:, 0]
+            p = None if tp is None else jnp.take_along_axis(
+                tp, idx[:, None, None, None, None], axis=1)[:, 0]
+            return (v, p)
+
+        def set_r(tab, oh, row):
+            tv, tp = tab
+            m = oh[:, :, None, None]
+            v = jnp.where(m, row[0][:, None], tv)
+            p = None if tp is None else jnp.where(m[..., None],
+                                                  row[1][:, None], tp)
+            return (v, p)
+
+        def rmax_r(tab, oh, row):
+            tv, tp = tab
+            cand = row[0][:, None]
+            take = oh[:, :, None, None] & (cand > tv)
+            v = jnp.where(take, cand, tv)
+            p = None if tp is None else jnp.where(take[..., None],
+                                                  row[1][:, None], tp)
+            return (v, p)
+
+        # ---- the per-instruction row step --------------------------------
+        # One body serves both passes: pass 1 runs it on basis rows
+        # (Db == D, payloads when attributing) to build transfer matrices;
+        # pass 2 on absolute values (Db == 1, no payload) to collect the
+        # per-instruction observables.  It mirrors the `lax.scan` step of
+        # `batch_sim._build_jax_sweep` branch for branch.
+        def make_step(zero, collect):
+            def step(s, x):
+                (k, vl_i, sew_i, nb_i, str_i, fs_i, dv_i, rl_i, d_i,
+                 sr_i, bl_i, sok_i, dhw_i) = x
+                valid = (k != PAD)[:, None, None]
+                is_load = (k == _LOAD)[:, None, None]
+                is_store = (k == _STORE)[:, None, None]
+                is_red = (k == _REDUCE)[:, None, None]
+                is_slide = (k == _SLIDE)[:, None, None]
+                vl2 = vl_i[:, None]
+
+                # ---- dependence constraints (RAW / WAR / WAW) ----------
+                raws = s["issue"]
+                rc = zero
+                for j in range(S):
+                    srcc = jnp.clip(sr_i[:, j], 0, R - 1)
+                    ok = sok_i[:, j][:, None, None]
+                    wf = gather_r(s["w_first"], srcc)
+                    wc = gather_r(s["w_compl"], srcc)
+                    raws = sel_rmax(ok, raws,
+                                    radd(wf, d_chain, (IDEAL, dci),
+                                         (OPR_CHAIN_DELAY, dcs)))
+                    rc = sel_rmax(ok, rc,
+                                  radd(wc, d_chain, (IDEAL, dci),
+                                       (OPR_CHAIN_DELAY, dcs)))
+                dstc = jnp.clip(d_i, 0, R - 1)
+                has_dst = (d_i >= 0)[:, None, None]
+                wg = selr(has_dst,
+                          rmax(zero, gather_r(s["r_rel"], dstc)), zero)
+                waw = has_dst & dhw_i[:, None, None]
+                wg = sel_rmax(waw, wg, gather_r(s["w_first"], dstc))
+
+                # ---- memory-op shared constants ------------------------
+                nburst = jnp.maximum(1.0, jnp.ceil(nb_i / burst))[:, None]
+                indexed = (str_i == _INDEXED)[:, None]
+                dur_bus = jnp.where(
+                    indexed, vl2 * (sew_i[:, None] / bpc) + vl2 * idx_ovh,
+                    nb_i[:, None] / bpc + nburst * tx_ovh)
+                dur_ideal_m = jnp.where(indexed,
+                                        vl2 * (sew_i[:, None] / bpc),
+                                        nb_i[:, None] / bpc)
+                dur_stall_m = dur_bus - dur_ideal_m
+
+                # ---- LOAD path -----------------------------------------
+                turn_l = jnp.where((bl_i == _STORE)[:, None], rw_turn, 0.0)
+                req = rmax(rmax(rmax(s["issue"], raws), s["addr"]),
+                           radd(s["bus"], turn_l,
+                                (MEM_RW_TURNAROUND, turn_l)))
+                req = rmax(req, wg)
+                lat_unit = jnp.where(fs_i[:, None], mem_lat, pf_hit)
+                lat_str = jnp.where(fs_i[:, None], mem_lat,
+                                    0.5 * (mem_lat + pf_hit))
+                lat_m = jnp.where((str_i == _UNIT)[:, None], lat_unit,
+                                  jnp.where((str_i == _STRIDED)[:, None],
+                                            lat_str, mem_lat))
+                lat = jnp.where(opt_m[None, :], lat_m, mem_lat)
+                lat_ideal = jnp.minimum(lat, pf_hit)
+                lat_stall = lat - lat_ideal
+                data_done = radd(req, lat + dur_bus,
+                                 (IDEAL, lat_ideal + dur_ideal_m),
+                                 (MEM_DEMAND_LATENCY, lat_stall),
+                                 (MEM_TX_OVERHEAD, dur_stall_m))
+                fo_l = rmax(radd(req, lat + burst / bpc,
+                                 (IDEAL, lat_ideal + burst / bpc),
+                                 (MEM_DEMAND_LATENCY, lat_stall)), wg)
+                cp_l = rmax(data_done,
+                            radd(wg, vl2 / epc, (IDEAL, vl2 / epc)))
+                rd_l = req
+                busf_l = radd(req, dur_bus, (IDEAL, dur_ideal_m),
+                              (MEM_TX_OVERHEAD, dur_stall_m))
+                addr_l = selr(opt_mb, req, busf_l)
+
+                # ---- STORE path ----------------------------------------
+                bs1 = rmax(rmax(raws, wg), s["addr"])
+                bss = rmax(bs1, s["wbus"])
+                turn_s = jnp.where((bl_i == _LOAD)[:, None], rw_turn, 0.0)
+                bsu = rmax(bs1, radd(s["bus"], turn_s,
+                                     (MEM_RW_TURNAROUND, turn_s)))
+                bs_s = selr(opt_mb, bss, bsu)
+                wbus_s = selr(opt_mb,
+                              radd(bss, dur_bus, (IDEAL, dur_ideal_m),
+                                   (MEM_TX_OVERHEAD, dur_stall_m)),
+                              s["wbus"])
+                busf_s = selr(
+                    opt_mb,
+                    radd(rmax(s["bus"], bss), dur_bus,
+                         (IDEAL, dur_ideal_m),
+                         (MEM_TX_OVERHEAD, dur_stall_m)),
+                    radd(bsu, dur_bus + store_commit,
+                         (IDEAL, dur_ideal_m),
+                         (MEM_TX_OVERHEAD, dur_stall_m),
+                         (MEM_STORE_COMMIT, store_commit)))
+                cp_s = rmax(radd(bs_s, dur_bus + mem_lat,
+                                 (IDEAL, dur_ideal_m),
+                                 (MEM_TX_OVERHEAD, dur_stall_m),
+                                 (MEM_STORE_COMMIT, mem_lat)), rc)
+                # read_done: max(t1, t2) with a state-independent gap, so
+                # the scan's relu charge is a plain shift here.
+                q_s = jnp.maximum(dur_bus - queue_adv - vl2 / epc, 0.0)
+                rd_s = radd(bs_s, vl2 / epc + q_s, (IDEAL, vl2 / epc),
+                            (OPR_QUEUE_LIMIT, q_s))
+                addr_s = selr(opt_mb, bs_s,
+                              radd(bs_s, dur_bus, (IDEAL, dur_ideal_m),
+                                   (MEM_TX_OVERHEAD, dur_stall_m)))
+
+                # ---- COMPUTE / REDUCE / SLIDE path ---------------------
+                dur_c = jnp.where(dv_i[:, None], (vl2 / epc) * div_f,
+                                  (vl2 / epc) * conflict) \
+                    + rl_i[:, None] * ful
+                dur_ideal_c = jnp.where(dv_i[:, None],
+                                        (vl2 / epc) * div_f,
+                                        vl2 / epc) + rl_i[:, None] * ful
+                dur_stall_c = dur_c - dur_ideal_c
+                unit = selr(is_slide, s["sldu"], s["fpu"])
+                bs_c = rmax(rmax(raws, wg), unit)
+                cp_c = rmax(radd(bs_c, ful + dur_c,
+                                 (IDEAL, ful + dur_ideal_c),
+                                 (OPR_BANK_CONFLICT, dur_stall_c)), rc)
+                fo_c = selr(is_red, cp_c, radd(bs_c, ful, (IDEAL, ful)))
+                rd_c = rmax_shift(radd(bs_c, vl2 / epc,
+                                       (IDEAL, vl2 / epc)),
+                                  cp_c, -(ful + queue_adv),
+                                  OPR_QUEUE_LIMIT)
+                occ = rmax_shift(radd(bs_c, dur_c, (IDEAL, dur_ideal_c),
+                                      (OPR_BANK_CONFLICT, dur_stall_c)),
+                                 cp_c, -ful, OPR_CHAIN_DELAY)
+
+                # ---- merge by kind & update state ----------------------
+                bs_row = selr(is_load, req, selr(is_store, bs_s, bs_c))
+                cp_row = selr(is_load, cp_l, selr(is_store, cp_s, cp_c))
+                fo_row = selr(is_load, fo_l, selr(is_store, cp_s, fo_c))
+                rd_row = selr(is_load, rd_l, selr(is_store, rd_s, rd_c))
+                is_mem = is_load | is_store
+                is_comp = valid & ~is_mem
+                ns = dict(s)
+                ns["bus"] = selr(valid & is_mem,
+                                 selr(is_load, busf_l, busf_s), s["bus"])
+                ns["addr"] = selr(valid & is_mem,
+                                  selr(is_load, addr_l, addr_s),
+                                  s["addr"])
+                ns["wbus"] = selr(valid & is_store, wbus_s, s["wbus"])
+                ns["sldu"] = selr(is_comp & is_slide, occ, s["sldu"])
+                ns["fpu"] = selr(is_comp & ~is_slide, occ, s["fpu"])
+                ns["issue"] = selr(valid,
+                                   radd(s["issue"], issue_gap,
+                                        (DEP_ISSUE_GAP, issue_gap)),
+                                   s["issue"])
+                ns["total"] = selr(valid, rmax(s["total"], cp_row),
+                                   s["total"])
+                oh_dst = ((jnp.arange(R)[None, :] == dstc[:, None])
+                          & (k != PAD)[:, None] & (d_i >= 0)[:, None])
+                ns["w_first"] = set_r(s["w_first"], oh_dst, fo_row)
+                ns["w_compl"] = set_r(s["w_compl"], oh_dst, cp_row)
+                rel = selr(opt_cb, rd_row,
+                           radd(cp_row, war_ovh,
+                                (DEP_WAR_RELEASE, war_ovh)))
+                rr = s["r_rel"]
+                for j in range(S):
+                    src = sr_i[:, j]
+                    srcc = jnp.clip(src, 0, R - 1)
+                    oh = ((jnp.arange(R)[None, :] == srcc[:, None])
+                          & (k != PAD)[:, None] & (src >= 0)[:, None])
+                    rr = rmax_r(rr, oh, rel)
+                ns["r_rel"] = rr
+                if collect:
+                    return ns, (fo_row[0][..., 0], cp_row[0][..., 0],
+                                bs_row[0][..., 0])
+                return ns, None
+
+            return step
+
+        C = NCOMP
+
+        # ---- pass 1: basis rows -> per-chunk transfer matrices ----------
+        def basis_row(d):
+            v = jnp.full((D,), -jnp.inf,
+                         jnp.float64).at[d].set(0.0)
+            v = jnp.broadcast_to(v, (M, W, D))
+            p = (jnp.zeros((M, W, D, C), jnp.float64) if att else None)
+            return (v, p)
+
+        def basis_tab(offset):
+            v = jnp.where(jnp.arange(D)[None, :]
+                          == (offset + jnp.arange(R))[:, None],
+                          0.0, -jnp.inf)
+            v = jnp.broadcast_to(v[None, :, None, :], (M, R, W, D))
+            p = (jnp.zeros((M, R, W, D, C), jnp.float64) if att else None)
+            return (v, p)
+
+        s1 = dict(issue=basis_row(_ISSUE), bus=basis_row(_BUS),
+                  wbus=basis_row(_WBUS), addr=basis_row(_ADDR),
+                  fpu=basis_row(_FPU), sldu=basis_row(_SLDU),
+                  total=basis_row(_TOTAL),
+                  w_first=basis_tab(_NFIX), w_compl=basis_tab(_NFIX + R),
+                  r_rel=basis_tab(_NFIX + 2 * R))
+        s1, _ = lax.scan(make_step(basis_row(_CONST), False), s1, fields)
+
+        def tab_rows(t):
+            return jnp.moveaxis(t, 1, 2)           # (M,R,W,..) -> (M,W,R,..)
+
+        const = basis_row(_CONST)
+        mat_v = jnp.concatenate([
+            jnp.stack([const[0], s1["issue"][0], s1["bus"][0],
+                       s1["wbus"][0], s1["addr"][0], s1["fpu"][0],
+                       s1["sldu"][0], s1["total"][0]], axis=2),
+            tab_rows(s1["w_first"][0]), tab_rows(s1["w_compl"][0]),
+            tab_rows(s1["r_rel"][0]),
+        ], axis=2).reshape(n_chunks, B, W, D, D)
+        if att:
+            mat_p = jnp.concatenate([
+                jnp.stack([const[1], s1["issue"][1], s1["bus"][1],
+                           s1["wbus"][1], s1["addr"][1], s1["fpu"][1],
+                           s1["sldu"][1], s1["total"][1]], axis=2),
+                tab_rows(s1["w_first"][1]), tab_rows(s1["w_compl"][1]),
+                tab_rows(s1["r_rel"][1]),
+            ], axis=2).reshape(n_chunks, B, W, D, D, C)
+        else:
+            mat_p = None
+
+        # ---- log-depth composition of the chunk matrices ----------------
+        def combine(a, b):
+            va, pa = a
+            vb, pb = b
+            c, kk = tropical_compose(vb, va, use_pallas=use_pallas)
+            if pa is None:
+                return (c, None)
+            pb_g = jnp.take_along_axis(pb, kk[..., None], axis=-2)
+            pa_t = jnp.swapaxes(pa, -3, -2)
+            pa_g = jnp.take_along_axis(
+                pa_t, jnp.swapaxes(kk, -1, -2)[..., None], axis=-2)
+            return (c, pb_g + jnp.swapaxes(pa_g, -3, -2))
+
+        prefix_v, prefix_p = lax.associative_scan(
+            combine, (mat_v, mat_p), axis=0)
+
+        # cycles (+ attribution) from the full composition applied to the
+        # zero initial state: value = max over basis columns of the
+        # `total` row; payload rides the argmax column.
+        last_v = prefix_v[-1]                       # (B, W, D, D)
+        cyc = jnp.max(last_v[..., _TOTAL, :], axis=-1)
+        if att:
+            j_star = jnp.argmax(last_v[..., _TOTAL, :], axis=-1)
+            comp = jnp.take_along_axis(
+                prefix_p[-1][..., _TOTAL, :, :],
+                j_star[..., None, None], axis=-2)[..., 0, :]
+        else:
+            comp = cyc
+
+        # chunk-entry states: exclusive prefixes applied to state 0.
+        entry_v = jnp.max(prefix_v, axis=-1)        # (nC, B, W, D)
+        entry_v = jnp.concatenate(
+            [jnp.zeros_like(entry_v[:1]), entry_v[:-1]], axis=0)
+        entry_m = entry_v.reshape(M, W, D)
+
+        # ---- pass 2: value mode over all chunks in parallel -------------
+        def vrow(ci):
+            return (entry_m[..., ci][..., None], None)
+
+        def vtab(lo):
+            return (jnp.moveaxis(entry_m[..., lo:lo + R], 2, 1)[..., None],
+                    None)
+
+        s2 = dict(issue=vrow(_ISSUE), bus=vrow(_BUS), wbus=vrow(_WBUS),
+                  addr=vrow(_ADDR), fpu=vrow(_FPU), sldu=vrow(_SLDU),
+                  total=vrow(_TOTAL), w_first=vtab(_NFIX),
+                  w_compl=vtab(_NFIX + R), r_rel=vtab(_NFIX + 2 * R))
+        zero2 = (jnp.zeros((M, W, 1), jnp.float64), None)
+        _, ys = lax.scan(make_step(zero2, True), s2, fields)
+        fo, cp, bs = ys                             # each (L, M, W)
+        return cyc, comp, fo, cp, bs
+
+    return jax.jit(run, static_argnums=(2, 3))
+
+
+_FNS: dict[tuple, object] = {}
+
+
+def _get_fn(mc: MachineConfig, attribution: bool, use_pallas: bool):
+    key = (dataclasses.astuple(mc), bool(attribution), bool(use_pallas))
+    fn = _FNS.get(key)
+    if fn is None:
+        fn = _build_assoc(mc, attribution, use_pallas)
+        _FNS[key] = fn
+    return fn
+
+
+def run_assoc(mc: MachineConfig, st: StackedTraces, view,
+              attribution: bool = False, chunk: int | None = None,
+              use_pallas: bool = False):
+    """Evaluate the grid with the associative-scan engine.
+
+    Returns the same 7-tuple as `BatchAraSimulator._run_numpy` /
+    `_run_jax`: ``(cycles, busy_fpu, busy_bus, comp, lane_first_out,
+    first_first_out, finish_start)`` with ``(B, W)`` arrays (comp is
+    ``(B, W, NCOMP)`` or None).
+    """
+    from jax.experimental import enable_x64
+
+    chunk = int(chunk or DEFAULT_CHUNK)
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    B, I = st.kind.shape
+    R = max(int(st.max_regs), 1)
+    W = view.width
+    est = assoc_bytes(I, B, W, R, attribution, chunk)
+    limit = float(os.environ.get(MEM_LIMIT_ENV, DEFAULT_MEM_LIMIT))
+    if est > limit:
+        raise ValueError(
+            f"assoc transfer matrices would need ~{est / 2**30:.1f} GiB "
+            f"(> {limit / 2**30:.1f} GiB limit; I={I} B={B} W={W} "
+            f"D={basis_dim(R)} chunk={chunk}"
+            f"{' with attribution' if attribution else ''}): raise "
+            f"`chunk`, set ${MEM_LIMIT_ENV}, or use method='scan'")
+    fields, n_chunks, I2 = _prep(st, chunk)
+    views = dataclasses.astuple(view)
+    with enable_x64():
+        fn = _get_fn(mc, attribution, use_pallas)
+        cyc, comp, fo, cp, bs = fn(fields, views, R, B)
+        cyc = np.asarray(cyc)
+        comp = np.asarray(comp) if attribution else None
+        fo, cp, bs = (np.asarray(a) for a in (fo, cp, bs))
+
+    def im(a):            # (L, nC*B, W) -> (I, B, W)
+        a = a.reshape(chunk, n_chunks, B, W).transpose(1, 0, 2, 3)
+        return a.reshape(I2, B, W)[:I]
+
+    fo, cp, bs = im(fo), im(cp), im(bs)
+
+    # ---- phase observables (host post-pass over pass-2 outputs) --------
+    kind = np.swapaxes(st.kind, 0, 1)               # (I, B)
+    valid = kind != PAD
+    lane_mask = valid & (kind != _LOAD) & (kind != _STORE)
+    lane_fo = np.where(lane_mask[..., None], fo, np.inf).min(axis=0)
+    first_idx = np.argmax(valid, axis=0)            # first valid instr
+    first_fo = np.take_along_axis(
+        fo, first_idx[None, :, None], axis=0)[0]
+    # finishing instruction = first strict-argmax of completes (matches
+    # the sequential `complete > running_total` adoption rule).
+    fin_idx = np.argmax(np.where(valid[..., None], cp, -np.inf), axis=0)
+    fin_start = np.take_along_axis(bs, fin_idx[None], axis=0)[0]
+
+    # ---- busy counters: closed-form sums over trace constants ----------
+    epc = float(mc.elems_per_cycle)
+    bpc = float(mc.axi_bytes_per_cycle)
+    vl = np.swapaxes(st.vl, 0, 1).astype(np.float64)
+    sew = np.swapaxes(st.sew, 0, 1).astype(np.float64)
+    nb = np.swapaxes(st.nbytes, 0, 1).astype(np.float64)
+    stridea = np.swapaxes(st.stride, 0, 1)
+    fmask = valid & ((kind == _COMPUTE) | (kind == _REDUCE))
+    busy_fpu = np.broadcast_to(
+        np.add.reduce(np.where(fmask, vl / epc, 0.0), axis=0)[:, None],
+        (B, W)).copy()
+    mem = valid & ((kind == _LOAD) | (kind == _STORE))
+    idxm = mem & (stridea == _INDEXED)
+    lin = mem & (stridea != _INDEXED)
+    nburst = np.maximum(1.0, np.ceil(nb / float(mc.burst_bytes)))
+    busy_bus = (
+        (np.add.reduce(np.where(lin, nb / bpc, 0.0), axis=0)
+         + np.add.reduce(np.where(idxm, vl * (sew / bpc), 0.0),
+                         axis=0))[:, None]
+        + np.add.reduce(np.where(lin, nburst, 0.0), axis=0)[:, None]
+        * np.asarray(view.tx_ovh)[None, :]
+        + np.add.reduce(np.where(idxm, vl, 0.0), axis=0)[:, None]
+        * np.asarray(view.idx_ovh)[None, :])
+    return cyc, busy_fpu, busy_bus, comp, lane_fo, first_fo, fin_start

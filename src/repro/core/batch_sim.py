@@ -27,6 +27,13 @@ Two backends:
     program (float64 via `jax.experimental.enable_x64`).  Best for large
     fixed-shape sweeps where compile time amortizes.
 
+A third execution strategy, ``method="assoc"`` (jax-only, implemented in
+`repro.core.assoc_sim`), recasts the same recurrence as composable
+max-plus transfer matrices and runs `jax.lax.associative_scan` over the
+instruction axis for log-depth evaluation.  The public entrypoint for
+choosing among all of these is `repro.core.api.simulate`; the `run` /
+`sweep` methods below are deprecation shims kept for one PR.
+
 Deviation attribution (``attribution=True``): the scan carries the same
 component vectors as `AraSimulator.run` — every hazard state array gains a
 trailing `repro.core.stalls.NCOMP` axis that follows the identical max/+
@@ -48,6 +55,7 @@ paper's ``(dp, II_eff, dt)`` deviation triple per cell: the earliest lane
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 import numpy as np
@@ -219,13 +227,53 @@ class BatchAraSimulator:
         # carrying scan is a different program than the plain one).
         self._jax_fns: dict[bool, object] = {}
 
-    # -- public API ---------------------------------------------------------
+    # -- public API (deprecation shims over `repro.core.api.simulate`) ------
     def run(self, stacked: StackedTraces, opts: Sequence[OptConfig],
             params: SimParams | Sequence[SimParams] = SimParams(),
             backend: str = "numpy",
             attribution: bool = False,
             p_chunk: int | None = None) -> BatchResult:
+        """Deprecated direct-kwarg entrypoint; use
+        `repro.core.api.simulate` (docs/architecture.md has the call
+        mapping).  Kept working for one PR."""
+        warnings.warn(
+            "BatchAraSimulator.run(stacked, ...) is deprecated; use "
+            "repro.core.api.simulate(traces, opts, params, backend=..., "
+            "method=...) — see docs/architecture.md for the mapping",
+            DeprecationWarning, stacklevel=2)
+        return self._run(stacked, opts, params, backend=backend,
+                         attribution=attribution, p_chunk=p_chunk)
+
+    def sweep(self, traces: Sequence[KernelTrace],
+              opts: Sequence[OptConfig],
+              params: SimParams | Sequence[SimParams] = SimParams(),
+              backend: str = "numpy",
+              attribution: bool = False) -> BatchResult:
+        """Deprecated; `repro.core.api.simulate` accepts raw trace
+        sequences directly."""
+        warnings.warn(
+            "BatchAraSimulator.sweep(traces, ...) is deprecated; use "
+            "repro.core.api.simulate(traces, opts, params, ...) — see "
+            "docs/architecture.md for the mapping",
+            DeprecationWarning, stacklevel=2)
+        return self._run(stack_traces(traces), opts, params,
+                         backend=backend, attribution=attribution)
+
+    # -- engine dispatch ----------------------------------------------------
+    def _run(self, stacked: StackedTraces, opts: Sequence[OptConfig],
+             params: SimParams | Sequence[SimParams] = SimParams(),
+             backend: str = "numpy",
+             attribution: bool = False,
+             p_chunk: int | None = None,
+             method: str = "scan",
+             assoc_chunk: int | None = None,
+             use_pallas: bool = False) -> BatchResult:
         """Evaluate the `(trace x opt x params)` grid.
+
+        ``method`` picks the instruction-axis algorithm: ``scan`` is the
+        sequential recurrence (both backends); ``assoc`` the log-depth
+        max-plus associative-scan engine (`repro.core.assoc_sim`,
+        jax-only; ``assoc_chunk``/``use_pallas`` tune it).
 
         `p_chunk` splits the params axis into chunks of at most that
         width so `large`-profile grids with hundreds-to-thousands of
@@ -239,6 +287,11 @@ class BatchAraSimulator:
             params = [params]
         opts = list(opts)
         params = list(params)
+        if method not in ("scan", "assoc"):
+            raise ValueError(f"unknown method {method!r}")
+        if method == "assoc" and backend != "jax":
+            raise ValueError("method='assoc' requires backend='jax' "
+                             "(the max-plus engine is jax-only)")
         if p_chunk is not None and p_chunk < 1:
             raise ValueError(f"p_chunk must be >= 1, got {p_chunk}")
         if p_chunk is not None and len(params) > p_chunk:
@@ -246,12 +299,19 @@ class BatchAraSimulator:
             for lo in range(0, len(params), p_chunk):
                 chunk = params[lo:lo + p_chunk]
                 pad = p_chunk - len(chunk) if backend == "jax" else 0
-                part = self.run(stacked, opts, chunk + [chunk[-1]] * pad,
-                                backend=backend, attribution=attribution)
+                part = self._run(stacked, opts, chunk + [chunk[-1]] * pad,
+                                 backend=backend, attribution=attribution,
+                                 method=method, assoc_chunk=assoc_chunk,
+                                 use_pallas=use_pallas)
                 parts.append(_slice_p(part, len(chunk)) if pad else part)
             return _concat_p(parts)
         view = make_views(opts, params)
-        if backend == "numpy":
+        if method == "assoc":
+            from repro.core import assoc_sim
+            cyc, bf, bb, comp, lfo, ffo, fst = assoc_sim.run_assoc(
+                self.mc, stacked, view, attribution,
+                chunk=assoc_chunk, use_pallas=use_pallas)
+        elif backend == "numpy":
             cyc, bf, bb, comp, lfo, ffo, fst = self._run_numpy(
                 stacked, view, attribution)
         elif backend == "jax":
@@ -273,14 +333,6 @@ class BatchAraSimulator:
                            lane_first_out=lfo.reshape(shape),
                            first_first_out=ffo.reshape(shape),
                            finish_start=fst.reshape(shape))
-
-    def sweep(self, traces: Sequence[KernelTrace],
-              opts: Sequence[OptConfig],
-              params: SimParams | Sequence[SimParams] = SimParams(),
-              backend: str = "numpy",
-              attribution: bool = False) -> BatchResult:
-        return self.run(stack_traces(traces), opts, params, backend=backend,
-                        attribution=attribution)
 
     # -- numpy backend ------------------------------------------------------
     def _run_numpy(self, st: StackedTraces, v: ParamView,

@@ -29,7 +29,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core import paper
+from repro.core import api, paper
 from repro.core.batch_sim import BatchAraSimulator
 from repro.core.isa import OptConfig, geomean
 from repro.core.roofline import normalized
@@ -95,7 +95,9 @@ _SIM = BatchAraSimulator()
 
 def evaluate_many(params_list: Sequence[SimParams],
                   traces=None, backend: str = "numpy",
-                  attribution: bool = False) -> list[dict]:
+                  attribution: bool = False,
+                  method: str = "scan",
+                  assoc_chunk: int | None = None) -> list[dict]:
     """Score many candidates with one batched `(kernel x config x
     candidate)` sweep; returns one metrics dict per candidate.
 
@@ -106,12 +108,16 @@ def evaluate_many(params_list: Sequence[SimParams],
     sweep also carries the stall decomposition (both backends) and each
     metrics dict gains per-kernel critical-path / category shares of
     baseline and full-opt cycles (``paths_base/full``,
-    ``stalls_base/full``) for `attribution_loss`."""
+    ``stalls_base/full``) for `attribution_loss`.  `method` picks the
+    instruction-axis algorithm on the jax backend (``scan`` / ``assoc``,
+    see `repro.core.api.simulate`)."""
     traces = traces or _traces()
     names = list(traces)
     stacked = stack_traces([traces[k] for k in names])
-    res = _SIM.run(stacked, _CONFIGS, list(params_list), backend=backend,
-                   attribution=attribution)
+    res = api.simulate(stacked, _CONFIGS, list(params_list),
+                       backend=backend, method=method,
+                       assoc_chunk=assoc_chunk,
+                       attribution=attribution, sim=_SIM)
     cycles = res.cycles                        # (kernel, config, candidate)
     gflops = res.gflops
     if attribution:
@@ -151,10 +157,10 @@ def evaluate_many(params_list: Sequence[SimParams],
 
 
 def evaluate(params: SimParams, traces=None, backend: str = "numpy",
-             attribution: bool = False) -> dict:
+             attribution: bool = False, method: str = "scan") -> dict:
     """Simulate everything the loss needs; returns a metrics dict."""
     return evaluate_many([params], traces, backend=backend,
-                         attribution=attribution)[0]
+                         attribution=attribution, method=method)[0]
 
 
 def loss(metrics: dict) -> float:
@@ -210,10 +216,13 @@ def attribution_loss(metrics: dict) -> float:
 
 def _losses_of(candidates: Sequence[dict], traces,
                backend: str = "numpy",
-               attribution_weight: float = 0.0) -> list[float]:
+               attribution_weight: float = 0.0,
+               method: str = "scan",
+               assoc_chunk: int | None = None) -> list[float]:
     params = [SimParams(**vals) for vals in candidates]
     metrics = evaluate_many(params, traces, backend=backend,
-                            attribution=attribution_weight > 0.0)
+                            attribution=attribution_weight > 0.0,
+                            method=method, assoc_chunk=assoc_chunk)
     if attribution_weight > 0.0:
         return [loss(m) + attribution_weight * attribution_loss(m)
                 for m in metrics]
@@ -238,7 +247,8 @@ def parity_traces():
 
 def check_backend_parity(backend: str, traces=None,
                          tol: float = 1e-6,
-                         attribution_weight: float = 0.0) -> float:
+                         attribution_weight: float = 0.0,
+                         method: str = "scan") -> float:
     """Cross-check one candidate's loss between `backend` and numpy.
 
     Guards calibration against a silently-divergent accelerated backend;
@@ -247,38 +257,45 @@ def check_backend_parity(backend: str, traces=None,
     cheap even on hosts where one backend is slow.  A non-zero
     `attribution_weight` routes the comparison through the attribution-
     carrying sweep, so the stall-decomposition tensors are parity-checked
-    too."""
+    too.  `method` selects the jax instruction-axis algorithm under test
+    (``scan`` or the max-plus ``assoc`` engine); the numpy reference side
+    always runs the sequential scan."""
     traces = traces or parity_traces()
     vals = dict(dataclasses.asdict(SimParams()), **SEED_CANDIDATE)
     vals["idx_ovh_opt"] = 0.9 * vals["idx_ovh_base"]
     ref = _losses_of([vals], traces, backend="numpy",
                      attribution_weight=attribution_weight)[0]
     got = _losses_of([vals], traces, backend=backend,
-                     attribution_weight=attribution_weight)[0]
+                     attribution_weight=attribution_weight,
+                     method=method)[0]
     diff = abs(got - ref)
     if not diff <= tol * max(abs(ref), 1.0):
         raise RuntimeError(
-            f"backend {backend!r} disagrees with numpy on the seed "
-            f"candidate loss: {got!r} vs {ref!r}")
+            f"backend {backend!r} (method {method!r}) disagrees with "
+            f"numpy on the seed candidate loss: {got!r} vs {ref!r}")
     return diff
 
 
 def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
               verbose: bool = True, chunk: int = 64,
               backend: str = "numpy",
-              attribution_weight: float = 0.0) -> tuple[SimParams, float]:
+              attribution_weight: float = 0.0,
+              method: str = "scan",
+              assoc_chunk: int | None = None) -> tuple[SimParams, float]:
     """Fit baseline parameters; `attribution_weight` > 0 adds
     ``attribution_weight * attribution_loss`` to every candidate's score
     (the sweep then carries stall tensors — supported on both backends,
     so ``--backend jax`` scores attribution-aware objectives in the same
-    compiled scan)."""
+    compiled scan).  ``method="assoc"`` (jax only) scores candidates with
+    the log-depth max-plus engine; parity vs numpy is checked first."""
     rng = random.Random(seed)
     traces = _traces()
-    if backend != "numpy":
+    if backend != "numpy" or method != "scan":
         diff = check_backend_parity(
-            backend, attribution_weight=attribution_weight)
+            backend, attribution_weight=attribution_weight, method=method)
         if verbose:
-            print(f"[parity] {backend} vs numpy seed-loss diff={diff:.2e}")
+            print(f"[parity] {backend}/{method} vs numpy "
+                  f"seed-loss diff={diff:.2e}")
     defaults = dataclasses.asdict(SimParams())
 
     def population(k: int) -> list[dict]:
@@ -297,7 +314,7 @@ def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
     best_vals = dict(defaults, **SEED_CANDIDATE)
     best_vals["idx_ovh_opt"] = 0.9 * best_vals["idx_ovh_base"]
     best = _losses_of([best_vals], traces, backend,
-                      attribution_weight)[0]
+                      attribution_weight, method, assoc_chunk)[0]
     if verbose:
         print(f"[seed] loss={best:.4f}")
     # Random search, `chunk` candidates per batched evaluation.
@@ -305,7 +322,8 @@ def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
     while done < iters:
         cands = population(min(chunk, iters - done))
         for off, l in enumerate(_losses_of(cands, traces, backend,
-                                           attribution_weight)):
+                                           attribution_weight, method,
+                                           assoc_chunk)):
             if l < best:
                 best, best_vals = l, cands[off]
                 if verbose:
@@ -323,7 +341,8 @@ def calibrate(iters: int = 400, seed: int = 0, refine_rounds: int = 3,
                     cand["idx_ovh_opt"] = 0.9 * cand[name]
                 cands.append(cand)
             for cand, l in zip(cands, _losses_of(cands, traces, backend,
-                                                 attribution_weight)):
+                                                 attribution_weight,
+                                                 method, assoc_chunk)):
                 if l < best:
                     best, best_vals = l, cand
         if verbose:
@@ -375,6 +394,14 @@ def main() -> None:  # pragma: no cover - CLI
     ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
                     help="batched engine for candidate scoring (jax wins "
                          "on accelerator hosts; parity-checked vs numpy)")
+    ap.add_argument("--method", choices=("scan", "assoc"), default="scan",
+                    help="jax instruction-axis algorithm: sequential "
+                         "lax.scan or the log-depth max-plus assoc engine "
+                         "(parity-checked vs numpy before the search)")
+    ap.add_argument("--assoc-chunk", type=int, default=None,
+                    help="assoc instruction-chunk length; raise it (e.g. "
+                         "512) to fit the full-size calibration grid "
+                         "under the assoc memory guard")
     ap.add_argument("--attribution-weight", type=float, default=0.0,
                     help="weight of attribution_loss in candidate scores "
                          "(0 disables; the sweep then also carries the "
@@ -382,7 +409,8 @@ def main() -> None:  # pragma: no cover - CLI
     args = ap.parse_args()
     params, best = calibrate(iters=args.iters, seed=args.seed,
                              chunk=args.chunk, refine_rounds=args.refine,
-                             backend=args.backend,
+                             backend=args.backend, method=args.method,
+                             assoc_chunk=args.assoc_chunk,
                              attribution_weight=args.attribution_weight)
     metrics = evaluate(params)
     save(params, best, metrics=metrics)

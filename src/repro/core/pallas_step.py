@@ -1,0 +1,126 @@
+"""Fused tropical (max, +) matrix composition — the inner step of the
+``method="assoc"`` engine (`repro.core.assoc_sim`).
+
+The associative-scan formulation composes per-chunk transfer matrices in
+the tropical semiring:
+
+    C[i, j] = max_k ( B[i, k] + A[k, j] )        (apply A first, then B)
+
+together with the *argmax binding index* ``K[i, j]`` that the attribution
+machinery uses to route payload vectors through the composition (see
+`assoc_sim` for the payload invariant).  This module provides two
+implementations with identical semantics:
+
+  * ``_compose_jnp``     — plain jax.numpy reference (an unrolled loop over
+    the shared dimension; the matrices are small, ``D = 8 + 3R``), used by
+    default on CPU where Pallas runs in interpreter mode and is slow.
+  * ``_compose_pallas``  — a Pallas kernel (`pl.pallas_call`) that fuses the
+    whole max/+/argmax loop into one kernel over a flattened batch of
+    matrix pairs.  On CPU it runs with ``interpret=True`` so CI exercises
+    the exact kernel body; on an accelerator backend it compiles for real.
+
+Both return ``(C, K)`` with ``K`` the *first* maximising ``k`` (ties keep
+the lowest index), so the two paths agree bit-for-bit — asserted by
+``tests/test_assoc.py::test_pallas_matches_jnp``.
+
+``-inf`` entries (absent transitions) are first-class: ``-inf + x = -inf``
+and a strict ``>`` comparison never adopts them over a finite incumbent.
+No subtraction happens here, so no NaNs can appear.
+"""
+from __future__ import annotations
+
+import functools
+
+
+def _compose_jnp(b, a):
+    """Reference tropical matmul: ``C = B (.) A`` with argmax indices.
+
+    `b`, `a`: ``(..., D, D)`` float arrays.  Returns ``(C, K)`` where
+    ``C[..., i, j] = max_k b[..., i, k] + a[..., k, j]`` and ``K`` is the
+    first maximising ``k`` (int32).
+    """
+    import jax.numpy as jnp
+
+    D = a.shape[-1]
+    best = b[..., :, 0][..., :, None] + a[..., 0, :][..., None, :]
+    arg = jnp.zeros(best.shape, jnp.int32)
+    for k in range(1, D):
+        t = b[..., :, k][..., :, None] + a[..., k, :][..., None, :]
+        take = t > best
+        best = jnp.where(take, t, best)
+        arg = jnp.where(take, k, arg)
+    return best, arg
+
+
+@functools.lru_cache(maxsize=None)
+def _make_kernel(D: int):
+    """Build the Pallas kernel body for a fixed matrix dimension."""
+    import jax.numpy as jnp
+
+    def kernel(b_ref, a_ref, c_ref, k_ref):
+        bb = b_ref[...]                            # (block, D, D)
+        aa = a_ref[...]
+        best = bb[:, :, 0][:, :, None] + aa[:, 0, :][:, None, :]
+        arg = jnp.zeros(best.shape, jnp.int32)
+        for k in range(1, D):                      # D is static: unrolled
+            t = bb[:, :, k][:, :, None] + aa[:, k, :][:, None, :]
+            take = t > best
+            best = jnp.where(take, t, best)
+            arg = jnp.where(take, k, arg)
+        c_ref[...] = best
+        k_ref[...] = arg
+
+    return kernel
+
+
+def _compose_pallas(b, a, *, block: int = 8, interpret: bool | None = None):
+    """Pallas-fused tropical matmul over a flattened batch of pairs.
+
+    Leading dims of `b`/`a` are flattened to one batch axis, padded up to a
+    multiple of `block`, and the kernel runs one grid step per block.
+    ``interpret`` defaults to True on CPU (no Pallas lowering there) and
+    False on accelerator backends.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    D = a.shape[-1]
+    lead = b.shape[:-2]
+    n = 1
+    for d in lead:
+        n *= d
+    bf = b.reshape(n, D, D)
+    af = a.reshape(n, D, D)
+    n2 = -(-n // block) * block
+    if n2 != n:
+        pad = ((0, n2 - n), (0, 0), (0, 0))
+        bf = jnp.pad(bf, pad)
+        af = jnp.pad(af, pad)
+    c, k = pl.pallas_call(
+        _make_kernel(D),
+        grid=(n2 // block,),
+        in_specs=[pl.BlockSpec((block, D, D), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((block, D, D), lambda i: (i, 0, 0))],
+        out_specs=[pl.BlockSpec((block, D, D), lambda i: (i, 0, 0)),
+                   pl.BlockSpec((block, D, D), lambda i: (i, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n2, D, D), b.dtype),
+                   jax.ShapeDtypeStruct((n2, D, D), jnp.int32)],
+        interpret=interpret,
+    )(bf, af)
+    return (c[:n].reshape(*lead, D, D), k[:n].reshape(*lead, D, D))
+
+
+def tropical_compose(b, a, *, use_pallas: bool = False,
+                     interpret: bool | None = None):
+    """``C[i,j] = max_k b[i,k] + a[k,j]`` plus argmax indices.
+
+    `a` is the earlier transfer matrix, `b` the later one (apply `a`
+    first).  With ``use_pallas`` the fused kernel is used (interpreter
+    mode on CPU); otherwise the jnp reference.  Semantics are identical.
+    """
+    if use_pallas:
+        return _compose_pallas(b, a, interpret=interpret)
+    return _compose_jnp(b, a)

@@ -28,13 +28,13 @@ variant — a surface over `pair_design` grids).
 Execution: `run_grid` is cache-backed through the content-addressed
 `repro.launch.sweep_cache` (cells are keyed by the params block, so a
 re-run of the same design is free) and chunks the P axis
-(`BatchAraSimulator.run(..., p_chunk=...)`) so `large`-profile grids
+(`repro.core.api.simulate(..., p_chunk=...)`) so `large`-profile grids
 fit memory.  This is the first subsystem where the **jax backend is
-the intended default for wide grids on accelerator hosts**:
-`resolve_backend("auto", width)` picks jax once the grid width crosses
-`JAX_WIDTH_THRESHOLD` and jax reports a non-CPU device (the measured
-CPU numbers in docs/backends.md show numpy ahead at every width on
-CPU-only hosts, so auto never degrades a laptop/CI run).
+the intended default for wide grids on accelerator hosts**: strategy
+resolution now lives in `repro.core.api.resolve_plan`, which picks the
+backend (and the scan-vs-assoc instruction-axis method) from the
+measured crossover points recorded in docs/backends.md, so auto never
+degrades a laptop/CI run.
 """
 from __future__ import annotations
 
@@ -44,6 +44,7 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from repro.analysis.attribution import phase_decompose_grid
+from repro.core import api
 from repro.core.batch_sim import BatchAraSimulator
 from repro.core.calibration import SPACE
 from repro.core.calibration import load as load_calibrated
@@ -83,13 +84,11 @@ KNOB_PATHS: dict[str, str] = {
 
 _SPACE_BOUNDS = {name: (lo, hi) for name, lo, hi in SPACE}
 
-#: Grid width (`len(opts) * len(variants)`) above which
-#: `resolve_backend("auto", ...)` prefers the jax backend — on
-#: accelerator hosts only.  The measured CPU numbers in
-#: docs/backends.md show numpy ahead at every width on CPU, so this
-#: threshold never flips a CPU-only run to jax; it gates when a
-#: non-CPU device makes compiling the one-program scan worthwhile.
-JAX_WIDTH_THRESHOLD = 512
+#: Grid width above which ``auto`` prefers the jax backend on
+#: accelerator hosts — the canonical measured crossover now lives in
+#: `repro.core.api.JAX_WIDTH_CROSSOVER` (docs/backends.md records the
+#: measurements); this alias is kept for existing imports.
+JAX_WIDTH_THRESHOLD = api.JAX_WIDTH_CROSSOVER
 
 #: Default P-axis chunk so `large`-profile grids fit memory: hazard
 #: state is `(B, R, W, NCOMP)` with `W = O * P`, so a 2-opt x 256-param
@@ -239,42 +238,19 @@ def lhs_design(center: SimParams | None = None,
 
 # -- execution ------------------------------------------------------------
 
-def have_jax() -> bool:
-    try:
-        import jax  # noqa: F401
-        return True
-    except ImportError:                    # pragma: no cover - env-dep
-        return False
-
-
-def jax_accelerator() -> bool:
-    """True when jax is importable and backed by a non-CPU device."""
-    if not have_jax():
-        return False
-    import jax
-    try:
-        return jax.default_backend() != "cpu"
-    except RuntimeError:                   # pragma: no cover - env-dep
-        return False
+# Backend probes: canonical implementations moved to `repro.core.api`
+# with the simulate() redesign; re-exported here for existing callers.
+have_jax = api.have_jax
+jax_accelerator = api.jax_accelerator
 
 
 def resolve_backend(backend: str, width: int) -> str:
     """Resolve ``auto`` to a concrete engine by grid width and host.
 
-    The sensitivity subsystem is where the jax backend is *intended*
-    to take over: one compiled `lax.scan` over a `width = O * P` grid,
-    amortized across a design's chunks.  The measured CPU numbers in
-    docs/backends.md, however, show the interpreter-side numpy loop
-    still ahead at every width we sweep on CPU-only hosts (the scan's
-    per-step dispatch dominates), so ``auto`` only picks jax when the
-    width crosses `JAX_WIDTH_THRESHOLD` *and* jax reports an
-    accelerator device; everything else falls back to numpy.
-    """
-    if backend != "auto":
-        return backend
-    if width >= JAX_WIDTH_THRESHOLD and jax_accelerator():
-        return "jax"
-    return "numpy"
+    Thin wrapper over `repro.core.api.resolve_plan`, which holds the
+    measured numpy/jax/assoc crossover points (docs/backends.md); kept
+    because sweep callers only need the backend half of the plan."""
+    return api.resolve_plan(backend=backend, width=width).backend
 
 
 def run_grid(traces: Mapping[str, KernelTrace],
@@ -282,7 +258,8 @@ def run_grid(traces: Mapping[str, KernelTrace],
              opts: Sequence[OptConfig] = (OptConfig.baseline(),
                                           OptConfig.full()),
              *, mc: MachineConfig = MachineConfig(),
-             backend: str = "auto", attribution: bool = True,
+             backend: str = "auto", method: str = "auto",
+             attribution: bool = True,
              cache: SweepCache | None = None, use_cache: bool = True,
              p_chunk: int | None = DEFAULT_P_CHUNK,
              sim: BatchAraSimulator | None = None
@@ -305,7 +282,9 @@ def run_grid(traces: Mapping[str, KernelTrace],
     and any small remainder runs (and persists) through numpy, while a
     cold wide grid on an accelerator host goes through the compiled
     jax scan — served to the caller but re-simulated on the next cold
-    run.
+    run.  `method` picks the jax instruction-axis algorithm
+    (``scan``/``assoc``/``auto``, see `repro.core.api.resolve_plan`);
+    assoc-computed cells are never persisted either.
     """
     opts = list(opts)
     params_list = list(params_list)
@@ -339,16 +318,22 @@ def run_grid(traces: Mapping[str, KernelTrace],
             by_sig.setdefault(sig, []).append(tname)
 
     for (ois, pis), tnames in by_sig.items():
-        run_backend = resolve_backend(backend, len(ois) * len(pis))
-        persist = use_cache and run_backend == "numpy"
         run_opts = [opts[oi] for oi in ois]
         run_params = [params_list[pi] for pi in pis]
         run_traces = [traces[t] for t in tnames]
         stacked = stack_traces(run_traces)
-        batch = simulator.run(stacked, run_opts, run_params,
-                              backend=run_backend,
-                              attribution=attribution,
-                              p_chunk=p_chunk)
+        plan = api.resolve_plan(backend=backend, method=method,
+                                width=len(ois) * len(pis),
+                                n_instrs=int(stacked.kind.shape[1]))
+        # Only numpy scan cells are bit-exact against the scalar
+        # simulator, so only those are persisted (cache contract).
+        persist = use_cache and plan.backend == "numpy" \
+            and plan.method == "scan"
+        batch = api.simulate(stacked, run_opts, run_params,
+                             mc=mc, backend=plan.backend,
+                             method=plan.method,
+                             attribution=attribution,
+                             p_chunk=p_chunk, sim=simulator)
         pg = (phase_decompose_grid(run_traces, batch, mc=mc,
                                    params=run_params)
               if attribution else None)

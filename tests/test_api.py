@@ -1,0 +1,109 @@
+"""The unified `repro.core.api.simulate` entrypoint: plan resolution,
+input normalization, equivalence with the legacy paths, and the
+deprecation shims on `BatchAraSimulator`."""
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.batch_sim import BatchAraSimulator
+from repro.core.isa import OptConfig
+from repro.core.simulator import AraSimulator, SimParams
+from repro.core.traces import axpy, scal, stack_traces
+
+OPTS = (OptConfig.baseline(), OptConfig.full())
+
+
+def test_simulate_matches_scalar():
+    tr = scal(256)
+    res = api.simulate(tr, OPTS, backend="numpy")
+    sim = AraSimulator(params=SimParams())
+    for oi, opt in enumerate(OPTS):
+        assert res.cycles[0, oi, 0] == sim.run(tr, opt).cycles
+
+
+def test_simulate_input_forms_agree():
+    traces = [scal(128), axpy(128)]
+    ref = api.simulate(traces, OPTS, backend="numpy")
+    as_map = api.simulate({t.name: t for t in traces}, OPTS,
+                          backend="numpy")
+    as_stacked = api.simulate(stack_traces(traces), OPTS,
+                              backend="numpy")
+    np.testing.assert_array_equal(as_map.cycles, ref.cycles)
+    np.testing.assert_array_equal(as_stacked.cycles, ref.cycles)
+
+
+def test_simulate_p_chunk_passthrough():
+    traces = [scal(128)]
+    params = [SimParams(), SimParams(mem_latency=90.0),
+              SimParams(issue_gap_base=5.0)]
+    ref = api.simulate(traces, OPTS, params, backend="numpy")
+    chunked = api.simulate(traces, OPTS, params, backend="numpy",
+                           p_chunk=2)
+    np.testing.assert_array_equal(chunked.cycles, ref.cycles)
+
+
+def test_simulate_does_not_warn(recwarn):
+    api.simulate(scal(64), OPTS, backend="numpy")
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_run_and_sweep_are_deprecated():
+    sim = BatchAraSimulator()
+    stacked = stack_traces([scal(64)])
+    with pytest.warns(DeprecationWarning, match="api.simulate"):
+        old = sim.run(stacked, OPTS)
+    with pytest.warns(DeprecationWarning, match="api.simulate"):
+        sim.sweep([scal(64)], OPTS)
+    new = api.simulate(stacked, OPTS, backend="numpy")
+    np.testing.assert_array_equal(new.cycles, old.cycles)
+
+
+def test_resolve_plan_pins_explicit_choices():
+    plan = api.resolve_plan(backend="jax", method="assoc",
+                            width=1, n_instrs=1)
+    assert (plan.backend, plan.method) == ("jax", "assoc")
+
+
+def test_resolve_plan_auto_on_cpu(monkeypatch):
+    """Without an accelerator, auto must stay on numpy/scan at any size
+    (the measured BENCH_simulate.json numbers: numpy beats the compiled
+    scan and the scan beats assoc on every CPU profile)."""
+    monkeypatch.setattr(api, "jax_accelerator", lambda: False)
+    plan = api.resolve_plan(width=10_000, n_instrs=100_000)
+    assert (plan.backend, plan.method) == ("numpy", "scan")
+
+
+def test_resolve_plan_auto_on_accelerator(monkeypatch):
+    monkeypatch.setattr(api, "jax_accelerator", lambda: True)
+    wide = api.resolve_plan(width=api.JAX_WIDTH_CROSSOVER,
+                            n_instrs=api.ASSOC_INSTR_CROSSOVER)
+    assert (wide.backend, wide.method) == ("jax", "assoc")
+    narrow = api.resolve_plan(width=api.JAX_WIDTH_CROSSOVER - 1,
+                              n_instrs=1)
+    assert (narrow.backend, narrow.method) == ("numpy", "scan")
+    short = api.resolve_plan(width=api.JAX_WIDTH_CROSSOVER,
+                             n_instrs=api.ASSOC_INSTR_CROSSOVER - 1)
+    assert (short.backend, short.method) == ("jax", "scan")
+
+
+def test_execution_plan_validation():
+    with pytest.raises(ValueError, match="backend"):
+        api.ExecutionPlan(backend="cuda", method="scan")
+    with pytest.raises(ValueError, match="method"):
+        api.ExecutionPlan(backend="jax", method="magic")
+    with pytest.raises(ValueError, match="assoc"):
+        api.ExecutionPlan(backend="numpy", method="assoc")
+
+
+def test_shared_sim_is_cached():
+    from repro.core.isa import MachineConfig
+    assert api._shared_sim(MachineConfig()) is \
+        api._shared_sim(MachineConfig())
+
+
+def test_resolve_backend_shim_delegates():
+    from repro.launch.sensitivity import resolve_backend
+    assert resolve_backend("numpy", width=1) == "numpy"
+    assert resolve_backend("auto", width=1) == \
+        api.resolve_plan(backend="auto", width=1).backend

@@ -1,0 +1,155 @@
+"""Max-plus associative-scan engine (`method="assoc"`): parity with the
+sequential scan on the full calibrated grid, the attribution-sum
+invariant, the Pallas-fused combine, and the memory guard."""
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings
+
+from repro.core import api, assoc_sim, calibration
+from repro.core.isa import ABLATION_GRID, OptConfig
+from repro.core.simulator import SimParams
+from repro.core.traces import scal
+
+jax = pytest.importorskip("jax")
+
+ALL_CORNERS = (OptConfig.baseline(), *ABLATION_GRID)       # 2^3 corners
+
+
+@pytest.fixture(scope="module")
+def grid_traces():
+    """Every paper kernel at the parity (reduced) sizes, as a list."""
+    return list(calibration.parity_traces().values())
+
+
+@pytest.fixture(scope="module")
+def cal_params():
+    return calibration.load()
+
+
+@pytest.fixture(scope="module")
+def scan_ref(grid_traces, cal_params):
+    return api.simulate(grid_traces, ALL_CORNERS, cal_params,
+                        backend="jax", method="scan", attribution=True)
+
+
+@pytest.fixture(scope="module")
+def assoc_res(grid_traces, cal_params):
+    return api.simulate(grid_traces, ALL_CORNERS, cal_params,
+                        backend="jax", method="assoc", attribution=True)
+
+
+def test_assoc_matches_scan_full_grid(scan_ref, assoc_res):
+    """Acceptance: float64-allclose cycles vs the scan on every paper
+    kernel x all 8 ablation corners x calibrated params."""
+    np.testing.assert_allclose(assoc_res.cycles, scan_ref.cycles,
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(assoc_res.busy_fpu, scan_ref.busy_fpu,
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(assoc_res.busy_bus, scan_ref.busy_bus,
+                               rtol=1e-9, atol=1e-6)
+
+
+def test_assoc_attribution_parity(scan_ref, assoc_res):
+    np.testing.assert_allclose(assoc_res.ideal, scan_ref.ideal,
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(assoc_res.stalls, scan_ref.stalls,
+                               rtol=1e-7, atol=1e-6)
+
+
+def test_assoc_attribution_sum_invariant(assoc_res):
+    """Exact accounting: ideal + sum(stalls) == cycles, stalls >= 0."""
+    total = assoc_res.ideal + assoc_res.stalls.sum(axis=-1)
+    np.testing.assert_allclose(total, assoc_res.cycles,
+                               rtol=1e-12, atol=1e-6)
+    assert assoc_res.stalls.min() >= -1e-6
+    assert assoc_res.ideal.min() >= 0.0
+
+
+def test_assoc_without_attribution(grid_traces, cal_params, scan_ref):
+    res = api.simulate(grid_traces, ALL_CORNERS, cal_params,
+                       backend="jax", method="assoc", attribution=False)
+    assert res.stalls is None and res.ideal is None
+    np.testing.assert_allclose(res.cycles, scan_ref.cycles,
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_basis_dim_and_bytes_estimate():
+    assert assoc_sim.basis_dim(10) == 8 + 30
+    small = assoc_sim.assoc_bytes(64, 1, 1, 4, attribution=False)
+    big = assoc_sim.assoc_bytes(4096, 11, 8, 10, attribution=True)
+    assert 0 < small < big
+
+
+def test_memory_guard(monkeypatch):
+    monkeypatch.setenv(assoc_sim.MEM_LIMIT_ENV, "1")
+    with pytest.raises(ValueError, match="scan"):
+        api.simulate(scal(64), [OptConfig.baseline()],
+                     backend="jax", method="assoc")
+
+
+def test_numpy_assoc_rejected():
+    with pytest.raises(ValueError, match="assoc"):
+        api.simulate(scal(64), [OptConfig.baseline()],
+                     backend="numpy", method="assoc")
+
+
+# --- Pallas-fused combine ---------------------------------------------------
+
+def test_pallas_matches_jnp():
+    """The Pallas kernel (interpreter mode on CPU) is bit-identical to
+    the jnp reference: values AND argmax binding indices, -inf included."""
+    from repro.core.pallas_step import tropical_compose
+    rng = np.random.default_rng(0)
+    for shape in ((3, 7, 7), (2, 5, 12, 12)):
+        a = rng.normal(size=shape) * 10
+        b = rng.normal(size=shape) * 10
+        a[rng.random(shape) < 0.3] = -np.inf
+        b[rng.random(shape) < 0.3] = -np.inf
+        cj, kj = tropical_compose(jax.numpy.asarray(b),
+                                  jax.numpy.asarray(a), use_pallas=False)
+        cp, kp = tropical_compose(jax.numpy.asarray(b),
+                                  jax.numpy.asarray(a), use_pallas=True,
+                                  interpret=True)
+        np.testing.assert_array_equal(np.asarray(cp), np.asarray(cj))
+        np.testing.assert_array_equal(np.asarray(kp), np.asarray(kj))
+
+
+def test_pallas_end_to_end_smoke(cal_params):
+    """Tiny grid through the assoc engine with the Pallas combine: must
+    agree with the jnp-combine path exactly."""
+    traces = [scal(128)]
+    ref = api.simulate(traces, [OptConfig.baseline(), OptConfig.full()],
+                       cal_params, backend="jax", method="assoc",
+                       attribution=True)
+    got = api.simulate(traces, [OptConfig.baseline(), OptConfig.full()],
+                       cal_params, backend="jax", method="assoc",
+                       attribution=True, use_pallas=True)
+    np.testing.assert_array_equal(got.cycles, ref.cycles)
+    np.testing.assert_array_equal(got.stalls, ref.stalls)
+
+
+# --- property test: random traces -------------------------------------------
+
+from trace_gen import build_trace, instr_tuples  # noqa: E402
+
+
+@given(raw=instr_tuples())
+@settings(max_examples=20, deadline=None)
+def test_property_assoc_matches_numpy_random_traces(raw):
+    """On arbitrary traces the assoc engine agrees with the numpy scan
+    (float64-allclose) and keeps the exact attribution-sum invariant."""
+    tr = build_trace(raw)
+    corners = (OptConfig.baseline(), OptConfig.full(),
+               OptConfig(True, False, True))
+    ref = api.simulate([tr], corners, SimParams(),
+                       backend="numpy", method="scan", attribution=True)
+    got = api.simulate([tr], corners, SimParams(),
+                       backend="jax", method="assoc", attribution=True)
+    np.testing.assert_allclose(got.cycles, ref.cycles,
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(got.ideal, ref.ideal,
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(got.stalls, ref.stalls,
+                               rtol=1e-7, atol=1e-6)
+    total = got.ideal + got.stalls.sum(axis=-1)
+    np.testing.assert_allclose(total, got.cycles, rtol=1e-12, atol=1e-6)

@@ -274,41 +274,12 @@ def test_timeline_rejects_cached_results(traces, params):
 
 
 # --- property test: random traces ------------------------------------------
+# (generator shared with test_assoc.py's parity property test)
 
-_REGS = ("v0", "v4", "v8", "v12", "v16", "v20")
-_KINDS = (OpKind.LOAD, OpKind.STORE, OpKind.COMPUTE, OpKind.REDUCE,
-          OpKind.SLIDE)
-_STRIDES = (Stride.UNIT, Stride.STRIDED, Stride.INDEXED)
+from trace_gen import build_trace as _build_trace  # noqa: E402
+from trace_gen import instr_tuples as _instr_tuples_fn  # noqa: E402
 
-_instr_tuples = st.lists(
-    st.tuples(st.integers(0, 4),       # kind
-              st.integers(1, 300),     # vl
-              st.integers(0, 5),       # dst register
-              st.integers(-1, 5),      # src 1 (-1: none)
-              st.integers(-1, 5),      # src 2 (-1: none)
-              st.integers(0, 2),       # stride
-              st.booleans(),           # first_strip
-              st.booleans()),          # divide op
-    min_size=3, max_size=24)
-
-
-def _build_trace(raw) -> KernelTrace:
-    instrs = []
-    for k, vl, dst, s1, s2, stride_i, first, isdiv in raw:
-        kind = _KINDS[k]
-        mem = kind in (OpKind.LOAD, OpKind.STORE)
-        srcs = tuple(_REGS[s] for s in (s1, s2) if s >= 0)
-        if kind is OpKind.STORE and not srcs:
-            srcs = (_REGS[dst],)
-        if kind is OpKind.LOAD:
-            srcs = srcs[:1] if _STRIDES[stride_i] is Stride.INDEXED else ()
-        name = "vfdiv" if (isdiv and kind is OpKind.COMPUTE) else "vop"
-        instrs.append(VInstr(
-            name=name, kind=kind, vl=vl, sew=4,
-            dst=None if kind is OpKind.STORE else _REGS[dst],
-            srcs=srcs, stride=_STRIDES[stride_i] if mem else Stride.UNIT,
-            flops=vl, stream="s", first_strip=first))
-    return KernelTrace("rand", tuple(instrs), total_flops=1, total_bytes=1)
+_instr_tuples = _instr_tuples_fn()
 
 
 @given(raw=_instr_tuples)

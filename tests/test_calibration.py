@@ -38,7 +38,7 @@ def test_check_backend_parity_rejects_divergence(monkeypatch):
     calls = {}
 
     def fake_losses(cands, traces, backend="numpy",
-                    attribution_weight=0.0):
+                    attribution_weight=0.0, method="scan"):
         calls[backend] = True
         return [1.0 if backend == "numpy" else 2.0]
 
