@@ -47,12 +47,19 @@ from repro.core.calibration import load as load_params  # noqa: E402
 from repro.core.isa import ABLATION_GRID, OptConfig  # noqa: E402
 from repro.core.simulator import AraSimulator  # noqa: E402
 from repro.core.traces import stack_traces  # noqa: E402
+from repro.obs import export as obs_export  # noqa: E402
+from repro.obs import spans as obs_spans  # noqa: E402
 
 BENCH_PATH = _REPO / "benchmarks" / "BENCH_simulate.json"
 
 #: Steady timings the drift gate compares (compile times are excluded:
 #: they move with jax versions and dominate nothing at steady state).
 GATED = ("scalar_loop_us", "numpy_scan_us", "jax_scan_us", "jax_assoc_us")
+
+#: Per-kernel microbench timings (entry["kernels"]) are gated too, but
+#: only for names recorded on both sides — the kernel set can grow
+#: without breaking old entries.
+KERNEL_GATE_EXCLUDE = ("naive_attention_model",)  # NaN: model-only row
 
 
 def machine_key() -> str:
@@ -67,6 +74,28 @@ def _first_call_us(fn) -> float:
     t0 = time.perf_counter()
     jax.block_until_ready(fn())
     return (time.perf_counter() - t0) * 1e6
+
+
+def _span_summary(spans) -> dict:
+    """Aggregate drained tracer spans into the committed BENCH summary:
+    per exec-leaf totals plus the jit compile-vs-execute split."""
+    recs = [obs_export._span_record(sp) for sp in spans]
+    agg = obs_export._aggregate_spans(recs)
+    exec_names = {n: {"calls": a["calls"],
+                      "total_us": round(a["total_us"], 1)}
+                  for n, a in sorted(agg.items())
+                  if n.startswith("exec.")}
+    compile_us = sum(a["total_us"] for n, a in agg.items()
+                     if n.startswith(obs_export.COMPILE_PREFIXES))
+    execute_us = sum(a["total_us"] for n, a in agg.items()
+                     if n.startswith(obs_export.EXECUTE_PREFIXES))
+    total = compile_us + execute_us
+    return {
+        "exec": exec_names,
+        "jit_compile_us": round(compile_us, 1),
+        "jit_execute_us": round(execute_us, 1),
+        "jit_compile_share": round(compile_us / total, 3) if total else 0.0,
+    }
 
 
 def measure() -> dict:
@@ -90,14 +119,24 @@ def measure() -> dict:
         return lambda: api.simulate(stacked, opts, params,
                                     backend=backend, method=method)
 
-    timings = {
-        "scalar_loop_us": timed(scalar_loop),
-        "numpy_scan_us": timed(run("numpy", "scan")),
-        "jax_scan_compile_us": _first_call_us(run("jax", "scan")),
-        "jax_scan_us": timed(run("jax", "scan")),
-        "jax_assoc_compile_us": _first_call_us(run("jax", "assoc")),
-        "jax_assoc_us": timed(run("jax", "assoc")),
-    }
+    # Trace the measurement itself so the committed entry carries the
+    # compile-vs-execute split behind its steady numbers.
+    was_enabled = obs_spans.enabled()
+    obs_spans.enable()
+    obs_spans.TRACER.drain()               # start from a clean collector
+    try:
+        timings = {
+            "scalar_loop_us": timed(scalar_loop),
+            "numpy_scan_us": timed(run("numpy", "scan")),
+            "jax_scan_compile_us": _first_call_us(run("jax", "scan")),
+            "jax_scan_us": timed(run("jax", "scan")),
+            "jax_assoc_compile_us": _first_call_us(run("jax", "assoc")),
+            "jax_assoc_us": timed(run("jax", "assoc")),
+        }
+        spans = obs_spans.TRACER.drain()
+    finally:
+        if not was_enabled:
+            obs_spans.disable()
     t = timings
     return {
         "recorded_at": time.strftime("%Y-%m-%d"),
@@ -112,7 +151,19 @@ def measure() -> dict:
             "scan_vs_assoc": round(
                 t["jax_scan_us"] / t["jax_assoc_us"], 3),
         },
+        "spans": _span_summary(spans),
     }
+
+
+def measure_kernels() -> dict:
+    """Smoke-profile per-kernel microbench timings (ROADMAP item 5:
+    the Pallas-kernel trajectory folded into the same machine-keyed
+    record).  Returns `{kernel_name: cpu_interpret_us}`, NaN rows
+    (model-only entries) skipped."""
+    from benchmarks import kernel_bench
+    rows = kernel_bench.run(profile="smoke", include_grid=False)
+    return {r["kernel"]: round(r["cpu_interpret_us"], 1) for r in rows
+            if r["cpu_interpret_us"] == r["cpu_interpret_us"]}  # drop NaN
 
 
 def load_records() -> dict:
@@ -135,6 +186,14 @@ def check(entry: dict, recorded: dict, tol: float) -> list[str]:
         if old and new > tol * old:
             problems.append(f"{name}: {new:.0f}us vs recorded "
                             f"{old:.0f}us (> {tol:g}x)")
+    # Per-kernel timings gate only where both sides measured the kernel.
+    for name, new in entry.get("kernels", {}).items():
+        if name in KERNEL_GATE_EXCLUDE:
+            continue
+        old = recorded.get("kernels", {}).get(name)
+        if old and new > tol * old:
+            problems.append(f"kernels.{name}: {new:.0f}us vs recorded "
+                            f"{old:.0f}us (> {tol:g}x)")
     return problems
 
 
@@ -147,6 +206,9 @@ def main(argv=None) -> int:
                          "recorded entry (records fresh if absent)")
     ap.add_argument("--tol", type=float, default=4.0,
                     help="allowed steady-timing slowdown factor")
+    ap.add_argument("--kernels", action="store_true",
+                    help="also measure the per-kernel microbench "
+                         "(kernel_bench smoke profile) into the entry")
     args = ap.parse_args(argv)
     if not (args.record or args.check):
         ap.error("pass --record and/or --check")
@@ -154,9 +216,21 @@ def main(argv=None) -> int:
     key = machine_key()
     records = load_records()
     entry = measure()
+    if args.kernels:
+        entry["kernels"] = measure_kernels()
+    elif key in records and "kernels" in records[key]:
+        # A kernels-less run must not silently drop the recorded
+        # trajectory (or its drift gate) — carry it forward unmeasured.
+        entry["kernels"] = records[key]["kernels"]
     print(f"# {key}: "
           + ", ".join(f"{k}={v}" for k, v in entry["timings"].items()))
     print(f"# ratios: {entry['ratios']}")
+    print(f"# spans: jit compile {entry['spans']['jit_compile_us']}us / "
+          f"execute {entry['spans']['jit_execute_us']}us "
+          f"(share {entry['spans']['jit_compile_share']})")
+    if args.kernels:
+        print("# kernels: "
+              + ", ".join(f"{k}={v}" for k, v in entry["kernels"].items()))
 
     rc = 0
     if args.check and key in records:

@@ -36,6 +36,8 @@ from repro.core.simulator import SimParams, SimResult  # noqa: E402
 from repro.core.traces import stack_traces  # noqa: E402
 from repro.launch.sweep_cache import (SweepCache, cell_key,  # noqa: E402
                                       trace_fingerprint)
+from repro.obs import export as obs_export  # noqa: E402
+from repro.obs import spans as obs_spans  # noqa: E402
 
 #: Problem sizes per profile (kernel -> positional args).
 PROFILE_SIZES: dict[str, dict[str, tuple]] = {
@@ -159,22 +161,26 @@ class Grid:
         # cache hit only re-simulates the absent columns (one batched
         # call per distinct missing-opt signature, usually just one).
         by_sig: dict[tuple[int, ...], list[str]] = {}
-        for tname, tr in traces.items():
-            fp = trace_fingerprint(tr)         # hash the stream once
-            sig = []
-            for oi, opt in enumerate(opts):
-                ck = cell_key(tr, opt, self.params, self.mc, trace_fp=fp)
-                keys[(tname, opt.label)] = ck
-                res = (self.cache.get_result(ck, tr.name,
-                                             attribution=attribution,
-                                             require_phases=attribution)
-                       if self.use_cache else None)
-                if res is None:
-                    sig.append(oi)
-                else:
-                    out[(tname, opt.label)] = res
-            if sig:
-                by_sig.setdefault(tuple(sig), []).append(tname)
+        with obs_spans.span("cache.lookup", n_traces=len(traces),
+                            n_opts=len(opts)) as lk:
+            for tname, tr in traces.items():
+                fp = trace_fingerprint(tr)     # hash the stream once
+                sig = []
+                for oi, opt in enumerate(opts):
+                    ck = cell_key(tr, opt, self.params, self.mc,
+                                  trace_fp=fp)
+                    keys[(tname, opt.label)] = ck
+                    res = (self.cache.get_result(
+                               ck, tr.name, attribution=attribution,
+                               require_phases=attribution)
+                           if self.use_cache else None)
+                    if res is None:
+                        sig.append(oi)
+                    else:
+                        out[(tname, opt.label)] = res
+                if sig:
+                    by_sig.setdefault(tuple(sig), []).append(tname)
+            lk.set(hit_cells=len(out))
 
         for sig, tnames in by_sig.items():
             run_opts = [opts[oi] for oi in sig]
@@ -215,6 +221,10 @@ class Grid:
                     out[(tname, opt.label)] = res
                     if persist:
                         self.cache.put_result(keys[(tname, opt.label)], res)
+        # All-hit grids never reach api.simulate (which flushes its own
+        # runlog records), so flush here too when an env target is set —
+        # a cache-served benchmark still leaves its lookup spans behind.
+        obs_export.flush()
         return out
 
     def param_cells(self, traces: Mapping[str, KernelTrace],

@@ -75,12 +75,22 @@ def batch_grid_rows() -> list[dict]:
     ]
 
 
-def run() -> list[dict]:
+#: Per-profile kernel sizes: ``default`` is the canonical microbench,
+#: ``smoke`` shrinks every kernel so `bench_record.py --kernels` can fold
+#: per-kernel numbers into BENCH_simulate.json within CI time budgets.
+KERNEL_SIZES = {
+    "default": {"n": 1 << 16, "gemm": 512, "attn_s": 512, "ssd_l": 512},
+    "smoke": {"n": 1 << 12, "gemm": 128, "attn_s": 128, "ssd_l": 128},
+}
+
+
+def run(profile: str = "default", include_grid: bool = True) -> list[dict]:
+    sz = KERNEL_SIZES[profile]
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 4)
     rows = []
 
-    n = 1 << 16
+    n = sz["n"]
     x, y, w = (jax.random.normal(k, (n,)) for k in ks[:3])
     for name, fn, fused in (("chain_fused", ops.fused_chain, True),
                             ("chain_unfused", ops.unfused_chain, False)):
@@ -92,7 +102,7 @@ def run() -> list[dict]:
             "hbm_bytes": b,
         })
 
-    m = kk = nn = 512
+    m = kk = nn = sz["gemm"]
     a = jax.random.normal(ks[0], (m, kk), jnp.float32)
     bmat = jax.random.normal(ks[1], (kk, nn), jnp.float32)
     bias = jax.random.normal(ks[2], (nn,), jnp.float32)
@@ -111,7 +121,7 @@ def run() -> list[dict]:
             "hbm_bytes": by,
         })
 
-    b_, s, h, d = 1, 512, 4, 64
+    b_, s, h, d = 1, sz["attn_s"], 4, 64
     q = jax.random.normal(ks[0], (b_, s, h, d), jnp.float32)
     kv = jax.random.normal(ks[1], (b_, s, h, d), jnp.float32)
     v = jax.random.normal(ks[2], (b_, s, h, d), jnp.float32)
@@ -128,21 +138,23 @@ def run() -> list[dict]:
             "hbm_bytes": by,
         })
 
-    xs = jax.random.normal(ks[0], (2, 512, 8, 64), jnp.float32)
-    dts = jax.nn.softplus(jax.random.normal(ks[1], (2, 512, 8)))
+    L = sz["ssd_l"]
+    xs = jax.random.normal(ks[0], (2, L, 8, 64), jnp.float32)
+    dts = jax.nn.softplus(jax.random.normal(ks[1], (2, L, 8)))
     a_ = -jnp.exp(jax.random.normal(ks[2], (8,)))
-    bs = jax.random.normal(ks[3], (2, 512, 1, 64), jnp.float32)
-    cs = jax.random.normal(ks[0], (2, 512, 1, 64), jnp.float32)
-    ssd_flops = 2 * 2 * 512 * 8 * (64 * 64 * 2 + 128 * 64)
+    bs = jax.random.normal(ks[3], (2, L, 1, 64), jnp.float32)
+    cs = jax.random.normal(ks[0], (2, L, 1, 64), jnp.float32)
+    ssd_flops = 2 * 2 * L * 8 * (64 * 64 * 2 + 128 * 64)
     ssd_bytes = (xs.size + bs.size + cs.size + xs.size) * 4
     rows.append({
-        "kernel": "ssd_chunked", "shape": "b2 l512 h8 p64 n64",
+        "kernel": "ssd_chunked", "shape": f"b2 l{L} h8 p64 n64",
         "cpu_interpret_us": timed(
             lambda: ops.ssd_batched(xs, dts, a_, bs, cs, chunk=128)),
         "tpu_roofline_us": _roofline_us(ssd_flops, ssd_bytes),
         "hbm_bytes": ssd_bytes,
     })
-    rows.extend(batch_grid_rows())
+    if include_grid:
+        rows.extend(batch_grid_rows())
     return rows
 
 

@@ -25,14 +25,19 @@ _TRACKS = {
 }
 
 
-def trace_events(trace: KernelTrace, result: SimResult) -> list[dict]:
-    """Chrome ``trace_event`` list for one simulated cell."""
+def trace_events(trace: KernelTrace, result: SimResult,
+                 pid: int = 0) -> list[dict]:
+    """Chrome ``trace_event`` list for one simulated cell.
+
+    ``pid`` selects the Perfetto process row — pass distinct pids to
+    merge several cells (or a cell plus host-side spans, see
+    `repro.obs.export.export_merged_trace`) into one file.
+    """
     if len(result.timings) != len(trace.instrs):
         raise ValueError(
             "result carries no per-instruction timings for this trace "
             "(cache-restored results cannot be exported; re-simulate with "
             "AraSimulator.run)")
-    pid = 0
     events: list[dict] = [{
         "name": "process_name", "ph": "M", "pid": pid,
         "args": {"name": f"{trace.name} [{result.kernel}]"},

@@ -22,18 +22,24 @@ capability:
   docs/backends.md (`resolve_plan` below) instead of the former CPU-only
   heuristic in `launch.sensitivity.resolve_backend`.
 
-`BatchAraSimulator.run` / `.sweep` survive as deprecation shims for one
-PR; the old-call → new-call mapping is documented in docs/architecture.md.
+The pre-API entrypoints `BatchAraSimulator.run` / `.sweep` are gone
+(deprecation shims lasted exactly one PR); the old-call → new-call
+mapping remains documented in docs/architecture.md.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Mapping, Sequence
 
+import time
+
 from repro.core.batch_sim import BatchAraSimulator, BatchResult
 from repro.core.isa import KernelTrace, MachineConfig, OptConfig
 from repro.core.simulator import SimParams
 from repro.core.traces import StackedTraces, stack_traces
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import spans as obs_spans
 
 __all__ = [
     "ExecutionPlan", "simulate", "resolve_plan", "have_jax",
@@ -119,9 +125,12 @@ def resolve_plan(*, backend: str = "auto", method: str = "auto",
     if backend == "auto":
         backend = ("jax" if width >= JAX_WIDTH_CROSSOVER
                    and jax_accelerator() else "numpy")
+        obs_metrics.counter("plan.auto_backend", backend).inc()
     if method == "auto":
         method = ("assoc" if backend == "jax" and jax_accelerator()
                   and n_instrs >= ASSOC_INSTR_CROSSOVER else "scan")
+        obs_metrics.counter("plan.auto_method", method).inc()
+    obs_metrics.counter("plan.resolved").inc()
     return ExecutionPlan(backend=backend, method=method,
                          attribution=attribution, p_chunk=p_chunk,
                          assoc_chunk=assoc_chunk, use_pallas=use_pallas)
@@ -157,7 +166,8 @@ def simulate(traces, opts: Sequence[OptConfig],
              backend: str = "auto", method: str = "auto",
              attribution: bool = False, p_chunk: int | None = None,
              assoc_chunk: int | None = None, use_pallas: bool = False,
-             sim: BatchAraSimulator | None = None) -> BatchResult:
+             sim: BatchAraSimulator | None = None,
+             runlog=None) -> BatchResult:
     """Evaluate the `(traces x opts x params)` grid under one resolved
     execution plan.
 
@@ -166,20 +176,52 @@ def simulate(traces, opts: Sequence[OptConfig],
     resolved by `resolve_plan` (pass concrete values to pin them); `sim`
     optionally reuses a caller-owned `BatchAraSimulator` (its compiled
     jax programs) instead of the shared per-`mc` instance.
+
+    ``runlog`` (or the ``REPRO_RUNLOG`` env var) names a JSON-lines file
+    to append this call's span tree and a metrics snapshot to; it
+    enables the tracer for the call if it was off (docs/observability.md).
     """
-    stacked = _as_stacked(traces)
-    opts = list(opts)
-    if isinstance(params, SimParams):
-        params = [params]
-    params = list(params)
-    plan = resolve_plan(backend=backend, method=method,
-                        width=len(opts) * len(params),
-                        n_instrs=int(stacked.kind.shape[1]),
-                        attribution=attribution, p_chunk=p_chunk,
-                        assoc_chunk=assoc_chunk, use_pallas=use_pallas)
-    simulator = sim if sim is not None else _shared_sim(mc)
-    return simulator._run(stacked, opts, params, backend=plan.backend,
-                          attribution=plan.attribution,
-                          p_chunk=plan.p_chunk, method=plan.method,
-                          assoc_chunk=plan.assoc_chunk,
-                          use_pallas=plan.use_pallas)
+    target = obs_export.runlog_target(runlog)
+    was_enabled = obs_spans.enabled()
+    if target is not None and not was_enabled:
+        obs_spans.enable()
+    t0 = time.perf_counter()
+    try:
+        with obs_spans.span("simulate") as root:
+            with obs_spans.span("traces.stack"):
+                stacked = _as_stacked(traces)
+            opts = list(opts)
+            if isinstance(params, SimParams):
+                params = [params]
+            params = list(params)
+            with obs_spans.span("plan.resolve"):
+                plan = resolve_plan(backend=backend, method=method,
+                                    width=len(opts) * len(params),
+                                    n_instrs=int(stacked.kind.shape[1]),
+                                    attribution=attribution,
+                                    p_chunk=p_chunk,
+                                    assoc_chunk=assoc_chunk,
+                                    use_pallas=use_pallas)
+            root.set(backend=plan.backend, method=plan.method,
+                     attribution=plan.attribution,
+                     n_traces=int(stacked.kind.shape[0]),
+                     n_opts=len(opts), n_params=len(params))
+            simulator = sim if sim is not None else _shared_sim(mc)
+            with obs_spans.span("exec", backend=plan.backend,
+                                method=plan.method):
+                result = simulator._run(
+                    stacked, opts, params, backend=plan.backend,
+                    attribution=plan.attribution, p_chunk=plan.p_chunk,
+                    method=plan.method, assoc_chunk=plan.assoc_chunk,
+                    use_pallas=plan.use_pallas)
+        obs_metrics.counter("simulate.calls").inc()
+        obs_metrics.counter("simulate.cells").inc(
+            stacked.kind.shape[0] * len(opts) * len(params))
+        obs_metrics.histogram("simulate.wall_us").observe(
+            (time.perf_counter() - t0) * 1e6)
+        return result
+    finally:
+        if target is not None:
+            obs_export.flush(target)
+            if not was_enabled:
+                obs_spans.disable()

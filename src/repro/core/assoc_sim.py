@@ -73,6 +73,8 @@ from repro.core.stalls import (DEP_ISSUE_GAP, DEP_WAR_RELEASE, IDEAL,
                                OPR_BANK_CONFLICT, OPR_CHAIN_DELAY,
                                OPR_QUEUE_LIMIT)
 from repro.core.traces import PAD, StackedTraces
+from repro.obs import metrics as obs_metrics
+from repro.obs import spans as obs_spans
 
 _LOAD, _STORE, _COMPUTE, _REDUCE, _SLIDE = 0, 1, 2, 3, 4
 _UNIT, _STRIDED, _INDEXED = 0, 1, 2
@@ -582,6 +584,11 @@ def _build_assoc(mc: MachineConfig, attribution: bool, use_pallas: bool):
 
 _FNS: dict[tuple, object] = {}
 
+#: (fn key, shape signature) pairs already traced by jit — used to label
+#: the first call on a fresh signature as "exec.assoc.compile" vs the
+#: cached-callable "exec.assoc.execute" (see docs/observability.md).
+_SEEN: set[tuple] = set()
+
 
 def _get_fn(mc: MachineConfig, attribution: bool, use_pallas: bool):
     key = (dataclasses.astuple(mc), bool(attribution), bool(use_pallas))
@@ -612,6 +619,8 @@ def run_assoc(mc: MachineConfig, st: StackedTraces, view,
     W = view.width
     est = assoc_bytes(I, B, W, R, attribution, chunk)
     limit = float(os.environ.get(MEM_LIMIT_ENV, DEFAULT_MEM_LIMIT))
+    obs_metrics.gauge("assoc.mem_estimate_bytes").set(est)
+    obs_metrics.gauge("assoc.mem_headroom_bytes").set(limit - est)
     if est > limit:
         raise ValueError(
             f"assoc transfer matrices would need ~{est / 2**30:.1f} GiB "
@@ -623,10 +632,18 @@ def run_assoc(mc: MachineConfig, st: StackedTraces, view,
     views = dataclasses.astuple(view)
     with enable_x64():
         fn = _get_fn(mc, attribution, use_pallas)
-        cyc, comp, fo, cp, bs = fn(fields, views, R, B)
-        cyc = np.asarray(cyc)
-        comp = np.asarray(comp) if attribution else None
-        fo, cp, bs = (np.asarray(a) for a in (fo, cp, bs))
+        sig = (dataclasses.astuple(mc), bool(attribution),
+               bool(use_pallas), st.kind.shape, st.srcs.shape[2], W, R,
+               chunk)
+        name = ("exec.assoc.compile" if sig not in _SEEN
+                else "exec.assoc.execute")
+        with obs_spans.span(name, batch=B, width=W, n_instrs=I,
+                            chunk=chunk):
+            cyc, comp, fo, cp, bs = fn(fields, views, R, B)
+            cyc = np.asarray(cyc)
+            comp = np.asarray(comp) if attribution else None
+            fo, cp, bs = (np.asarray(a) for a in (fo, cp, bs))
+        _SEEN.add(sig)
 
     def im(a):            # (L, nC*B, W) -> (I, B, W)
         a = a.reshape(chunk, n_chunks, B, W).transpose(1, 0, 2, 3)

@@ -31,8 +31,9 @@ A third execution strategy, ``method="assoc"`` (jax-only, implemented in
 `repro.core.assoc_sim`), recasts the same recurrence as composable
 max-plus transfer matrices and runs `jax.lax.associative_scan` over the
 instruction axis for log-depth evaluation.  The public entrypoint for
-choosing among all of these is `repro.core.api.simulate`; the `run` /
-`sweep` methods below are deprecation shims kept for one PR.
+choosing among all of these is `repro.core.api.simulate` — the former
+`run` / `sweep` deprecation shims are gone (they lasted exactly one PR;
+docs/architecture.md keeps the call mapping).
 
 Deviation attribution (``attribution=True``): the scan carries the same
 component vectors as `AraSimulator.run` — every hazard state array gains a
@@ -55,19 +56,19 @@ paper's ``(dp, II_eff, dt)`` deviation triple per cell: the earliest lane
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Sequence
 
 import numpy as np
 
-from repro.core.isa import KernelTrace, MachineConfig, OptConfig
+from repro.core.isa import MachineConfig, OptConfig
 from repro.core.simulator import SimParams
 from repro.core.stalls import (DEP_ISSUE_GAP, DEP_WAR_RELEASE, IDEAL,
                                MEM_DEMAND_LATENCY, MEM_RW_TURNAROUND,
                                MEM_STORE_COMMIT, MEM_TX_OVERHEAD, NCOMP,
                                OPR_BANK_CONFLICT, OPR_CHAIN_DELAY,
                                OPR_QUEUE_LIMIT)
-from repro.core.traces import PAD, StackedTraces, stack_traces
+from repro.core.traces import PAD, StackedTraces
+from repro.obs import spans as obs_spans
 
 _LOAD, _STORE, _COMPUTE, _REDUCE, _SLIDE = 0, 1, 2, 3, 4
 _UNIT, _STRIDED, _INDEXED = 0, 1, 2
@@ -226,40 +227,15 @@ class BatchAraSimulator:
         # Compiled jax programs, keyed by attribution flag (the component-
         # carrying scan is a different program than the plain one).
         self._jax_fns: dict[bool, object] = {}
-
-    # -- public API (deprecation shims over `repro.core.api.simulate`) ------
-    def run(self, stacked: StackedTraces, opts: Sequence[OptConfig],
-            params: SimParams | Sequence[SimParams] = SimParams(),
-            backend: str = "numpy",
-            attribution: bool = False,
-            p_chunk: int | None = None) -> BatchResult:
-        """Deprecated direct-kwarg entrypoint; use
-        `repro.core.api.simulate` (docs/architecture.md has the call
-        mapping).  Kept working for one PR."""
-        warnings.warn(
-            "BatchAraSimulator.run(stacked, ...) is deprecated; use "
-            "repro.core.api.simulate(traces, opts, params, backend=..., "
-            "method=...) — see docs/architecture.md for the mapping",
-            DeprecationWarning, stacklevel=2)
-        return self._run(stacked, opts, params, backend=backend,
-                         attribution=attribution, p_chunk=p_chunk)
-
-    def sweep(self, traces: Sequence[KernelTrace],
-              opts: Sequence[OptConfig],
-              params: SimParams | Sequence[SimParams] = SimParams(),
-              backend: str = "numpy",
-              attribution: bool = False) -> BatchResult:
-        """Deprecated; `repro.core.api.simulate` accepts raw trace
-        sequences directly."""
-        warnings.warn(
-            "BatchAraSimulator.sweep(traces, ...) is deprecated; use "
-            "repro.core.api.simulate(traces, opts, params, ...) — see "
-            "docs/architecture.md for the mapping",
-            DeprecationWarning, stacklevel=2)
-        return self._run(stack_traces(traces), opts, params,
-                         backend=backend, attribution=attribution)
+        # Shape signatures already traced+compiled by jit: first call on
+        # a fresh signature is reported as the "compile" span, later
+        # calls as "execute" (the first-call vs cached-callable split).
+        self._jax_seen: set[tuple] = set()
 
     # -- engine dispatch ----------------------------------------------------
+    # (`repro.core.api.simulate` is the public entrypoint; the former
+    # `run`/`sweep` deprecation shims were dropped after their one-PR
+    # grace period — docs/architecture.md keeps the call mapping.)
     def _run(self, stacked: StackedTraces, opts: Sequence[OptConfig],
              params: SimParams | Sequence[SimParams] = SimParams(),
              backend: str = "numpy",
@@ -267,7 +243,8 @@ class BatchAraSimulator:
              p_chunk: int | None = None,
              method: str = "scan",
              assoc_chunk: int | None = None,
-             use_pallas: bool = False) -> BatchResult:
+             use_pallas: bool = False,
+             _chunk_lo: int = 0) -> BatchResult:
         """Evaluate the `(trace x opt x params)` grid.
 
         ``method`` picks the instruction-axis algorithm: ``scan`` is the
@@ -299,26 +276,37 @@ class BatchAraSimulator:
             for lo in range(0, len(params), p_chunk):
                 chunk = params[lo:lo + p_chunk]
                 pad = p_chunk - len(chunk) if backend == "jax" else 0
-                part = self._run(stacked, opts, chunk + [chunk[-1]] * pad,
-                                 backend=backend, attribution=attribution,
+                part = self._run(stacked, opts,
+                                 chunk + [chunk[-1]] * pad,
+                                 backend=backend,
+                                 attribution=attribution,
                                  method=method, assoc_chunk=assoc_chunk,
-                                 use_pallas=use_pallas)
+                                 use_pallas=use_pallas,
+                                 _chunk_lo=lo)
                 parts.append(_slice_p(part, len(chunk)) if pad else part)
             return _concat_p(parts)
         view = make_views(opts, params)
-        if method == "assoc":
-            from repro.core import assoc_sim
-            cyc, bf, bb, comp, lfo, ffo, fst = assoc_sim.run_assoc(
-                self.mc, stacked, view, attribution,
-                chunk=assoc_chunk, use_pallas=use_pallas)
-        elif backend == "numpy":
-            cyc, bf, bb, comp, lfo, ffo, fst = self._run_numpy(
-                stacked, view, attribution)
-        elif backend == "jax":
-            cyc, bf, bb, comp, lfo, ffo, fst = self._run_jax(
-                stacked, view, attribution)
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
+        # One exec.p_chunk span per executed params slice — an unchunked
+        # run is a single chunk at lo=0, so the span tree has the same
+        # shape either way (docs/observability.md).
+        with obs_spans.span("exec.p_chunk", lo=_chunk_lo,
+                            size=len(params), width=view.width):
+            if method == "assoc":
+                from repro.core import assoc_sim
+                cyc, bf, bb, comp, lfo, ffo, fst = assoc_sim.run_assoc(
+                    self.mc, stacked, view, attribution,
+                    chunk=assoc_chunk, use_pallas=use_pallas)
+            elif backend == "numpy":
+                with obs_spans.span("exec.numpy.scan",
+                                    batch=stacked.batch,
+                                    width=view.width):
+                    cyc, bf, bb, comp, lfo, ffo, fst = self._run_numpy(
+                        stacked, view, attribution)
+            elif backend == "jax":
+                cyc, bf, bb, comp, lfo, ffo, fst = self._run_jax(
+                    stacked, view, attribution)
+            else:
+                raise ValueError(f"unknown backend {backend!r}")
         shape = (stacked.batch, len(opts), len(params))
         return BatchResult(names=stacked.names,
                            cycles=cyc.reshape(shape),
@@ -706,7 +694,15 @@ class BatchAraSimulator:
             fields = _jax_fields(st)
             views = dataclasses.astuple(v)
             R = max(st.max_regs, 1)
-            cyc, bf, bb, lfo, ffo, fst, comp = fn(fields, views, R)
+            sig = (attribution, st.kind.shape, st.srcs.shape[2],
+                   v.width, R)
+            fresh = sig not in self._jax_seen
+            name = "exec.jax.compile" if fresh else "exec.jax.execute"
+            with obs_spans.span(name, batch=st.batch, width=v.width,
+                                n_instrs=int(st.kind.shape[1])):
+                cyc, bf, bb, lfo, ffo, fst, comp = fn(fields, views, R)
+                cyc.block_until_ready()
+            self._jax_seen.add(sig)
         return (np.asarray(cyc), np.asarray(bf), np.asarray(bb),
                 np.asarray(comp) if attribution else None,
                 np.asarray(lfo), np.asarray(ffo), np.asarray(fst))

@@ -36,6 +36,8 @@ from repro.core.roofline import normalized
 from repro.core.simulator import SimParams
 from repro.core.stalls import PATH_NAMES, STALL_CATEGORIES, path_sums
 from repro.core.traces import DEFAULT_TRACES, stack_traces
+from repro.obs import metrics as obs_metrics
+from repro.obs import spans as obs_spans
 
 # Parameter search space: (name, lo, hi).  tx_ovh is bounded low because
 # back-to-back unit-stride loads stream efficiently even in baseline Ara
@@ -113,11 +115,17 @@ def evaluate_many(params_list: Sequence[SimParams],
     see `repro.core.api.simulate`)."""
     traces = traces or _traces()
     names = list(traces)
+    params_list = list(params_list)
+    obs_metrics.counter("calibration.populations").inc()
+    obs_metrics.counter("calibration.candidates").inc(len(params_list))
     stacked = stack_traces([traces[k] for k in names])
-    res = api.simulate(stacked, _CONFIGS, list(params_list),
-                       backend=backend, method=method,
-                       assoc_chunk=assoc_chunk,
-                       attribution=attribution, sim=_SIM)
+    with obs_spans.span("calibration.evaluate",
+                        candidates=len(params_list), backend=backend,
+                        method=method):
+        res = api.simulate(stacked, _CONFIGS, params_list,
+                           backend=backend, method=method,
+                           assoc_chunk=assoc_chunk,
+                           attribution=attribution, sim=_SIM)
     cycles = res.cycles                        # (kernel, config, candidate)
     gflops = res.gflops
     if attribution:

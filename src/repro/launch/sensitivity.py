@@ -55,6 +55,8 @@ from repro.core.traces import stack_traces
 from repro.launch.sweep_cache import (SweepCache, cell_key,
                                       params_fingerprint,
                                       trace_fingerprint)
+from repro.obs import metrics as obs_metrics
+from repro.obs import spans as obs_spans
 
 #: Critical path each `SimParams` knob acts on (docs/sensitivity.md
 #: documents the same mapping; `div_factor` is inherent serialization —
@@ -290,32 +292,38 @@ def run_grid(traces: Mapping[str, KernelTrace],
     params_list = list(params_list)
     cache = cache if cache is not None else SweepCache()
     simulator = sim if sim is not None else BatchAraSimulator(mc)
+    obs_metrics.counter("sensitivity.cells").inc(
+        len(traces) * len(opts) * len(params_list))
 
     out: dict[tuple[str, str, int], SimResult] = {}
     keys: dict[tuple[str, str, int], str] = {}
     by_sig: dict[tuple[tuple[int, ...], tuple[int, ...]], list[str]] = {}
-    for tname, tr in traces.items():
-        fp = trace_fingerprint(tr)         # hash the stream once
-        missing: set[tuple[int, int]] = set()
-        for pi, p in enumerate(params_list):
-            for oi, opt in enumerate(opts):
-                ck = cell_key(tr, opt, p, mc, trace_fp=fp)
-                keys[(tname, opt.label, pi)] = ck
-                res = (cache.get_result(ck, tr.name,
-                                        attribution=attribution,
-                                        require_phases=attribution)
-                       if use_cache else None)
-                if res is None:
-                    missing.add((oi, pi))
-                else:
-                    out[(tname, opt.label, pi)] = res
-        if missing:
-            # Run the bounding (opts x params) product of the missing
-            # cells: designs re-run all-or-nothing in practice, so the
-            # product rarely exceeds the miss set.
-            sig = (tuple(sorted({oi for oi, _ in missing})),
-                   tuple(sorted({pi for _, pi in missing})))
-            by_sig.setdefault(sig, []).append(tname)
+    with obs_spans.span("cache.lookup", n_traces=len(traces),
+                        n_opts=len(opts),
+                        n_params=len(params_list)) as lk:
+        for tname, tr in traces.items():
+            fp = trace_fingerprint(tr)     # hash the stream once
+            missing: set[tuple[int, int]] = set()
+            for pi, p in enumerate(params_list):
+                for oi, opt in enumerate(opts):
+                    ck = cell_key(tr, opt, p, mc, trace_fp=fp)
+                    keys[(tname, opt.label, pi)] = ck
+                    res = (cache.get_result(ck, tr.name,
+                                            attribution=attribution,
+                                            require_phases=attribution)
+                           if use_cache else None)
+                    if res is None:
+                        missing.add((oi, pi))
+                    else:
+                        out[(tname, opt.label, pi)] = res
+            if missing:
+                # Run the bounding (opts x params) product of the missing
+                # cells: designs re-run all-or-nothing in practice, so the
+                # product rarely exceeds the miss set.
+                sig = (tuple(sorted({oi for oi, _ in missing})),
+                       tuple(sorted({pi for _, pi in missing})))
+                by_sig.setdefault(sig, []).append(tname)
+        lk.set(hit_cells=len(out))
 
     for (ois, pis), tnames in by_sig.items():
         run_opts = [opts[oi] for oi in ois]

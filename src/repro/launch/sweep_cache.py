@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.isa import KernelTrace, MachineConfig, OptConfig
 from repro.core.simulator import SimParams, SimResult
+from repro.obs import metrics as obs_metrics
 
 _REPO = pathlib.Path(__file__).resolve().parents[3]
 DEFAULT_ROOT = _REPO / "experiments" / "sweep_cache"
@@ -111,6 +112,11 @@ class SweepCache:
     collected down to a 90% watermark (amortizing the GC scan while a
     sweep fills the store).  Every read bumps a cell's mtime, so hot
     cells survive eviction regardless of which instance runs the GC.
+
+    Accounting: `hits`/`misses`/`evictions` count this instance's
+    lookups and GC removals (`stats()` bundles them); the same events
+    feed the process-wide `repro.obs.metrics` registry under
+    ``sweep_cache.*`` so runlogs report cache behavior across instances.
     """
 
     def __init__(self, root: str | os.PathLike | None = None,
@@ -118,6 +124,7 @@ class SweepCache:
         self.root = pathlib.Path(root) if root is not None else DEFAULT_ROOT
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         if max_entries is not None and max_entries < 1:
             raise ValueError("max_entries must be >= 1")
         self.max_entries = max_entries
@@ -135,14 +142,13 @@ class SweepCache:
     def __len__(self) -> int:
         return len(self._entries())
 
-    def get(self, key: str) -> dict | None:
+    def _read(self, key: str) -> dict | None:
+        """Uncounted read (callers classify hit/miss themselves)."""
         p = self._path(key)
         try:
             value = json.loads(p.read_text())
         except (FileNotFoundError, json.JSONDecodeError):
-            self.misses += 1
             return None
-        self.hits += 1
         # LRU touch unconditionally: GC may run from a *different*
         # SweepCache instance (or an operator's prune call), and eviction
         # must still see read-hot cells as recently used.
@@ -152,13 +158,28 @@ class SweepCache:
             pass
         return value
 
+    def _count_lookup(self, hit: bool) -> None:
+        if hit:
+            self.hits += 1
+            obs_metrics.counter("sweep_cache.hits").inc()
+        else:
+            self.misses += 1
+            obs_metrics.counter("sweep_cache.misses").inc()
+
+    def get(self, key: str) -> dict | None:
+        value = self._read(key)
+        self._count_lookup(value is not None)
+        return value
+
     def put(self, key: str, value: dict) -> None:
         p = self._path(key)
         p.parent.mkdir(parents=True, exist_ok=True)
         existed = p.exists()
         tmp = p.with_suffix(".tmp")
-        tmp.write_text(json.dumps(value, sort_keys=True))
+        blob = json.dumps(value, sort_keys=True)
+        tmp.write_text(blob)
         os.replace(tmp, p)
+        obs_metrics.counter("sweep_cache.put_bytes").inc(len(blob))
         if self.max_entries is not None:
             # Other instances/processes may insert into the same root, so
             # the local count is re-synced from disk periodically instead
@@ -183,13 +204,12 @@ class SweepCache:
         re-simulates with accounting on; `require_phases` additionally
         demands the phase-split columns (grid attribution passes store
         them alongside the stall vector)."""
-        v = self.get(key)
-        if v is None:
-            return None
-        if (attribution and "stalls" not in v) or \
-                (require_phases and "phases" not in v):
-            self.hits -= 1
-            self.misses += 1
+        v = self._read(key)
+        usable = v is not None and not (
+            (attribution and "stalls" not in v)
+            or (require_phases and "phases" not in v))
+        self._count_lookup(usable)
+        if not usable:
             return None
         stalls = (np.asarray(v["stalls"], np.float64)
                   if "stalls" in v else None)
@@ -233,9 +253,19 @@ class SweepCache:
         for p in doomed:
             p.unlink(missing_ok=True)
             removed += 1
+        self.evictions += removed
+        if removed:
+            obs_metrics.counter("sweep_cache.evictions").inc(removed)
         if self._count is not None:
             self._count = max(self._count - removed, 0)
         return removed
+
+    def stats(self) -> dict:
+        """This instance's lookup/eviction accounting (cumulative)."""
+        lookups = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": (self.hits / lookups) if lookups else 0.0}
 
 
 def _mtime_or_gone(p: pathlib.Path) -> float:

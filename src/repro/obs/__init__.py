@@ -1,0 +1,15 @@
+"""Telemetry substrate: spans, metrics, runlog/trace export.
+
+- `repro.obs.spans` — nested wall-clock spans over simulate() phases.
+- `repro.obs.metrics` — process-local counters/gauges/histograms.
+- `repro.obs.export` — JSON-lines runlog, Chrome-trace merge with
+  `analysis/timeline.py`, and `summarize_runlog()`.
+
+See docs/observability.md for the span taxonomy and metric table.
+"""
+from repro.obs.spans import span, enable, disable, enabled, TRACER  # noqa: F401
+from repro.obs.metrics import REGISTRY, KNOWN_METRICS  # noqa: F401
+from repro.obs.export import (  # noqa: F401
+    flush, read_runlog, runlog_target, summarize_runlog,
+    export_merged_trace,
+)

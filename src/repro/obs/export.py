@@ -1,0 +1,286 @@
+"""Runlog emission, Chrome-trace export, and runlog summaries.
+
+Three consumers of the span tracer + metrics registry:
+
+1. **JSON-lines runlog** — `flush()` appends every finished span plus a
+   cumulative metrics snapshot to a file.  Target resolution:
+   ``simulate(..., runlog=path)`` wins, else the ``REPRO_RUNLOG`` env
+   var.  Lines are self-describing (``{"kind": "span"|"metrics", ...}``)
+   so the file survives schema growth and concatenation across runs.
+2. **Chrome ``trace_event`` export** — host spans become "X" complete
+   events on per-thread tracks under their own pid, deliberately the
+   same schema `analysis/timeline.py` emits for simulated-Ara Gantt
+   rows; `export_merged_trace` places both in one file so a Perfetto
+   view shows the simulator's wall-clock above the machine it simulated.
+   Units differ by design: host spans are real microseconds, simulated
+   rows are cycles-as-microseconds — the per-process rows keep them
+   visually separate.
+3. **`summarize_runlog()`** — terminal-friendly report: top spans by
+   total and self time, jax compile-vs-execute share, cache hit rate.
+
+`check_metric_names` closes the docs loop: any metric name recorded in
+a runlog that is missing from `metrics.KNOWN_METRICS` is a CI failure
+(and KNOWN_METRICS itself is synced against docs/observability.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+from repro.obs import metrics as _metrics
+from repro.obs import spans as _spans
+
+__all__ = ["RUNLOG_ENV", "runlog_target", "flush", "read_runlog",
+           "chrome_events_from_spans", "export_merged_trace",
+           "summarize_runlog", "check_metric_names"]
+
+RUNLOG_ENV = "REPRO_RUNLOG"
+
+#: Span leaves whose names start with these prefixes count as "compile"
+#: (first call on a fresh shape signature: trace + lower + XLA compile)
+#: vs. "execute" (cached callable) in the runlog summary.
+COMPILE_PREFIXES = ("exec.jax.compile", "exec.assoc.compile")
+EXECUTE_PREFIXES = ("exec.jax.execute", "exec.assoc.execute")
+
+
+def runlog_target(explicit=None) -> pathlib.Path | None:
+    """Resolve the runlog destination: explicit arg, else $REPRO_RUNLOG."""
+    if explicit:
+        return pathlib.Path(explicit)
+    env = os.environ.get(RUNLOG_ENV)
+    return pathlib.Path(env) if env else None
+
+
+def _span_record(sp: _spans.Span) -> dict:
+    rec = {"kind": "span", "name": sp.name, "sid": sp.sid,
+           "parent": sp.parent, "tid": sp.tid, "start": sp.start,
+           "end": sp.end, "dur_us": sp.duration * 1e6}
+    if sp.attrs:
+        rec["attrs"] = sp.attrs
+    return rec
+
+
+def flush(target=None, tracer: _spans.Tracer | None = None,
+          registry: _metrics.Registry | None = None) -> pathlib.Path | None:
+    """Drain finished spans and append them + a metrics snapshot.
+
+    No-op (returns None) when no target resolves.  The metrics record is
+    cumulative — the *last* one in a file is the run's final state, and
+    `summarize_runlog` reads it that way.
+    """
+    path = runlog_target(target)
+    if path is None:
+        return None
+    tracer = tracer or _spans.TRACER
+    registry = registry or _metrics.REGISTRY
+    lines = [json.dumps(_span_record(sp), sort_keys=True)
+             for sp in tracer.drain()]
+    lines.append(json.dumps(
+        {"kind": "metrics", "metrics": registry.snapshot()},
+        sort_keys=True))
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with path.open("a") as fh:
+        fh.write("\n".join(lines) + "\n")
+    return path
+
+
+def read_runlog(path) -> list[dict]:
+    """Parse a JSON-lines runlog back into records (blank lines skipped)."""
+    out = []
+    for line in pathlib.Path(path).read_text().splitlines():
+        line = line.strip()
+        if line:
+            out.append(json.loads(line))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace_event export
+
+#: pid for the host-span process row; simulated cells get 1, 2, ... so
+#: every row in the merged file has a distinct process header.
+HOST_PID = 0
+
+
+def chrome_events_from_spans(span_records, pid: int = HOST_PID,
+                             label: str = "simulate() host") -> list[dict]:
+    """Map runlog span records (or Span objects) to Chrome "X" events.
+
+    Timestamps are rebased so the earliest span starts at ts=0; spans
+    keep perf_counter precision in microseconds.
+    """
+    recs = [_span_record(sp) if isinstance(sp, _spans.Span) else sp
+            for sp in span_records]
+    recs = [r for r in recs if r.get("kind", "span") == "span"
+            and r.get("end") is not None]
+    events: list[dict] = [{
+        "name": "process_name", "ph": "M", "pid": pid,
+        "args": {"name": label},
+    }]
+    if not recs:
+        return events
+    t0 = min(r["start"] for r in recs)
+    for tid in sorted({r.get("tid", 0) for r in recs}):
+        events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                       "tid": tid, "args": {"name": f"host thread {tid}"}})
+    for r in recs:
+        args = {"sid": r["sid"], "parent": r["parent"]}
+        args.update(r.get("attrs", {}))
+        events.append({
+            "name": r["name"],
+            "cat": "host",
+            "ph": "X",
+            "pid": pid,
+            "tid": r.get("tid", 0),
+            "ts": (r["start"] - t0) * 1e6,
+            "dur": r["dur_us"],
+            "args": args,
+        })
+    return events
+
+
+def export_merged_trace(path, span_records, cells=()) -> pathlib.Path:
+    """One Perfetto-loadable file: host spans + simulated-Ara Gantt rows.
+
+    ``cells`` is an iterable of ``(trace, result)`` pairs as accepted by
+    `analysis.timeline.trace_events`; each gets its own pid row below
+    the host process.
+    """
+    from repro.analysis.timeline import trace_events  # cycle-free, lazy
+
+    events = chrome_events_from_spans(span_records, pid=HOST_PID)
+    for i, (trace, result) in enumerate(cells):
+        events.extend(trace_events(trace, result, pid=HOST_PID + 1 + i))
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(
+        {"traceEvents": events, "displayTimeUnit": "ms"}, indent=1))
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Runlog summary
+
+
+def _aggregate_spans(records):
+    """Per-name totals: calls, total us, self us (total minus children)."""
+    spans = [r for r in records if r.get("kind") == "span"]
+    by_sid = {r["sid"]: r for r in spans}
+    child_us: dict[int, float] = {}
+    for r in spans:
+        parent = r.get("parent")
+        if parent in by_sid:
+            child_us[parent] = child_us.get(parent, 0.0) + r["dur_us"]
+    agg: dict[str, dict] = {}
+    for r in spans:
+        a = agg.setdefault(r["name"], {"calls": 0, "total_us": 0.0,
+                                       "self_us": 0.0})
+        a["calls"] += 1
+        a["total_us"] += r["dur_us"]
+        a["self_us"] += max(r["dur_us"] - child_us.get(r["sid"], 0.0), 0.0)
+    return agg
+
+
+def _metric_value(metric_records, name, label=None):
+    for m in metric_records:
+        if m["name"] == name and m.get("label") == label:
+            return m["value"]
+    return None
+
+
+def _sum_metric(metric_records, name):
+    vals = [m["value"] for m in metric_records if m["name"] == name]
+    return sum(vals) if vals else None
+
+
+def summarize_runlog(path, top: int = 12) -> str:
+    """Human-readable report over a runlog file."""
+    records = read_runlog(path)
+    agg = _aggregate_spans(records)
+    metric_blocks = [r for r in records if r.get("kind") == "metrics"]
+    final_metrics = metric_blocks[-1]["metrics"] if metric_blocks else []
+
+    lines = [f"runlog: {path}",
+             f"spans: {sum(a['calls'] for a in agg.values())} across "
+             f"{len(agg)} names"]
+
+    if agg:
+        lines.append("")
+        lines.append(f"{'span':<28}{'calls':>7}{'total ms':>11}"
+                     f"{'self ms':>10}")
+        ordered = sorted(agg.items(), key=lambda kv: -kv[1]["total_us"])
+        for name, a in ordered[:top]:
+            lines.append(f"{name:<28}{a['calls']:>7}"
+                         f"{a['total_us'] / 1e3:>11.2f}"
+                         f"{a['self_us'] / 1e3:>10.2f}")
+
+    compile_us = sum(a["total_us"] for n, a in agg.items()
+                     if n.startswith(COMPILE_PREFIXES))
+    execute_us = sum(a["total_us"] for n, a in agg.items()
+                     if n.startswith(EXECUTE_PREFIXES))
+    if compile_us or execute_us:
+        total = compile_us + execute_us
+        lines.append("")
+        lines.append(
+            f"jit compile/execute: {compile_us / 1e3:.2f} ms / "
+            f"{execute_us / 1e3:.2f} ms "
+            f"(compile share {100.0 * compile_us / total:.1f}%)")
+
+    hits = _sum_metric(final_metrics, "sweep_cache.hits")
+    misses = _sum_metric(final_metrics, "sweep_cache.misses")
+    if hits is not None or misses is not None:
+        hits = hits or 0.0
+        misses = misses or 0.0
+        lookups = hits + misses
+        rate = (100.0 * hits / lookups) if lookups else 0.0
+        evict = _sum_metric(final_metrics, "sweep_cache.evictions") or 0.0
+        lines.append(
+            f"sweep cache: {hits:.0f} hits / {misses:.0f} misses "
+            f"({rate:.1f}% hit rate), {evict:.0f} evictions")
+
+    calls = _metric_value(final_metrics, "simulate.calls")
+    cells = _metric_value(final_metrics, "simulate.cells")
+    if calls is not None:
+        lines.append(f"simulate: {calls:.0f} calls, "
+                     f"{cells or 0:.0f} cells")
+    return "\n".join(lines)
+
+
+def check_metric_names(path) -> list[str]:
+    """Metric names recorded in a runlog but absent from KNOWN_METRICS."""
+    unknown = set()
+    for rec in read_runlog(path):
+        if rec.get("kind") != "metrics":
+            continue
+        for m in rec["metrics"]:
+            if m["name"] not in _metrics.KNOWN_METRICS:
+                unknown.add(m["name"])
+    return sorted(unknown)
+
+
+def main(argv=None) -> int:
+    """CLI: summarize a runlog; --check-metrics gates on undocumented names."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Summarize a repro runlog (JSON lines).")
+    ap.add_argument("runlog", help="path written via REPRO_RUNLOG/runlog=")
+    ap.add_argument("--check-metrics", action="store_true",
+                    help="exit 1 if any recorded metric name is not in "
+                         "repro.obs.metrics.KNOWN_METRICS")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args(argv)
+
+    print(summarize_runlog(args.runlog, top=args.top))
+    if args.check_metrics:
+        unknown = check_metric_names(args.runlog)
+        if unknown:
+            print(f"\nUNDOCUMENTED METRICS: {', '.join(unknown)}")
+            return 1
+        print("\nall recorded metric names documented")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,205 @@
+"""Process-local metrics registry: counters, gauges, histograms.
+
+Where `obs.spans` answers "where did the wall-clock go", this module
+answers "how often / how much": cache hit rates, auto-plan decisions,
+memory-guard headroom, calibration population counts.  Everything is
+process-local and lock-guarded — no sockets, no background threads, no
+dependencies — matching the repo's zero-infra telemetry posture.
+
+Instruments:
+
+- :class:`Counter` — monotonically increasing float (``inc``).
+- :class:`Gauge` — last-written float (``set``).
+- :class:`Histogram` — fixed bucket edges chosen at creation;
+  ``observe`` records count/sum plus a cumulative-bucket vector, so
+  percentiles are approximable without retaining samples.
+
+Instruments may carry a single ``label`` value (e.g.
+``plan.auto_backend`` labeled ``"numpy"`` vs ``"jax"``); each
+(name, label) pair is an independent instrument.
+
+Every metric *name* emitted anywhere in the repo must appear in
+:data:`KNOWN_METRICS`, and that dict is CI-synced against the table in
+``docs/observability.md`` (tools/check_docs.py) — the same contract the
+SimParams knob table uses.  `repro.obs.export.check_metric_names`
+enforces the registry side on recorded runlogs.
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+
+__all__ = ["Counter", "Gauge", "Histogram", "Registry", "REGISTRY",
+           "KNOWN_METRICS", "counter", "gauge", "histogram"]
+
+
+#: name -> one-line description.  The single source of truth for which
+#: metric names exist; docs/observability.md mirrors this table and CI
+#: fails on divergence in either direction.
+KNOWN_METRICS = {
+    "simulate.calls": "api.simulate invocations",
+    "simulate.cells": "grid cells (opts x params) executed by simulate",
+    "simulate.wall_us": "histogram of simulate() wall-clock, microseconds",
+    "plan.resolved": "resolve_plan calls",
+    "plan.auto_backend": "auto backend decisions, labeled numpy|jax",
+    "plan.auto_method": "auto method decisions, labeled scan|assoc",
+    "sweep_cache.hits": "SweepCache lookups served from disk",
+    "sweep_cache.misses": "SweepCache lookups that required simulation",
+    "sweep_cache.evictions": "SweepCache entries removed by LRU pruning",
+    "sweep_cache.put_bytes": "bytes written into the SweepCache",
+    "assoc.mem_estimate_bytes": "assoc engine's estimated peak bytes",
+    "assoc.mem_headroom_bytes": "memory-guard limit minus the estimate",
+    "calibration.populations": "candidate populations scored",
+    "calibration.candidates": "individual SimParams candidates scored",
+    "sensitivity.cells": "sensitivity-grid cells evaluated",
+    "serve.requests": "serving-engine generate() requests",
+    "serve.tokens": "tokens decoded by the serving engine",
+}
+
+
+class Counter:
+    """Monotonic counter (floats allowed: byte totals, cell counts)."""
+    __slots__ = ("name", "label", "value", "_lock")
+
+    def __init__(self, name: str, label: str | None = None):
+        self.name = name
+        self.label = label
+        self.value = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name}: negative inc {amount}")
+        with self._lock:
+            self.value += amount
+
+    def snapshot(self) -> dict:
+        return {"type": "counter", "name": self.name, "label": self.label,
+                "value": self.value}
+
+
+class Gauge:
+    """Last-written value (e.g. current memory headroom)."""
+    __slots__ = ("name", "label", "value", "_lock")
+
+    def __init__(self, name: str, label: str | None = None):
+        self.name = name
+        self.label = label
+        self.value = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self.value = float(value)
+
+    def snapshot(self) -> dict:
+        return {"type": "gauge", "name": self.name, "label": self.label,
+                "value": self.value}
+
+
+#: Default bucket edges: microsecond-scaled log ladder wide enough for
+#: both a cache-hit lookup (~100 us) and a full-grid jax compile (~60 s).
+DEFAULT_BUCKETS = (1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 1e8)
+
+
+class Histogram:
+    """Fixed-bucket histogram; records count, sum, and bucket counts.
+
+    ``buckets`` are upper edges (inclusive), ascending; values above the
+    last edge land in the implicit +inf bucket.
+    """
+    __slots__ = ("name", "label", "buckets", "counts", "count", "sum",
+                 "_lock")
+
+    def __init__(self, name: str, label: str | None = None,
+                 buckets: tuple = DEFAULT_BUCKETS):
+        if list(buckets) != sorted(buckets):
+            raise ValueError(f"histogram {name}: bucket edges not ascending")
+        self.name = name
+        self.label = label
+        self.buckets = tuple(float(b) for b in buckets)
+        self.counts = [0] * (len(self.buckets) + 1)  # +1 for +inf
+        self.count = 0
+        self.sum = 0.0
+        self._lock = threading.Lock()
+
+    def observe(self, value: float) -> None:
+        idx = bisect.bisect_left(self.buckets, value)
+        with self._lock:
+            self.counts[idx] += 1
+            self.count += 1
+            self.sum += value
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"type": "histogram", "name": self.name,
+                    "label": self.label, "buckets": list(self.buckets),
+                    "counts": list(self.counts), "count": self.count,
+                    "sum": self.sum}
+
+
+class Registry:
+    """Process-local instrument registry keyed on (name, label).
+
+    ``counter``/``gauge``/``histogram`` are get-or-create and enforce
+    that a (name, label) pair keeps one instrument type for the process
+    lifetime.  Unknown names are allowed at runtime (the registry is a
+    library, not a linter) — CI catches them via
+    `export.check_metric_names` against :data:`KNOWN_METRICS`.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._instruments: dict[tuple, object] = {}
+
+    def _get(self, cls, name: str, label: str | None, **kwargs):
+        key = (name, label)
+        with self._lock:
+            inst = self._instruments.get(key)
+            if inst is None:
+                inst = self._instruments[key] = cls(name, label, **kwargs)
+            elif not isinstance(inst, cls):
+                raise TypeError(
+                    f"metric {key} already registered as "
+                    f"{type(inst).__name__}, requested {cls.__name__}")
+            return inst
+
+    def counter(self, name: str, label: str | None = None) -> Counter:
+        return self._get(Counter, name, label)
+
+    def gauge(self, name: str, label: str | None = None) -> Gauge:
+        return self._get(Gauge, name, label)
+
+    def histogram(self, name: str, label: str | None = None,
+                  buckets: tuple = DEFAULT_BUCKETS) -> Histogram:
+        return self._get(Histogram, name, label, buckets=buckets)
+
+    def snapshot(self) -> list[dict]:
+        """Point-in-time dump of every instrument, sorted by (name, label)."""
+        with self._lock:
+            instruments = list(self._instruments.values())
+        return sorted((inst.snapshot() for inst in instruments),
+                      key=lambda s: (s["name"], s["label"] or ""))
+
+    def reset(self) -> None:
+        """Drop all instruments (tests only — callers cache instrument
+        handles, so resetting mid-run orphans their updates)."""
+        with self._lock:
+            self._instruments.clear()
+
+
+#: The process-wide registry all repro call sites feed.
+REGISTRY = Registry()
+
+
+def counter(name: str, label: str | None = None) -> Counter:
+    return REGISTRY.counter(name, label)
+
+
+def gauge(name: str, label: str | None = None) -> Gauge:
+    return REGISTRY.gauge(name, label)
+
+
+def histogram(name: str, label: str | None = None,
+              buckets: tuple = DEFAULT_BUCKETS) -> Histogram:
+    return REGISTRY.histogram(name, label, buckets=buckets)

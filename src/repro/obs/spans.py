@@ -1,0 +1,214 @@
+"""Zero-dependency context-manager span tracer.
+
+The attribution engine explains every *simulated* cycle; this module
+gives the *simulator's own* wall-clock the same treatment: nested, timed
+spans over the phases of a `simulate()` call (trace stacking, plan
+resolution, backend dispatch, per-chunk execution, jax compile vs.
+execute) so a perf claim about the host pipeline is decomposable instead
+of one opaque number.
+
+Design constraints, in priority order:
+
+1. **Disabled-by-default with near-zero overhead.**  `span(...)` on a
+   disabled tracer returns one shared no-op context manager — the cost
+   is a single attribute check plus the caller's kwargs dict.  The hot
+   loops (per-instruction scans) are *never* instrumented; spans wrap
+   phase boundaries only, so even enabled tracing is O(phases), not
+   O(instructions).
+2. **Thread-safe collection.**  Span nesting is tracked per thread
+   (`threading.local` stacks); finished spans land in one lock-guarded
+   list so concurrent `simulate()` calls (the serving direction,
+   ROADMAP item 4) interleave safely.
+3. **Monotonic-clock durations.**  `time.perf_counter()` throughout;
+   `export.py` normalizes to trace-relative microseconds.
+
+Enable explicitly (`enable()` / `REPRO_OBS=1`) or implicitly by asking
+for a runlog (`REPRO_RUNLOG=path` or `simulate(..., runlog=...)` — see
+`repro.obs.export`).  Span taxonomy: docs/observability.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+import threading
+import time
+
+__all__ = ["Span", "Tracer", "TRACER", "span", "enable", "disable",
+           "enabled", "current"]
+
+
+@dataclasses.dataclass
+class Span:
+    """One finished (or in-flight) span.
+
+    ``start``/``end`` are `time.perf_counter()` seconds — monotonic and
+    comparable only within a process; ``sid``/``parent`` link the tree;
+    ``tid`` is a small per-thread ordinal (stable track ids for the
+    Chrome exporter, not OS thread ids).
+    """
+    name: str
+    sid: int
+    parent: int | None
+    tid: int
+    start: float
+    end: float | None = None
+    attrs: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def duration(self) -> float:
+        """Seconds; 0.0 while the span is still open."""
+        return (self.end - self.start) if self.end is not None else 0.0
+
+
+class _NullSpan:
+    """Shared no-op context manager returned by a disabled tracer."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **attrs):
+        return self
+
+
+_NULL = _NullSpan()
+
+
+class _LiveSpan:
+    """Context manager recording one span into its tracer."""
+    __slots__ = ("_tracer", "_span")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: dict):
+        self._tracer = tracer
+        self._span = Span(name=name, sid=next(tracer._ids), parent=None,
+                          tid=0, start=0.0, attrs=attrs)
+
+    def set(self, **attrs):
+        """Attach/overwrite key-value attributes on the open span."""
+        self._span.attrs.update(attrs)
+        return self
+
+    def __enter__(self):
+        tr = self._tracer
+        stack = tr._stack()
+        sp = self._span
+        sp.tid = tr._thread_ordinal()
+        sp.parent = stack[-1].sid if stack else None
+        stack.append(sp)
+        sp.start = time.perf_counter()     # last: exclude setup from dur
+        return self
+
+    def __exit__(self, *exc):
+        sp = self._span
+        sp.end = time.perf_counter()       # first: exclude teardown
+        tr = self._tracer
+        stack = tr._stack()
+        if stack and stack[-1] is sp:
+            stack.pop()
+        else:                              # pragma: no cover - misuse
+            # Mis-nested exit (spans closed out of order): drop down to
+            # this span if present, else leave the stack untouched.
+            if sp in stack:
+                del stack[stack.index(sp):]
+        with tr._lock:
+            tr._done.append(sp)
+        return False
+
+
+class Tracer:
+    """Thread-safe span collector with per-thread nesting stacks."""
+
+    def __init__(self, enabled: bool = False):
+        self.enabled = enabled
+        self._lock = threading.Lock()
+        self._done: list[Span] = []
+        self._ids = itertools.count(1)
+        self._local = threading.local()
+        self._tids: dict[int, int] = {}
+
+    # -- span creation ----------------------------------------------------
+    def span(self, name: str, **attrs):
+        """Open a span context manager (no-op while disabled)."""
+        if not self.enabled:
+            return _NULL
+        return _LiveSpan(self, name, attrs)
+
+    def current(self):
+        """The innermost open span on this thread (no-op if none/off)."""
+        if not self.enabled:
+            return _NULL
+        stack = self._stack()
+        if not stack:
+            return _NULL
+        # Wrap the open Span so callers get the same .set() surface.
+        live = _LiveSpan.__new__(_LiveSpan)
+        live._tracer = self
+        live._span = stack[-1]
+        return live
+
+    # -- lifecycle --------------------------------------------------------
+    def enable(self) -> None:
+        self.enabled = True
+
+    def disable(self) -> None:
+        self.enabled = False
+
+    def drain(self) -> list[Span]:
+        """Return and clear all *finished* spans (open spans stay put and
+        surface at a later drain, after they close)."""
+        with self._lock:
+            out, self._done = self._done, []
+        return out
+
+    def snapshot(self) -> list[Span]:
+        """Finished spans without clearing them."""
+        with self._lock:
+            return list(self._done)
+
+    # -- internals --------------------------------------------------------
+    def _stack(self) -> list[Span]:
+        stack = getattr(self._local, "stack", None)
+        if stack is None:
+            stack = self._local.stack = []
+        return stack
+
+    def _thread_ordinal(self) -> int:
+        ident = threading.get_ident()
+        tid = self._tids.get(ident)
+        if tid is None:
+            with self._lock:
+                tid = self._tids.setdefault(ident, len(self._tids))
+        return tid
+
+
+#: Process-wide default tracer; `REPRO_OBS=1` (or any runlog target, see
+#: `repro.obs.export.runlog_target`) switches it on at import.
+TRACER = Tracer(enabled=bool(os.environ.get("REPRO_OBS")
+                             or os.environ.get("REPRO_RUNLOG")))
+
+
+def span(name: str, **attrs):
+    """`TRACER.span` shorthand — the call sites' one-liner."""
+    if not TRACER.enabled:                 # fast path, no method dispatch
+        return _NULL
+    return _LiveSpan(TRACER, name, attrs)
+
+
+def current():
+    return TRACER.current()
+
+
+def enable() -> None:
+    TRACER.enable()
+
+
+def disable() -> None:
+    TRACER.disable()
+
+
+def enabled() -> bool:
+    return TRACER.enabled

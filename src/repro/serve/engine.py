@@ -16,6 +16,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import decode_step, logits_fn
+from repro.obs import metrics as obs_metrics
+from repro.obs import spans as obs_spans
 from repro.serve.cache import build_decode_cache
 
 
@@ -35,33 +37,47 @@ class Engine:
 
     def prefill(self, tokens: jax.Array, extra: dict | None = None):
         """tokens: (B, S_p).  Returns (last_logits (B, V), cache, pos)."""
-        batch = {"tokens": tokens, **(extra or {})}
-        logits, prefill_caches = self._prefill(self.params, batch)
-        cache = build_decode_cache(self.cfg, prefill_caches,
-                                   tokens.shape[0], self.s_max,
-                                   self.cache_dtype)
-        pos = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
-        return logits[:, -1], cache, pos
+        with obs_spans.span("serve.prefill", batch=int(tokens.shape[0]),
+                            prompt_len=int(tokens.shape[1])):
+            batch = {"tokens": tokens, **(extra or {})}
+            logits, prefill_caches = self._prefill(self.params, batch)
+            cache = build_decode_cache(self.cfg, prefill_caches,
+                                       tokens.shape[0], self.s_max,
+                                       self.cache_dtype)
+            pos = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+            return logits[:, -1], cache, pos
 
     def step(self, cache, tokens: jax.Array, pos: jax.Array):
         """One decode step for the whole batch (tokens: (B,), pos: (B,))."""
-        logits, cache = self._decode(self.params, cache, tokens, pos)
+        with obs_spans.span("serve.decode_step"):
+            logits, cache = self._decode(self.params, cache, tokens, pos)
         return logits, cache, pos + 1
 
     def generate(self, prompt: jax.Array, max_new: int = 32,
                  temperature: float = 0.0, key=None,
                  extra: dict | None = None) -> jax.Array:
         """Greedy / temperature sampling.  prompt: (B, S_p)."""
-        logits, cache, pos = self.prefill(prompt, extra)
-        outs = []
-        tok = self._sample(logits, temperature, key, 0)
-        for i in range(max_new):
-            outs.append(tok)
-            logits, cache, pos = self.step(cache, tok, pos)
-            if key is not None:
-                key = jax.random.fold_in(key, i)
-            tok = self._sample(logits, temperature, key, i + 1)
+        obs_metrics.counter("serve.requests").inc()
+        with obs_spans.span("serve.generate",
+                            batch=int(prompt.shape[0]), max_new=max_new):
+            logits, cache, pos = self.prefill(prompt, extra)
+            outs = []
+            tok = self._sample(logits, temperature, key, 0)
+            for i in range(max_new):
+                outs.append(tok)
+                logits, cache, pos = self.step(cache, tok, pos)
+                if key is not None:
+                    key = jax.random.fold_in(key, i)
+                tok = self._sample(logits, temperature, key, i + 1)
+        obs_metrics.counter("serve.tokens").inc(
+            int(prompt.shape[0]) * max_new)
         return jnp.stack(outs, axis=1)
+
+    @staticmethod
+    def metrics_snapshot() -> list[dict]:
+        """Registry snapshot for a future HTTP metrics endpoint (ROADMAP
+        item 4): the serving layer exposes this verbatim as JSON."""
+        return obs_metrics.REGISTRY.snapshot()
 
     @staticmethod
     def _sample(logits, temperature, key, i):

@@ -1,6 +1,6 @@
 """The unified `repro.core.api.simulate` entrypoint: plan resolution,
-input normalization, equivalence with the legacy paths, and the
-deprecation shims on `BatchAraSimulator`."""
+input normalization, and equivalence with the legacy paths (whose
+deprecation shims are now gone for good)."""
 import numpy as np
 import pytest
 
@@ -48,15 +48,12 @@ def test_simulate_does_not_warn(recwarn):
                 if issubclass(w.category, DeprecationWarning)]
 
 
-def test_run_and_sweep_are_deprecated():
+def test_run_and_sweep_shims_are_gone():
+    """The one-PR deprecation grace period is over: the old entrypoints
+    must not quietly resurface (api.simulate is the only public path)."""
     sim = BatchAraSimulator()
-    stacked = stack_traces([scal(64)])
-    with pytest.warns(DeprecationWarning, match="api.simulate"):
-        old = sim.run(stacked, OPTS)
-    with pytest.warns(DeprecationWarning, match="api.simulate"):
-        sim.sweep([scal(64)], OPTS)
-    new = api.simulate(stacked, OPTS, backend="numpy")
-    np.testing.assert_array_equal(new.cycles, old.cycles)
+    assert not hasattr(sim, "run")
+    assert not hasattr(sim, "sweep")
 
 
 def test_resolve_plan_pins_explicit_choices():

@@ -13,8 +13,8 @@ from hypothesis_compat import given, settings, st
 from repro.analysis import attribution as A
 from repro.analysis import report as R
 from repro.analysis import timeline as TL
+from repro.core import api
 from repro.core import stalls as S
-from repro.core.batch_sim import BatchAraSimulator
 from repro.core.calibration import load as load_params
 from repro.core.isa import (ABLATION_GRID, KernelTrace, OpKind, OptConfig,
                             Stride, VInstr)
@@ -72,9 +72,9 @@ def test_instruction_invariant(traces, corner_results):
 
 
 def test_batched_attribution_matches_scalar(traces, corner_results):
-    bsim = BatchAraSimulator()
-    batch = bsim.sweep(list(traces.values()), ALL_CORNERS,
-                       load_params(), attribution=True)
+    batch = api.simulate(list(traces.values()), ALL_CORNERS,
+                         load_params(), backend="numpy",
+                         attribution=True)
     for bi, name in enumerate(traces):
         for oi, opt in enumerate(ALL_CORNERS):
             ref = corner_results[(name, opt.label)]
@@ -109,9 +109,8 @@ def test_scalar_attribution_off_identical_cycles(traces, corner_results,
 def test_jax_backend_attribution_no_longer_raises(traces):
     """Regression: through PR 2 `attribution=True, backend='jax'` raised
     NotImplementedError; the compiled scan now carries the components."""
-    bsim = BatchAraSimulator()
-    res = bsim.sweep([traces["scal"]], [OptConfig.baseline()],
-                     backend="jax", attribution=True)
+    res = api.simulate([traces["scal"]], [OptConfig.baseline()],
+                       backend="jax", attribution=True)
     assert res.ideal is not None and res.stalls is not None
     assert res.stalls.shape == (1, 1, 1, 9)
     gap = res.cycles - res.ideal - res.stalls.sum(axis=-1)
@@ -122,12 +121,12 @@ def test_jax_attribution_full_grid_matches_numpy(traces):
     """Acceptance: on the full 11-kernel x 8-corner grid, the jax
     backend's stall tensors satisfy ``ideal + sum(stalls) == cycles``
     and match the numpy backend at float64 (allclose)."""
-    bsim = BatchAraSimulator()
     st = stack_traces(list(traces.values()))
     params = load_params()
-    ref = bsim.run(st, ALL_CORNERS, params, attribution=True)
-    got = bsim.run(st, ALL_CORNERS, params, backend="jax",
-                   attribution=True)
+    ref = api.simulate(st, ALL_CORNERS, params, backend="numpy",
+                       attribution=True)
+    got = api.simulate(st, ALL_CORNERS, params, backend="jax",
+                       attribution=True)
     np.testing.assert_allclose(got.cycles, ref.cycles, rtol=1e-9)
     np.testing.assert_allclose(got.ideal, ref.ideal, rtol=1e-9,
                                atol=1e-6)
@@ -299,8 +298,8 @@ def test_property_invariant_random_traces(raw):
         for t in res.timings:
             assert _inv_ok(t.ideal, t.stalls, t.complete)
             assert t.stalls.min() >= -1e-9 and t.ideal >= -1e-9
-    batch = BatchAraSimulator().run(stack_traces([tr]), corners,
-                                    attribution=True)
+    batch = api.simulate(stack_traces([tr]), corners, backend="numpy",
+                         attribution=True)
     for oi, res in enumerate(refs):
         assert batch.cycles[0, oi, 0] == res.cycles
         np.testing.assert_array_equal(batch.ideal[0, oi, 0], res.ideal)

@@ -2,6 +2,7 @@
 import numpy as np
 import pytest
 
+from repro.core import api
 from repro.core.batch_sim import BatchAraSimulator, make_views
 from repro.core.isa import ABLATION_GRID, OptConfig
 from repro.core.simulator import AraSimulator, SimParams
@@ -26,8 +27,8 @@ def scalar_grid(paper_traces):
 
 @pytest.fixture(scope="module")
 def batch_grid(paper_traces):
-    bsim = BatchAraSimulator()
-    return bsim.sweep(list(paper_traces.values()), ALL_CORNERS)
+    return api.simulate(list(paper_traces.values()), ALL_CORNERS,
+                        backend="numpy")
 
 
 def test_stack_traces_structure(paper_traces):
@@ -65,8 +66,8 @@ def test_batch_matches_scalar_all_corners(paper_traces, scalar_grid,
 def test_params_axis_matches_scalar():
     traces = [scal(512), axpy(512)]
     plist = [SimParams(), SimParams(mem_latency=90.0, issue_gap_base=5.0)]
-    res = BatchAraSimulator().sweep(traces, [OptConfig.baseline(),
-                                             OptConfig.full()], plist)
+    res = api.simulate(traces, [OptConfig.baseline(), OptConfig.full()],
+                       plist, backend="numpy")
     for pi, params in enumerate(plist):
         sim = AraSimulator(params=params)
         for bi, tr in enumerate(traces):
@@ -80,8 +81,8 @@ def test_jax_backend_matches_numpy():
     traces = [scal(256), axpy(256), dotp(256)]
     bsim = BatchAraSimulator()
     st = stack_traces(traces)
-    ref = bsim.run(st, ALL_CORNERS)
-    got = bsim.run(st, ALL_CORNERS, backend="jax")
+    ref = api.simulate(st, ALL_CORNERS, backend="numpy", sim=bsim)
+    got = api.simulate(st, ALL_CORNERS, backend="jax", sim=bsim)
     np.testing.assert_allclose(got.cycles, ref.cycles, rtol=1e-6)
     np.testing.assert_allclose(got.busy_fpu, ref.busy_fpu, rtol=1e-6)
     np.testing.assert_allclose(got.busy_bus, ref.busy_bus, rtol=1e-6)
@@ -135,8 +136,8 @@ def test_attribution_parity_scalar_vs_batched():
     scalar simulator's stall accounting, and decompose cycles exactly."""
     traces = [scal(512), axpy(512), dotp(512)]
     plist = [SimParams(), SimParams(mem_latency=90.0, d_chain_base=20.0)]
-    res = BatchAraSimulator().sweep(traces, ALL_CORNERS, plist,
-                                    attribution=True)
+    res = api.simulate(traces, ALL_CORNERS, plist, backend="numpy",
+                       attribution=True)
     assert res.ideal.shape == res.cycles.shape
     assert res.stalls.shape == (*res.cycles.shape, 9)
     for pi, params in enumerate(plist):
@@ -155,7 +156,8 @@ def test_attribution_parity_scalar_vs_batched():
 
 
 def test_attribution_off_by_default():
-    res = BatchAraSimulator().sweep([scal(256)], [OptConfig.baseline()])
+    res = api.simulate([scal(256)], [OptConfig.baseline()],
+                       backend="numpy")
     assert res.ideal is None and res.stalls is None
 
 
@@ -229,6 +231,35 @@ def test_cache_prune_max_entries(tmp_path):
         assert cache.get(k) is not None
     for k in keys[:5]:
         assert cache.get(k) is None
+
+
+def test_cache_eviction_accounting(tmp_path):
+    """Regression (PR 7): GC removals are counted, exposed via
+    `evictions` and `stats()`, and hit/miss accounting survives the
+    split between raw reads and classified lookups."""
+    import time
+    cache = SweepCache(tmp_path)
+    keys = [f"{i:02x}" + "0" * 62 for i in range(6)]
+    for k in keys:
+        cache.put(k, {"x": 1})
+        time.sleep(0.01)
+    assert cache.evictions == 0
+    removed = cache.prune(max_entries=2)
+    assert removed == 4
+    assert cache.evictions == 4
+    assert cache.get(keys[0]) is None      # evicted -> miss
+    assert cache.get(keys[-1]) is not None  # survivor -> hit
+    s = cache.stats()
+    assert s["hits"] == 1 and s["misses"] == 1
+    assert s["evictions"] == 4
+    assert s["hit_rate"] == pytest.approx(0.5)
+    # Bounded instances count their auto-GC the same way.
+    auto = SweepCache(tmp_path / "auto", max_entries=3)
+    for i in range(6):
+        auto.put(f"{i:02x}" + "1" * 62, {"x": 1})
+        time.sleep(0.01)
+    assert auto.evictions >= 1
+    assert auto.evictions == auto.stats()["evictions"]
 
 
 def test_cache_auto_gc_on_put(tmp_path):

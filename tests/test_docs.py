@@ -15,7 +15,8 @@ import check_docs  # noqa: E402
 def test_required_docs_exist():
     for rel in ("README.md", "docs/architecture.md",
                 "docs/attribution.md", "docs/backends.md",
-                "docs/sensitivity.md", "docs/figures.md"):
+                "docs/sensitivity.md", "docs/figures.md",
+                "docs/observability.md"):
         assert (REPO / rel).is_file(), f"{rel} missing"
 
 
@@ -44,6 +45,24 @@ def test_simparams_check_catches_renames(monkeypatch, tmp_path):
     errors = check_docs.check_simparams_table()
     assert any("mem_latencyy" in e for e in errors)          # unknown row
     assert any("'mem_latency'" in e for e in errors)         # missing row
+
+
+def test_metric_table_in_sync():
+    """docs/observability.md's metric table must match
+    `repro.obs.metrics.KNOWN_METRICS` exactly, both directions."""
+    assert check_docs.check_metric_table() == []
+
+
+def test_metric_check_catches_divergence(monkeypatch, tmp_path):
+    doc = tmp_path / "docs" / "observability.md"
+    doc.parent.mkdir()
+    real = (REPO / "docs" / "observability.md").read_text()
+    doc.write_text(real.replace("`simulate.calls`",
+                                "`simulate.callz`", 1))
+    monkeypatch.setattr(check_docs, "REPO", tmp_path)
+    errors = check_docs.check_metric_table()
+    assert any("simulate.callz" in e for e in errors)     # unknown row
+    assert any("'simulate.calls'" in e for e in errors)   # missing row
 
 
 def test_every_figure_script_documented():

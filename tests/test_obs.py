@@ -1,0 +1,365 @@
+"""Observability subsystem contracts (PR 7).
+
+Covered here: span nesting/ordering invariants, the <2% disabled-mode
+overhead bound on the smoke grid, the runlog JSON-lines roundtrip, the
+Chrome-trace schema's compatibility with `analysis/timeline.py` (one
+merged Perfetto file), metrics-registry thread safety, and the
+acceptance bound that timed span leaves account for >=90% of a
+calibrated grid's simulate() wall-clock.
+"""
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core import api
+from repro.core.batch_sim import BatchAraSimulator
+from repro.core.calibration import load as load_params
+from repro.core.isa import ABLATION_GRID, OptConfig
+from repro.core.simulator import AraSimulator
+from repro.core.traces import axpy, dotp, scal
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import spans as obs_spans
+
+ALL_CORNERS = (OptConfig.baseline(), *ABLATION_GRID)
+
+
+@pytest.fixture
+def tracer_off():
+    """Guarantee the module tracer is disabled and drained around a
+    test, whatever state earlier tests (or REPRO_OBS) left it in."""
+    was = obs_spans.enabled()
+    obs_spans.disable()
+    obs_spans.TRACER.drain()
+    yield
+    obs_spans.TRACER.drain()
+    (obs_spans.enable if was else obs_spans.disable)()
+
+
+@pytest.fixture
+def tracer_on(tracer_off):
+    obs_spans.enable()
+    yield obs_spans.TRACER
+    obs_spans.disable()
+
+
+# --- span tree invariants --------------------------------------------------
+
+def test_span_nesting_and_ordering(tracer_on):
+    with obs_spans.span("outer", grid="smoke") as outer:
+        with obs_spans.span("inner_a"):
+            time.sleep(0.001)
+        with obs_spans.span("inner_b") as b:
+            b.set(items=3)
+        outer.set(late_attr=1)
+    done = obs_spans.TRACER.drain()
+    by_name = {sp.name: sp for sp in done}
+    assert set(by_name) == {"outer", "inner_a", "inner_b"}
+    out, a, b_ = by_name["outer"], by_name["inner_a"], by_name["inner_b"]
+    # Children link to the parent; the root has none.
+    assert a.parent == out.sid and b_.parent == out.sid
+    assert out.parent is None
+    # Children close before the parent -> finish order a, b, outer.
+    assert [sp.name for sp in done] == ["inner_a", "inner_b", "outer"]
+    # Monotonic containment: parent interval covers each child's.
+    for child in (a, b_):
+        assert out.start <= child.start <= child.end <= out.end
+    assert a.duration >= 0.001
+    # Attrs set at open and via .set() both land.
+    assert out.attrs == {"grid": "smoke", "late_attr": 1}
+    assert b_.attrs == {"items": 3}
+
+
+def test_span_disabled_is_shared_noop(tracer_off):
+    s1 = obs_spans.span("x", a=1)
+    s2 = obs_spans.span("y")
+    assert s1 is s2                        # one shared _NullSpan
+    with s1 as got:
+        got.set(anything="goes")
+    assert obs_spans.TRACER.drain() == []
+
+
+def test_span_thread_tracks(tracer_on):
+    def work(i):
+        with obs_spans.span("thread_root", i=i):
+            with obs_spans.span("thread_leaf", i=i):
+                pass
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    done = obs_spans.TRACER.drain()
+    assert len(done) == 8
+    roots = [sp for sp in done if sp.name == "thread_root"]
+    leaves = [sp for sp in done if sp.name == "thread_leaf"]
+    # Per-thread nesting never crosses threads: each leaf's parent is
+    # the root with the same ordinal-attr, on the same track.
+    root_by_i = {sp.attrs["i"]: sp for sp in roots}
+    for leaf in leaves:
+        root = root_by_i[leaf.attrs["i"]]
+        assert leaf.parent == root.sid
+        assert leaf.tid == root.tid
+    assert all(sp.parent is None for sp in roots)
+
+
+def test_simulate_emits_expected_tree(tracer_on):
+    api.simulate([scal(128), axpy(128)], [OptConfig.baseline()],
+                 backend="numpy")
+    done = obs_spans.TRACER.drain()
+    by_name = {}
+    for sp in done:
+        by_name.setdefault(sp.name, sp)
+    assert {"simulate", "traces.stack", "plan.resolve", "exec",
+            "exec.p_chunk", "exec.numpy.scan"} <= set(by_name)
+    root = by_name["simulate"]
+    assert root.attrs["backend"] == "numpy"
+    assert root.attrs["n_traces"] == 2 and root.attrs["n_opts"] == 1
+    assert by_name["exec"].parent == root.sid
+    assert by_name["exec.p_chunk"].parent == by_name["exec"].sid
+    assert by_name["exec.numpy.scan"].parent == by_name["exec.p_chunk"].sid
+
+
+def test_jax_compile_then_execute_split(tracer_on):
+    pytest.importorskip("jax")
+    sim = BatchAraSimulator()                  # fresh seen-signature set
+    traces = [scal(96), axpy(96)]
+    api.simulate(traces, ALL_CORNERS, backend="jax", sim=sim)
+    first = {sp.name for sp in obs_spans.TRACER.drain()}
+    api.simulate(traces, ALL_CORNERS, backend="jax", sim=sim)
+    second = {sp.name for sp in obs_spans.TRACER.drain()}
+    assert "exec.jax.compile" in first
+    assert "exec.jax.execute" not in first
+    assert "exec.jax.execute" in second
+    assert "exec.jax.compile" not in second
+
+
+# --- disabled-mode overhead ------------------------------------------------
+
+def test_disabled_overhead_under_two_percent(tracer_off):
+    """Acceptance: telemetry disabled costs <2% on the smoke grid.
+
+    A/B wall-clock differencing at this scale is noise, so the bound is
+    computed structurally: (measured per-call cost of a disabled span)
+    x (number of span call sites the same workload executes when
+    enabled) must be under 2% of the workload's disabled wall-clock."""
+    traces = [scal(256), axpy(256), dotp(256)]
+    params = load_params()
+
+    def workload():
+        return api.simulate(traces, ALL_CORNERS, params, backend="numpy",
+                            attribution=True)
+
+    workload()                             # warm shared sim/caches
+    t0 = time.perf_counter()
+    workload()
+    wall = time.perf_counter() - t0
+
+    # How many spans does this workload open when tracing is on?
+    obs_spans.enable()
+    try:
+        workload()
+        n_spans = len(obs_spans.TRACER.drain())
+    finally:
+        obs_spans.disable()
+    assert n_spans > 0
+
+    n_calls = 20_000
+    t0 = time.perf_counter()
+    for _ in range(n_calls):
+        with obs_spans.span("overhead_probe", a=1, b=2):
+            pass
+    per_call = (time.perf_counter() - t0) / n_calls
+
+    assert per_call * n_spans < 0.02 * wall, (
+        f"disabled-span overhead {per_call * n_spans * 1e6:.1f}us "
+        f"vs 2% budget {0.02 * wall * 1e6:.1f}us "
+        f"({n_spans} spans @ {per_call * 1e9:.0f}ns)")
+
+
+# --- span leaves cover the wall-clock --------------------------------------
+
+def test_span_leaves_cover_90pct_of_simulate(tracer_on):
+    """Acceptance: the span tree is a decomposition, not a sampling —
+    timed leaves account for >=90% of the root's wall-clock on the
+    calibrated 11-kernel x 8-corner grid."""
+    from repro.core.traces import DEFAULT_TRACES
+    traces = [fn() for fn in DEFAULT_TRACES.values()]
+    api.simulate(traces, ALL_CORNERS, load_params(), backend="numpy",
+                 attribution=True)
+    done = obs_spans.TRACER.drain()
+    parents = {sp.parent for sp in done if sp.parent is not None}
+    root = next(sp for sp in done if sp.name == "simulate")
+    leaves = [sp for sp in done if sp.sid not in parents]
+    leaf_total = sum(sp.duration for sp in leaves)
+    assert leaf_total >= 0.90 * root.duration, (
+        f"leaves {leaf_total * 1e3:.2f}ms of root "
+        f"{root.duration * 1e3:.2f}ms "
+        f"({100 * leaf_total / root.duration:.1f}%)")
+
+
+# --- runlog roundtrip ------------------------------------------------------
+
+def test_runlog_roundtrip(tracer_off, tmp_path):
+    runlog = tmp_path / "run.jsonl"
+    res = api.simulate([scal(128)], [OptConfig.baseline()],
+                       backend="numpy", runlog=runlog)
+    assert res.cycles.shape == (1, 1, 1)
+    assert not obs_spans.enabled()         # restored after the call
+    records = obs_export.read_runlog(runlog)
+    spans = [r for r in records if r["kind"] == "span"]
+    metrics = [r for r in records if r["kind"] == "metrics"]
+    assert spans and len(metrics) == 1
+    names = {r["name"] for r in spans}
+    assert {"simulate", "exec", "exec.numpy.scan"} <= names
+    sids = {r["sid"] for r in spans}
+    for r in spans:
+        assert r["dur_us"] >= 0.0
+        assert r["parent"] is None or r["parent"] in sids
+    root = next(r for r in spans if r["name"] == "simulate")
+    assert root["attrs"]["n_traces"] == 1
+    # Metrics snapshot carries the simulate counters.
+    metric_names = {m["name"] for m in metrics[0]["metrics"]}
+    assert {"simulate.calls", "simulate.cells",
+            "simulate.wall_us"} <= metric_names
+    # Appending a second run keeps the file parseable; the last metrics
+    # record is cumulative.
+    api.simulate([scal(128)], [OptConfig.baseline()],
+                 backend="numpy", runlog=runlog)
+    records2 = obs_export.read_runlog(runlog)
+    metrics2 = [r for r in records2 if r["kind"] == "metrics"]
+    assert len(metrics2) == 2
+
+    def calls(block):
+        return next(m["value"] for m in block["metrics"]
+                    if m["name"] == "simulate.calls")
+    assert calls(metrics2[-1]) >= calls(metrics2[0]) + 1
+
+
+def test_runlog_summary_reports_the_claims(tracer_off, tmp_path):
+    """summarize_runlog must state the compile/execute split and the
+    cache hit rate (ISSUE acceptance)."""
+    pytest.importorskip("jax")
+    runlog = tmp_path / "run.jsonl"
+    sim = BatchAraSimulator()
+    api.simulate([scal(96)], [OptConfig.baseline()], backend="jax",
+                 sim=sim, runlog=runlog)
+    api.simulate([scal(96)], [OptConfig.baseline()], backend="jax",
+                 sim=sim, runlog=runlog)
+    obs_metrics.counter("sweep_cache.hits").inc(3)
+    obs_metrics.counter("sweep_cache.misses").inc()
+    obs_export.flush(runlog)
+    text = obs_export.summarize_runlog(runlog)
+    assert "jit compile/execute:" in text
+    assert "compile share" in text
+    assert "hit rate" in text
+    assert "simulate:" in text
+    assert obs_export.check_metric_names(runlog) == []
+
+
+def test_check_metric_names_flags_unknown(tracer_off, tmp_path):
+    runlog = tmp_path / "run.jsonl"
+    runlog.write_text(json.dumps({
+        "kind": "metrics",
+        "metrics": [{"type": "counter", "name": "rogue.metric",
+                     "label": None, "value": 1.0}]}) + "\n")
+    assert obs_export.check_metric_names(runlog) == ["rogue.metric"]
+    assert obs_export.main([str(runlog), "--check-metrics"]) == 1
+
+
+# --- merged Chrome trace ---------------------------------------------------
+
+def test_merged_trace_schema_compatible_with_timeline(tracer_off,
+                                                      tmp_path):
+    """Host spans and timeline.py's simulated Gantt share one file and
+    one trace_event schema; Perfetto reads it as distinct processes."""
+    runlog = tmp_path / "run.jsonl"
+    tr = scal(128)
+    api.simulate([tr], [OptConfig.baseline()], backend="numpy",
+                 runlog=runlog)
+    res = AraSimulator().run(tr, OptConfig.baseline())
+    out = obs_export.export_merged_trace(
+        tmp_path / "merged.json", obs_export.read_runlog(runlog),
+        [(tr, res)])
+    payload = json.loads(out.read_text())
+    events = payload["traceEvents"]
+    for e in events:
+        assert e["ph"] in ("M", "X")
+        assert isinstance(e["pid"], int)
+        if e["ph"] == "X":                 # complete-event schema
+            assert set(e) >= {"name", "cat", "ph", "pid", "tid", "ts",
+                              "dur", "args"}
+            assert e["ts"] >= 0.0 and e["dur"] >= 0.0
+    pids = {e["pid"] for e in events}
+    assert pids == {obs_export.HOST_PID, obs_export.HOST_PID + 1}
+    # The host process row holds the simulate span; the cell row holds
+    # one X event per instruction, exactly as export_chrome_trace does.
+    host_x = [e for e in events if e["pid"] == obs_export.HOST_PID
+              and e["ph"] == "X"]
+    cell_x = [e for e in events if e["pid"] == obs_export.HOST_PID + 1
+              and e["ph"] == "X"]
+    assert any(e["name"] == "simulate" for e in host_x)
+    assert len(cell_x) == len(tr.instrs)
+    # Both processes announce names so Perfetto labels the rows.
+    proc_meta = {e["pid"] for e in events
+                 if e["ph"] == "M" and e["name"] == "process_name"}
+    assert proc_meta == pids
+
+
+# --- metrics registry ------------------------------------------------------
+
+def test_metrics_registry_thread_safety():
+    reg = obs_metrics.Registry()
+    n_threads, n_iter = 8, 2500
+
+    def work():
+        c = reg.counter("t.count")
+        h = reg.histogram("t.hist")
+        g = reg.gauge("t.gauge")
+        for i in range(n_iter):
+            c.inc()
+            h.observe(float(i))
+            g.set(float(i))
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = {(s["name"], s["label"]): s for s in reg.snapshot()}
+    assert snap[("t.count", None)]["value"] == n_threads * n_iter
+    h = snap[("t.hist", None)]
+    assert h["count"] == n_threads * n_iter
+    assert h["sum"] == pytest.approx(
+        n_threads * n_iter * (n_iter - 1) / 2)
+    assert sum(h["counts"]) == h["count"]
+
+
+def test_metrics_type_and_value_enforcement():
+    reg = obs_metrics.Registry()
+    reg.counter("m.x")
+    with pytest.raises(TypeError):
+        reg.gauge("m.x")
+    with pytest.raises(ValueError):
+        reg.counter("m.x").inc(-1)
+    with pytest.raises(ValueError):
+        obs_metrics.Histogram("m.bad", buckets=(3.0, 1.0))
+    # get-or-create returns the same instrument.
+    assert reg.counter("m.x") is reg.counter("m.x")
+    # Labeled instruments are independent.
+    reg.counter("m.lab", "a").inc(2)
+    reg.counter("m.lab", "b").inc(5)
+    vals = {s["label"]: s["value"] for s in reg.snapshot()
+            if s["name"] == "m.lab"}
+    assert vals == {"a": 2, "b": 5}
+
+
+def test_emitted_metric_names_are_known(tracer_off, tmp_path):
+    """Every metric the instrumented call sites emit is documented in
+    KNOWN_METRICS (the registry itself doesn't lint; this does)."""
+    runlog = tmp_path / "run.jsonl"
+    api.simulate([scal(128)], [OptConfig.baseline(), OptConfig.full()],
+                 runlog=runlog)            # backend/method resolve "auto"
+    assert obs_export.check_metric_names(runlog) == []

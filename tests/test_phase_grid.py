@@ -15,8 +15,9 @@ from repro.analysis.attribution import (phase_decompose,
                                         phase_decompose_grid)
 from repro.analysis.report import (breakdown_rows, have_matplotlib,
                                    render_stacked_bars)
+from repro.core import api
 from repro.core import stalls as S
-from repro.core.batch_sim import BatchAraSimulator, BatchResult
+from repro.core.batch_sim import BatchResult
 from repro.core.isa import ABLATION_GRID, OptConfig
 from repro.core.simulator import AraSimulator, SimParams
 from repro.core.traces import axpy, dotp, scal, spmv, stack_traces
@@ -32,8 +33,8 @@ def _small_traces():
 @pytest.fixture(scope="module")
 def batch():
     traces = _small_traces()
-    res = BatchAraSimulator().run(stack_traces(traces), ALL_CORNERS,
-                                  _PARAMS, attribution=True)
+    res = api.simulate(stack_traces(traces), ALL_CORNERS, _PARAMS,
+                       backend="numpy", attribution=True)
     return traces, res
 
 
@@ -80,10 +81,10 @@ def test_jax_attribution_parity_all_corners():
     ablation corners, >= 3 kernels, and a widened params axis."""
     traces = _small_traces()
     st_ = stack_traces(traces)
-    bsim = BatchAraSimulator()
-    ref = bsim.run(st_, ALL_CORNERS, _PARAMS, attribution=True)
-    got = bsim.run(st_, ALL_CORNERS, _PARAMS, backend="jax",
-                   attribution=True)
+    ref = api.simulate(st_, ALL_CORNERS, _PARAMS, backend="numpy",
+                       attribution=True)
+    got = api.simulate(st_, ALL_CORNERS, _PARAMS, backend="jax",
+                       attribution=True)
     np.testing.assert_allclose(got.cycles, ref.cycles, rtol=1e-9)
     np.testing.assert_allclose(got.ideal, ref.ideal, rtol=1e-9,
                                atol=1e-9)
@@ -122,8 +123,8 @@ def test_property_phase_grid_matches_per_cell(raw):
     scalar per-cell path bit-for-bit (numpy backend)."""
     tr = _build_trace(raw)
     corners = (OptConfig.baseline(), OptConfig.full())
-    res = BatchAraSimulator().run(stack_traces([tr]), corners,
-                                  attribution=True)
+    res = api.simulate(stack_traces([tr]), corners, backend="numpy",
+                       attribution=True)
     pg = phase_decompose_grid([tr], res)
     sim = AraSimulator(params=SimParams())
     for oi, opt in enumerate(corners):

@@ -21,6 +21,7 @@ import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 
+from repro.core import api
 from repro.core.batch_sim import BatchAraSimulator, stack_params
 from repro.core.isa import OptConfig
 from repro.core.simulator import SimParams
@@ -99,10 +100,11 @@ def test_p_chunk_bitexact_vs_unchunked_numpy():
                             "d_chain_base"), points=3)
     st_ = _stacked()
     sim = BatchAraSimulator()
-    full = sim.run(st_, [BASE, FULL], list(d.variants),
-                   attribution=True)
-    chunked = sim.run(st_, [BASE, FULL], list(d.variants),
-                      attribution=True, p_chunk=4)
+    full = api.simulate(st_, [BASE, FULL], list(d.variants),
+                        backend="numpy", attribution=True, sim=sim)
+    chunked = api.simulate(st_, [BASE, FULL], list(d.variants),
+                           backend="numpy", attribution=True, p_chunk=4,
+                           sim=sim)
     for field in ("cycles", "busy_fpu", "busy_bus", "ideal", "stalls",
                   "lane_first_out", "first_first_out", "finish_start"):
         assert np.array_equal(getattr(full, field),
@@ -112,8 +114,8 @@ def test_p_chunk_bitexact_vs_unchunked_numpy():
 
 def test_p_chunk_validation():
     with pytest.raises(ValueError, match="p_chunk"):
-        BatchAraSimulator().run(_stacked(), [BASE], [SimParams()],
-                                p_chunk=0)
+        api.simulate(_stacked(), [BASE], [SimParams()],
+                     backend="numpy", p_chunk=0)
 
 
 def test_jax_matches_numpy_on_wide_params_axis():
@@ -122,12 +124,13 @@ def test_jax_matches_numpy_on_wide_params_axis():
                      points=4)                       # P = 9
     st_ = _stacked()
     sim = BatchAraSimulator()
-    ref = sim.run(st_, [BASE, FULL], list(d.variants),
-                  attribution=True)
+    ref = api.simulate(st_, [BASE, FULL], list(d.variants),
+                       backend="numpy", attribution=True, sim=sim)
     # p_chunk=4 exercises the jax padding path (9 = 4 + 4 + pad(1->4)),
     # with every chunk reusing one compiled shape.
-    got = sim.run(st_, [BASE, FULL], list(d.variants), backend="jax",
-                  attribution=True, p_chunk=4)
+    got = api.simulate(st_, [BASE, FULL], list(d.variants),
+                       backend="jax", attribution=True, p_chunk=4,
+                       sim=sim)
     np.testing.assert_allclose(got.cycles, ref.cycles, rtol=1e-9)
     np.testing.assert_allclose(got.ideal, ref.ideal, rtol=1e-9,
                                atol=1e-6)
@@ -267,9 +270,9 @@ def test_perturbing_one_knob_moves_its_own_critical_path(
     center = SimParams()
     varied = dataclasses.replace(
         center, **{knob: getattr(center, knob) * scale})
-    res = BatchAraSimulator().run(
+    res = api.simulate(
         stack_traces(list(prop_traces.values())), [BASE],
-        [center, varied], attribution=True)
+        [center, varied], backend="numpy", attribution=True)
     t = S.SweepTensors(tuple(prop_traces), (BASE.label,), res.cycles,
                        res.ideal, res.stalls, None)
     deltas = S.path_stall_delta(t, 0, 1, opt_col=0)
@@ -295,8 +298,8 @@ def test_opt_side_knobs_are_inert_under_baseline():
         dataclasses.replace(center, **{k: getattr(center, k) * 1.5})
         for k in ("tx_ovh_opt", "rw_turnaround_opt", "issue_gap_opt",
                   "conflict_opt", "queue_adv_opt")]
-    res = BatchAraSimulator().run(_stacked(), [BASE], variants,
-                                  attribution=True)
+    res = api.simulate(_stacked(), [BASE], variants,
+                       backend="numpy", attribution=True)
     for pi in range(1, len(variants)):
         assert np.array_equal(res.cycles[:, :, pi], res.cycles[:, :, 0])
         assert np.array_equal(res.stalls[:, :, pi], res.stalls[:, :, 0])

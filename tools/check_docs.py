@@ -20,6 +20,11 @@ Four checks:
 4. **Every figure script is documented.**  Each `benchmarks/fig*.py`
    must be named by at least one doc under `docs/` that carries a
    "how to read" section.
+5. **The metric table stays in sync.**  The table between the
+   ``metric-table-start``/``metric-table-end`` markers in
+   `docs/observability.md` must name exactly the keys of
+   `repro.obs.metrics.KNOWN_METRICS` — an emitted-but-undocumented
+   (or documented-but-gone) metric fails in both directions.
 """
 from __future__ import annotations
 
@@ -113,6 +118,36 @@ def check_simparams_table() -> list[str]:
     return errors
 
 
+def check_metric_table() -> list[str]:
+    """docs/observability.md's metric table == metrics.KNOWN_METRICS.
+
+    Same contract as the knob table: rows between the explicit markers
+    are parsed for their first backticked column, and the set must
+    equal KNOWN_METRICS' keys, so a new metric fails CI until its doc
+    row lands (and a dropped one until the row is removed)."""
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.obs.metrics import KNOWN_METRICS
+    doc = REPO / "docs" / "observability.md"
+    if not doc.exists():
+        return ["docs/observability.md is missing"]
+    text = doc.read_text()
+    m = re.search(
+        r"<!-- metric-table-start -->(.*?)<!-- metric-table-end -->",
+        text, re.S)
+    if m is None:
+        return ["docs/observability.md lacks the metric-table-start/"
+                "metric-table-end markers"]
+    documented = set(re.findall(r"^\|\s*`([A-Za-z0-9_.]+)`", m.group(1),
+                                re.M))
+    known = set(KNOWN_METRICS)
+    errors = [f"docs/observability.md metric table names unknown metric "
+              f"{name!r} (not in repro.obs.metrics.KNOWN_METRICS)"
+              for name in sorted(documented - known)]
+    errors += [f"docs/observability.md metric table does not document "
+               f"metric {name!r}" for name in sorted(known - documented)]
+    return errors
+
+
 def check_figure_docs() -> list[str]:
     """Every benchmarks/fig*.py has a "how to read it" doc under docs/."""
     docs = [(p, p.read_text()) for p in sorted((REPO / "docs")
@@ -130,7 +165,8 @@ def check_figure_docs() -> list[str]:
 
 def main() -> int:
     errors = (check_links() + check_stall_vocabulary()
-              + check_simparams_table() + check_figure_docs())
+              + check_simparams_table() + check_figure_docs()
+              + check_metric_table())
     for e in errors:
         print(f"ERROR: {e}")
     if not errors:

@@ -1,0 +1,87 @@
+"""Observability smoke driver (CI `smoke` job).
+
+Runs a small calibrated grid with the runlog enabled — a numpy
+attribution pass, a cold jax pass (compile) and a warm one (execute),
+plus one SweepCache miss/put/hit cycle — then:
+
+1. emits the merged Perfetto trace (host spans + one simulated cell),
+2. prints `summarize_runlog()` (top spans, compile/execute split,
+   cache hit rate),
+3. exits 1 if any recorded metric name is missing from
+   `repro.obs.metrics.KNOWN_METRICS` (docs/observability.md mirrors
+   that dict, so an undocumented metric fails CI here).
+
+    python tools/obs_smoke.py --out experiments/obs_smoke
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_REPO), str(_REPO / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=str(_REPO / "experiments" /
+                                         "obs_smoke"),
+                    help="output directory (runlog + merged trace)")
+    args = ap.parse_args(argv)
+
+    from repro.core import api
+    from repro.core.calibration import load as load_params
+    from repro.core.isa import ABLATION_GRID, OptConfig
+    from repro.core.simulator import AraSimulator
+    from repro.core.traces import axpy, dotp, scal
+    from repro.launch.sweep_cache import SweepCache, cell_key
+    from repro.obs import export as obs_export
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    runlog = out / "runlog.jsonl"
+    if runlog.exists():
+        runlog.unlink()                    # one smoke run per file
+
+    params = load_params()
+    traces = [scal(256), axpy(256), dotp(256)]
+    opts = [OptConfig.baseline(), *ABLATION_GRID]
+
+    # numpy attribution pass, then a cold + warm jax pass so the runlog
+    # carries both exec.jax.compile and exec.jax.execute leaves.
+    api.simulate(traces, opts, params, backend="numpy",
+                 attribution=True, runlog=runlog)
+    api.simulate(traces, opts, params, backend="jax", runlog=runlog)
+    api.simulate(traces, opts, params, backend="jax", runlog=runlog)
+
+    # One miss/put/hit cycle so the cache counters are non-trivial.
+    cache = SweepCache(out / "cache")
+    sim = AraSimulator(params=params)
+    res = sim.run(traces[0], opts[0])
+    key = cell_key(traces[0], opts[0], params)
+    cache.get(key)                         # miss
+    cache.put_result(key, res)
+    cache.get(key)                         # hit
+    obs_export.flush(runlog)               # metrics snapshot update
+
+    records = obs_export.read_runlog(runlog)
+    trace_path = obs_export.export_merged_trace(
+        out / "merged_trace.json", records, [(traces[0], res)])
+
+    print(obs_export.summarize_runlog(runlog))
+    print(f"\nmerged trace: {trace_path}")
+
+    unknown = obs_export.check_metric_names(runlog)
+    if unknown:
+        print(f"\nUNDOCUMENTED METRICS: {', '.join(unknown)}",
+              file=sys.stderr)
+        return 1
+    print("all recorded metric names documented")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
