@@ -12,8 +12,19 @@ Results land in ``benchmarks/BENCH_simulate.json`` keyed by a machine
 fingerprint (arch + cpu count + jax device kind), so numbers measured on
 different hosts never compare against each other.  The recorded steady
 numbers are the evidence behind the ``auto`` policy constants
-(`api.JAX_WIDTH_CROSSOVER`, `api.ASSOC_INSTR_CROSSOVER`) and the tables
-in docs/backends.md.
+(`api.JAX_WIDTH_CROSSOVER`, `api.ASSOC_INSTR_CROSSOVER`,
+`api.BUCKET_WASTE_CROSSOVER`) and the tables in docs/backends.md.
+Each entry also carries a ``crossovers`` fold that
+`api.measured_crossovers` reads at plan-resolution time: non-null values
+override the code constants on that machine, nulls fall back (CPU-only
+hosts record nulls — the code defaults were measured there).
+
+``--planner`` additionally measures the execution planner
+(`docs/backends.md` "execution planner"): pad-waste share of the mixed
+11-kernel smoke stack before/after shape bucketing, bucketed vs
+unbucketed jax-scan steady wall time, and the async P-axis pipeline's
+dispatch occupancy.  The planner fold rides the same drift gate, plus an
+absolute pad-waste regression gate (bucketing must keep waste down).
 
     python benchmarks/bench_record.py --check    # CI: drift gate
     python benchmarks/bench_record.py --record   # refresh this machine
@@ -155,6 +166,70 @@ def measure() -> dict:
     }
 
 
+#: Planner steady timings under the same drift gate as GATED.
+PLANNER_GATED = ("jax_scan_unbucketed_us", "jax_scan_bucketed_us")
+
+#: Allowed absolute increase of the bucketed pad-waste share vs the
+#: recorded entry (shape-driven, so near-deterministic; 0.02 absorbs
+#: trace-generator tweaks without letting bucketing quietly rot).
+PAD_WASTE_TOL = 0.02
+
+#: entry["crossovers"] template: the measured overrides for the auto
+#: policy thresholds.  Nulls mean "use the code constant" — the right
+#: answer on CPU-only hosts, where those constants were measured.
+#: Accelerator hosts with different crossovers fill these by hand from
+#: a --record run's ratios.
+NULL_CROSSOVERS = {"jax_width": None, "assoc_instrs": None,
+                   "bucket_waste": None}
+
+
+def measure_planner() -> dict:
+    """Measure the execution planner on the full mixed-length 11-kernel
+    smoke grid: pad-waste shares before/after bucketing, bucketed vs
+    unbucketed jax-scan steady wall, and pipeline dispatch occupancy."""
+    from repro.core import bucketing
+    from repro.obs import metrics as obs_metrics
+
+    params = load_params()
+    traces = gridlib.paper_traces("smoke")        # all 11: mixed lengths
+    opts = [OptConfig.baseline(), *ABLATION_GRID]
+    stacked = stack_traces(list(traces.values()))
+    buckets = bucketing.plan_buckets(stacked)
+
+    def run(bucket):
+        return lambda: api.simulate(stacked, opts, params,
+                                    backend="jax", method="scan",
+                                    bucket=bucket, shard="none")
+
+    timings = {
+        "jax_scan_unbucketed_compile_us": _first_call_us(run("none")),
+        "jax_scan_unbucketed_us": timed(run("none")),
+        "jax_scan_bucketed_compile_us": _first_call_us(run("pow2")),
+        "jax_scan_bucketed_us": timed(run("pow2")),
+    }
+    # Occupancy of the async P-axis pipeline: a chunked wide-params
+    # sweep (8 candidates, p_chunk=2 -> 4 dispatches) sets the gauge.
+    api.simulate(stacked, opts, [params] * 8, backend="jax",
+                 method="scan", bucket="none", shard="none", p_chunk=2)
+    occupancy = obs_metrics.gauge("plan.pipeline_occupancy").value
+    return {
+        "grid": {"profile": "smoke", "kernels": len(traces),
+                 "corners": len(opts),
+                 "n_instrs": int(stacked.kind.shape[1])},
+        "buckets": len(buckets),
+        "bucket_caps": [b.cap for b in buckets],
+        "pad_waste_unbucketed": round(
+            bucketing.pad_waste_share(stacked), 4),
+        "pad_waste_bucketed": round(
+            bucketing.pad_waste_share(stacked, buckets), 4),
+        "timings": {k: round(v, 1) for k, v in timings.items()},
+        "bucketed_speedup": round(
+            timings["jax_scan_unbucketed_us"]
+            / timings["jax_scan_bucketed_us"], 3),
+        "pipeline_occupancy": round(occupancy, 3),
+    }
+
+
 def measure_kernels() -> dict:
     """Smoke-profile per-kernel microbench timings (ROADMAP item 5:
     the Pallas-kernel trajectory folded into the same machine-keyed
@@ -194,6 +269,21 @@ def check(entry: dict, recorded: dict, tol: float) -> list[str]:
         if old and new > tol * old:
             problems.append(f"kernels.{name}: {new:.0f}us vs recorded "
                             f"{old:.0f}us (> {tol:g}x)")
+    # Planner fold: steady timings under the same tol, pad waste under
+    # an absolute regression gate (it is shape-driven, not wall-clock).
+    newp, oldp = entry.get("planner", {}), recorded.get("planner", {})
+    for name in PLANNER_GATED:
+        old = oldp.get("timings", {}).get(name)
+        new = newp.get("timings", {}).get(name)
+        if old and new and new > tol * old:
+            problems.append(f"planner.{name}: {new:.0f}us vs recorded "
+                            f"{old:.0f}us (> {tol:g}x)")
+    old = oldp.get("pad_waste_bucketed")
+    new = newp.get("pad_waste_bucketed")
+    if old is not None and new is not None and new > old + PAD_WASTE_TOL:
+        problems.append(
+            f"planner.pad_waste_bucketed: {new:.4f} vs recorded "
+            f"{old:.4f} (> +{PAD_WASTE_TOL:g} abs)")
     return problems
 
 
@@ -209,6 +299,10 @@ def main(argv=None) -> int:
     ap.add_argument("--kernels", action="store_true",
                     help="also measure the per-kernel microbench "
                          "(kernel_bench smoke profile) into the entry")
+    ap.add_argument("--planner", action="store_true",
+                    help="also measure the execution planner (pad-waste "
+                         "shares, bucketed vs unbucketed wall, pipeline "
+                         "occupancy) into the entry")
     args = ap.parse_args(argv)
     if not (args.record or args.check):
         ap.error("pass --record and/or --check")
@@ -222,6 +316,14 @@ def main(argv=None) -> int:
         # A kernels-less run must not silently drop the recorded
         # trajectory (or its drift gate) — carry it forward unmeasured.
         entry["kernels"] = records[key]["kernels"]
+    if args.planner:
+        entry["planner"] = measure_planner()
+    elif key in records and "planner" in records[key]:
+        entry["planner"] = records[key]["planner"]
+    # Crossover overrides are hand-curated (possibly on accelerator
+    # hosts); re-recording must never clobber them with nulls.
+    entry["crossovers"] = (records.get(key, {}).get("crossovers")
+                           or dict(NULL_CROSSOVERS))
     print(f"# {key}: "
           + ", ".join(f"{k}={v}" for k, v in entry["timings"].items()))
     print(f"# ratios: {entry['ratios']}")
@@ -231,6 +333,12 @@ def main(argv=None) -> int:
     if args.kernels:
         print("# kernels: "
               + ", ".join(f"{k}={v}" for k, v in entry["kernels"].items()))
+    if args.planner:
+        p = entry["planner"]
+        print(f"# planner: pad_waste {p['pad_waste_unbucketed']} -> "
+              f"{p['pad_waste_bucketed']} ({p['buckets']} buckets), "
+              f"bucketed_speedup {p['bucketed_speedup']}x, "
+              f"pipeline_occupancy {p['pipeline_occupancy']}")
 
     rc = 0
     if args.check and key in records:

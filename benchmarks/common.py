@@ -45,13 +45,23 @@ def execution_args(ap) -> None:
                     help="jax instruction-axis algorithm: sequential "
                          "lax.scan or the log-depth max-plus assoc "
                          "engine (default: the shared grid's setting)")
+    ap.add_argument("--bucket", choices=("none", "pow2", "auto"),
+                    default=None,
+                    help="execution-planner shape bucketing for the "
+                         "batched grid passes; changes wall-clock only, "
+                         "never results (default: the shared grid's "
+                         "setting)")
 
 
 def apply_execution_args(args) -> None:
-    """Route parsed ``--backend``/``--method`` into the shared grid."""
-    if args.backend is not None or args.method is not None:
+    """Route parsed ``--backend``/``--method``/``--bucket`` into the
+    shared grid."""
+    bucket = getattr(args, "bucket", None)
+    if args.backend is not None or args.method is not None \
+            or bucket is not None:
         from benchmarks import gridlib
-        gridlib.set_execution(backend=args.backend, method=args.method)
+        gridlib.set_execution(backend=args.backend, method=args.method,
+                              bucket=bucket)
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:

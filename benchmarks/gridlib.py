@@ -67,6 +67,7 @@ PROFILE_SIZES: dict[str, dict[str, tuple]] = {
 _profile = "default"
 _backend = "numpy"
 _method = "scan"
+_bucket = "auto"
 
 
 def set_profile(name: str) -> None:
@@ -82,25 +83,32 @@ def active_profile() -> str:
 
 
 def set_execution(backend: str | None = None,
-                  method: str | None = None) -> None:
+                  method: str | None = None,
+                  bucket: str | None = None) -> None:
     """Select the execution strategy for the shared grid (`grid()`).
 
     ``backend`` in ``numpy``/``jax``/``auto``; ``method`` in
     ``scan``/``assoc``/``auto`` — the ``--backend``/``--method`` flags of
-    the fig scripts land here.  Choices are validated by
+    the fig scripts land here.  ``bucket`` picks the planner's shape
+    bucketing (``none``/``pow2``/``auto``); it changes execution shape
+    only, never results or cache keys.  Choices are validated by
     `repro.core.api.resolve_plan` at evaluation time (so ``auto`` can
     resolve per miss-batch); an already-built shared grid is updated in
     place, keeping its cache and compiled programs."""
-    global _backend, _method
+    global _backend, _method, _bucket
     if backend is not None:
         _backend = backend
     if method is not None:
         _method = method
+    if bucket is not None:
+        _bucket = bucket
     if _shared is not None:
         if backend is not None:
             _shared.backend = backend
         if method is not None:
             _shared.method = method
+        if bucket is not None:
+            _shared.bucket = bucket
 
 
 def active_method() -> str:
@@ -131,13 +139,15 @@ class Grid:
     def __init__(self, params: SimParams | None = None,
                  mc: MachineConfig = MachineConfig(),
                  cache: SweepCache | None = None, use_cache: bool = True,
-                 backend: str = "numpy", method: str = "scan"):
+                 backend: str = "numpy", method: str = "scan",
+                 bucket: str = "auto"):
         self.params = params if params is not None else load_params()
         self.mc = mc
         self.cache = cache if cache is not None else SweepCache()
         self.use_cache = use_cache
         self.backend = backend
         self.method = method
+        self.bucket = bucket
         self.sim = BatchAraSimulator(mc)
 
     def cells(self, traces: Mapping[str, KernelTrace],
@@ -199,6 +209,7 @@ class Grid:
             batch = api.simulate(stacked, run_opts, self.params,
                                  mc=self.mc, backend=plan.backend,
                                  method=plan.method,
+                                 bucket=self.bucket,
                                  attribution=attribution, sim=self.sim)
             pg = (phase_decompose_grid(run_traces, batch, mc=self.mc,
                                        params=[self.params])
@@ -249,7 +260,8 @@ class Grid:
                         attribution=attribution,
                         cache=self.cache, use_cache=self.use_cache,
                         p_chunk=p_chunk if p_chunk is not None
-                        else DEFAULT_P_CHUNK, sim=self.sim)
+                        else DEFAULT_P_CHUNK, bucket=self.bucket,
+                        sim=self.sim)
 
     def base_and_full(self, traces: Mapping[str, KernelTrace]
                       ) -> dict[tuple[str, str], SimResult]:
@@ -264,5 +276,5 @@ def grid() -> Grid:
     so fig3/fig4/table1/... cooperate through one cache/simulator)."""
     global _shared
     if _shared is None:
-        _shared = Grid(backend=_backend, method=_method)
+        _shared = Grid(backend=_backend, method=_method, bucket=_bucket)
     return _shared

@@ -56,14 +56,19 @@ def batch_grid_rows() -> list[dict]:
 
     stacked = stack_traces(list(traces.values()))
 
-    def batched():
-        return api.simulate(stacked, opts, params,
-                            backend="numpy", method="scan")
+    def batched(bucket="none"):
+        return lambda: api.simulate(stacked, opts, params,
+                                    backend="numpy", method="scan",
+                                    bucket=bucket, shard="none")
 
     scalar_us = timed(scalar_loop)
-    batch_us = timed(batched)
+    batch_us = timed(batched())
+    # Shape-bucketed variant: numpy already skips pad rows per trace, so
+    # this times the planner's grouping overhead, not a pad-waste win —
+    # the jax-side win is recorded by bench_record.py --planner.
+    bucketed_us = timed(batched("pow2"))
     print(f"# table1 grid ({n_cells} cells): scalar {scalar_us:.0f}us, "
-          f"batched {batch_us:.0f}us, "
+          f"batched {batch_us:.0f}us, bucketed {bucketed_us:.0f}us, "
           f"speedup {scalar_us / max(batch_us, 1e-9):.2f}x")
     return [
         {"kernel": "table1_grid_scalar_loop", "shape": shape,
@@ -71,6 +76,9 @@ def batch_grid_rows() -> list[dict]:
          "tpu_roofline_us": float("nan"), "hbm_bytes": 0},
         {"kernel": "table1_grid_batched", "shape": shape,
          "cpu_interpret_us": batch_us,
+         "tpu_roofline_us": float("nan"), "hbm_bytes": 0},
+        {"kernel": "table1_grid_bucketed", "shape": shape,
+         "cpu_interpret_us": bucketed_us,
          "tpu_roofline_us": float("nan"), "hbm_bytes": 0},
     ]
 

@@ -29,10 +29,16 @@ mapping remains documented in docs/architecture.md.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import json
+import os
+import pathlib
+import platform
 from typing import Mapping, Sequence
 
 import time
 
+from repro.core import bucketing
 from repro.core.batch_sim import BatchAraSimulator, BatchResult
 from repro.core.isa import KernelTrace, MachineConfig, OptConfig
 from repro.core.simulator import SimParams
@@ -43,7 +49,9 @@ from repro.obs import spans as obs_spans
 
 __all__ = [
     "ExecutionPlan", "simulate", "resolve_plan", "have_jax",
-    "jax_accelerator", "JAX_WIDTH_CROSSOVER", "ASSOC_INSTR_CROSSOVER",
+    "jax_accelerator", "local_device_count", "measured_crossovers",
+    "JAX_WIDTH_CROSSOVER", "ASSOC_INSTR_CROSSOVER",
+    "BUCKET_WASTE_CROSSOVER",
 ]
 
 #: Measured numpy-vs-jax crossover (grid width ``O * P``): the numbers in
@@ -61,6 +69,59 @@ JAX_WIDTH_CROSSOVER = 512
 #: constraint.  ``auto`` therefore only picks assoc on accelerator hosts,
 #: and only for traces long enough that scan depth dominates compile+run.
 ASSOC_INSTR_CROSSOVER = 4096
+
+#: Pad-waste share above which ``bucket="auto"`` turns on shape
+#: bucketing for jax execution (`repro.core.bucketing`): below it the
+#: extra dispatches + compiles cost more than the masked pad steps they
+#: save; well above it the bucketed path wins big (the measured planner
+#: entry in benchmarks/BENCH_simulate.json shows the smoke grid at 85%
+#: waste running >8x faster bucketed).  numpy never buckets on auto —
+#: its per-row loop already skips padding, so there is nothing to save.
+BUCKET_WASTE_CROSSOVER = 0.25
+
+#: Recorded crossover entries (benchmarks/BENCH_simulate.json, this
+#: machine's key, ``entry["crossovers"]``) override the three policy
+#: constants above when present and non-null.  `bench_record.py` only
+#: records a crossover it actually measured — on CPU-only hosts the
+#: numpy/scan side wins at every measured point, so the recorded values
+#: stay null and the conservative code constants keep gating (ROADMAP
+#: item 1: an accelerator host records real values, and `resolve_plan`
+#: starts trusting them with no code change).
+_BENCH_PATH = (pathlib.Path(__file__).resolve().parents[3]
+               / "benchmarks" / "BENCH_simulate.json")
+
+
+def _machine_key() -> str:
+    """Mirror of `benchmarks.bench_record.machine_key` (kept here so the
+    core package never imports the benchmarks tree)."""
+    if not have_jax():                     # pragma: no cover - env-dep
+        return f"{platform.machine()}-{os.cpu_count()}cpu-nojax"
+    import jax
+    return (f"{platform.machine()}-{os.cpu_count()}cpu-"
+            f"{jax.default_backend()}")
+
+
+@functools.lru_cache(maxsize=1)
+def _recorded_crossovers() -> dict:
+    """This machine's recorded ``crossovers`` fold, or `{}`."""
+    try:
+        records = json.loads(_BENCH_PATH.read_text())
+    except (OSError, ValueError):
+        return {}
+    entry = records.get(_machine_key(), {})
+    cw = entry.get("crossovers", {})
+    return cw if isinstance(cw, dict) else {}
+
+
+def measured_crossovers() -> dict[str, float]:
+    """Effective ``auto`` thresholds: recorded values where measured,
+    code-constant fallbacks otherwise."""
+    cw = _recorded_crossovers()
+    return {
+        "jax_width": cw.get("jax_width") or JAX_WIDTH_CROSSOVER,
+        "assoc_instrs": cw.get("assoc_instrs") or ASSOC_INSTR_CROSSOVER,
+        "bucket_waste": cw.get("bucket_waste") or BUCKET_WASTE_CROSSOVER,
+    }
 
 
 def have_jax() -> bool:
@@ -82,6 +143,17 @@ def jax_accelerator() -> bool:
         return False
 
 
+def local_device_count() -> int:
+    """Local jax device count (1 without jax — nothing to shard over)."""
+    if not have_jax():                     # pragma: no cover - env-dep
+        return 1
+    import jax
+    try:
+        return len(jax.devices())
+    except RuntimeError:                   # pragma: no cover - env-dep
+        return 1
+
+
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
     """A fully-resolved execution strategy for one `simulate` call."""
@@ -91,6 +163,8 @@ class ExecutionPlan:
     p_chunk: int | None = None         # params-axis chunking
     assoc_chunk: int | None = None     # assoc instruction-chunk length
     use_pallas: bool = False           # fuse the assoc combine via Pallas
+    bucket: str = "none"               # "none" | "pow2" shape bucketing
+    shard: str = "none"                # "none" | "devices" P-axis shard
 
     def __post_init__(self):
         if self.backend not in ("numpy", "jax"):
@@ -100,18 +174,39 @@ class ExecutionPlan:
         if self.backend == "numpy" and self.method == "assoc":
             raise ValueError("method='assoc' requires backend='jax' "
                              "(the max-plus engine is jax-only)")
+        if self.bucket not in ("none", *bucketing.POLICIES):
+            raise ValueError(f"unknown bucket policy {self.bucket!r} "
+                             f"(known: none, {', '.join(bucketing.POLICIES)})")
+        if self.shard not in ("none", "devices"):
+            raise ValueError(f"unknown shard mode {self.shard!r} "
+                             "(known: none, devices)")
+        if self.shard == "devices" and self.backend != "jax":
+            raise ValueError("shard='devices' requires backend='jax' "
+                             "(shard_map shards the compiled sweep)")
+        if self.shard == "devices" and self.method != "scan":
+            raise ValueError("shard='devices' supports method='scan' "
+                             "only (the assoc engine chunks the "
+                             "instruction axis, not P)")
 
 
 def resolve_plan(*, backend: str = "auto", method: str = "auto",
                  width: int = 1, n_instrs: int = 0,
                  attribution: bool = False, p_chunk: int | None = None,
                  assoc_chunk: int | None = None,
-                 use_pallas: bool = False) -> ExecutionPlan:
+                 use_pallas: bool = False,
+                 bucket: str = "auto", shard: str = "auto",
+                 pad_waste: float = 0.0,
+                 n_params: int = 1) -> ExecutionPlan:
     """Resolve ``auto`` strategy choices against the measured crossovers.
 
     ``width`` is the grid width ``len(opts) * len(params)``; ``n_instrs``
-    the (longest) trace length.  The decision table (measured numbers in
-    docs/backends.md):
+    the (longest) trace length; ``pad_waste`` the stacked grid's padded-
+    step share (`repro.core.bucketing.pad_waste_share` — 0.0 when the
+    caller has no stack at hand, which resolves ``bucket="auto"`` to
+    "none").  Thresholds come from `measured_crossovers()`: the values
+    this machine's BENCH_simulate.json entry recorded where measured,
+    the conservative code constants where not.  The decision table
+    (measured numbers in docs/backends.md):
 
     * backend ``auto`` → ``jax`` only on accelerator hosts with
       ``width >= JAX_WIDTH_CROSSOVER``; otherwise ``numpy`` (on CPU the
@@ -121,19 +216,37 @@ def resolve_plan(*, backend: str = "auto", method: str = "auto",
       the sequential scan wins at every measured trace length — the
       assoc engine trades ~``D``x work for log depth, which only pays
       when depth, not throughput, is the bottleneck).
+    * bucket ``auto`` → ``pow2`` on the jax backend when ``pad_waste >=
+      BUCKET_WASTE_CROSSOVER`` (the numpy loop already skips pad rows,
+      so bucketing can only cost there); otherwise ``none``.
+    * shard ``auto`` → ``devices`` on the jax scan path when more than
+      one local device exists and the params axis has at least one
+      column per device; otherwise ``none`` (a 1-device host gains
+      nothing from the shard_map detour).
     """
+    cw = measured_crossovers()
     if backend == "auto":
-        backend = ("jax" if width >= JAX_WIDTH_CROSSOVER
+        backend = ("jax" if width >= cw["jax_width"]
                    and jax_accelerator() else "numpy")
         obs_metrics.counter("plan.auto_backend", backend).inc()
     if method == "auto":
         method = ("assoc" if backend == "jax" and jax_accelerator()
-                  and n_instrs >= ASSOC_INSTR_CROSSOVER else "scan")
+                  and n_instrs >= cw["assoc_instrs"] else "scan")
         obs_metrics.counter("plan.auto_method", method).inc()
+    if bucket == "auto":
+        bucket = ("pow2" if backend == "jax"
+                  and pad_waste >= cw["bucket_waste"] else "none")
+        obs_metrics.counter("plan.auto_bucket", bucket).inc()
+    if shard == "auto":
+        n_dev = local_device_count()
+        shard = ("devices" if backend == "jax" and method == "scan"
+                 and n_dev > 1 and n_params >= n_dev else "none")
+        obs_metrics.counter("plan.auto_shard", shard).inc()
     obs_metrics.counter("plan.resolved").inc()
     return ExecutionPlan(backend=backend, method=method,
                          attribution=attribution, p_chunk=p_chunk,
-                         assoc_chunk=assoc_chunk, use_pallas=use_pallas)
+                         assoc_chunk=assoc_chunk, use_pallas=use_pallas,
+                         bucket=bucket, shard=shard)
 
 
 _SIMS: dict[tuple, BatchAraSimulator] = {}
@@ -166,6 +279,7 @@ def simulate(traces, opts: Sequence[OptConfig],
              backend: str = "auto", method: str = "auto",
              attribution: bool = False, p_chunk: int | None = None,
              assoc_chunk: int | None = None, use_pallas: bool = False,
+             bucket: str = "auto", shard: str = "auto",
              sim: BatchAraSimulator | None = None,
              runlog=None) -> BatchResult:
     """Evaluate the `(traces x opts x params)` grid under one resolved
@@ -176,6 +290,13 @@ def simulate(traces, opts: Sequence[OptConfig],
     resolved by `resolve_plan` (pass concrete values to pin them); `sim`
     optionally reuses a caller-owned `BatchAraSimulator` (its compiled
     jax programs) instead of the shared per-`mc` instance.
+
+    ``bucket`` groups mixed-length traces into shape buckets so the jax
+    backends stop scanning padded no-op steps (`repro.core.bucketing`;
+    results are scattered back into input order and parity-tested
+    against the unbucketed path).  ``shard`` splits the params axis
+    across local devices via `shard_map` (`repro.launch.mesh`); on a
+    single-device host the sharded program is the unsharded one.
 
     ``runlog`` (or the ``REPRO_RUNLOG`` env var) names a JSON-lines file
     to append this call's span tree and a metrics snapshot to; it
@@ -201,19 +322,36 @@ def simulate(traces, opts: Sequence[OptConfig],
                                     attribution=attribution,
                                     p_chunk=p_chunk,
                                     assoc_chunk=assoc_chunk,
-                                    use_pallas=use_pallas)
+                                    use_pallas=use_pallas,
+                                    bucket=bucket, shard=shard,
+                                    pad_waste=bucketing.pad_waste_share(
+                                        stacked),
+                                    n_params=len(params))
             root.set(backend=plan.backend, method=plan.method,
                      attribution=plan.attribution,
                      n_traces=int(stacked.kind.shape[0]),
-                     n_opts=len(opts), n_params=len(params))
+                     n_opts=len(opts), n_params=len(params),
+                     bucket=plan.bucket, shard=plan.shard)
             simulator = sim if sim is not None else _shared_sim(mc)
             with obs_spans.span("exec", backend=plan.backend,
                                 method=plan.method):
-                result = simulator._run(
-                    stacked, opts, params, backend=plan.backend,
-                    attribution=plan.attribution, p_chunk=plan.p_chunk,
-                    method=plan.method, assoc_chunk=plan.assoc_chunk,
-                    use_pallas=plan.use_pallas)
+                if plan.bucket != "none":
+                    result = bucketing.run_bucketed(
+                        simulator, stacked, opts, params,
+                        policy=plan.bucket, backend=plan.backend,
+                        method=plan.method,
+                        attribution=plan.attribution,
+                        p_chunk=plan.p_chunk,
+                        assoc_chunk=plan.assoc_chunk,
+                        use_pallas=plan.use_pallas, shard=plan.shard)
+                else:
+                    result = simulator._run(
+                        stacked, opts, params, backend=plan.backend,
+                        attribution=plan.attribution,
+                        p_chunk=plan.p_chunk,
+                        method=plan.method,
+                        assoc_chunk=plan.assoc_chunk,
+                        use_pallas=plan.use_pallas, shard=plan.shard)
         obs_metrics.counter("simulate.calls").inc()
         obs_metrics.counter("simulate.cells").inc(
             stacked.kind.shape[0] * len(opts) * len(params))

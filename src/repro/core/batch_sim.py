@@ -68,6 +68,7 @@ from repro.core.stalls import (DEP_ISSUE_GAP, DEP_WAR_RELEASE, IDEAL,
                                OPR_BANK_CONFLICT, OPR_CHAIN_DELAY,
                                OPR_QUEUE_LIMIT)
 from repro.core.traces import PAD, StackedTraces
+from repro.obs import metrics as obs_metrics
 from repro.obs import spans as obs_spans
 
 _LOAD, _STORE, _COMPUTE, _REDUCE, _SLIDE = 0, 1, 2, 3, 4
@@ -231,6 +232,14 @@ class BatchAraSimulator:
         # a fresh signature is reported as the "compile" span, later
         # calls as "execute" (the first-call vs cached-callable split).
         self._jax_seen: set[tuple] = set()
+        # Device-resident trace fields, keyed by stack identity: a
+        # chunked-P run re-dispatches the same (large, read-only) trace
+        # arrays once per chunk, so they are uploaded once and the
+        # device buffers reused across every chunk.  (The per-chunk
+        # view buffers cannot be donated to outputs — their (W,) shape
+        # never aliases the (B, W) results, XLA would just warn — so
+        # buffer reuse on the trace side is where the transfer win is.)
+        self._dev_fields: dict[int, tuple] = {}
 
     # -- engine dispatch ----------------------------------------------------
     # (`repro.core.api.simulate` is the public entrypoint; the former
@@ -244,6 +253,7 @@ class BatchAraSimulator:
              method: str = "scan",
              assoc_chunk: int | None = None,
              use_pallas: bool = False,
+             shard: str = "none",
              _chunk_lo: int = 0) -> BatchResult:
         """Evaluate the `(trace x opt x params)` grid.
 
@@ -258,7 +268,15 @@ class BatchAraSimulator:
         `W = O * P`); results are concatenated back and bit-identical to
         the unchunked run (chunks are independent grid columns).  On the
         jax backend the last chunk is padded up to `p_chunk` (and the
-        padding sliced off) so every chunk reuses one compiled shape.
+        padding sliced off) so every chunk reuses one compiled shape,
+        and the chunks run as an **async pipeline**: every chunk is
+        dispatched before any result is pulled back to the host, so
+        device execution of chunk `k` overlaps host-side view
+        construction of chunk `k+1` and the host blocks exactly once.
+
+        ``shard="devices"`` (jax scan only) runs each dispatch through
+        `repro.launch.mesh.sharded_sweep`, splitting the params columns
+        across the local devices under `shard_map`.
         """
         if isinstance(params, SimParams):
             params = [params]
@@ -269,9 +287,17 @@ class BatchAraSimulator:
         if method == "assoc" and backend != "jax":
             raise ValueError("method='assoc' requires backend='jax' "
                              "(the max-plus engine is jax-only)")
+        if shard not in ("none", "devices"):
+            raise ValueError(f"unknown shard mode {shard!r}")
+        if shard == "devices" and (backend != "jax" or method != "scan"):
+            raise ValueError("shard='devices' requires backend='jax' "
+                             "and method='scan'")
         if p_chunk is not None and p_chunk < 1:
             raise ValueError(f"p_chunk must be >= 1, got {p_chunk}")
         if p_chunk is not None and len(params) > p_chunk:
+            if backend == "jax" and method == "scan":
+                return self._run_pipelined(stacked, opts, params,
+                                           attribution, p_chunk, shard)
             parts = []
             for lo in range(0, len(params), p_chunk):
                 chunk = params[lo:lo + p_chunk]
@@ -293,21 +319,28 @@ class BatchAraSimulator:
                             size=len(params), width=view.width):
             if method == "assoc":
                 from repro.core import assoc_sim
-                cyc, bf, bb, comp, lfo, ffo, fst = assoc_sim.run_assoc(
+                outs = assoc_sim.run_assoc(
                     self.mc, stacked, view, attribution,
                     chunk=assoc_chunk, use_pallas=use_pallas)
             elif backend == "numpy":
                 with obs_spans.span("exec.numpy.scan",
                                     batch=stacked.batch,
                                     width=view.width):
-                    cyc, bf, bb, comp, lfo, ffo, fst = self._run_numpy(
-                        stacked, view, attribution)
+                    outs = self._run_numpy(stacked, view, attribution)
             elif backend == "jax":
-                cyc, bf, bb, comp, lfo, ffo, fst = self._run_jax(
-                    stacked, view, attribution)
+                raw = self._dispatch_jax(stacked, view, attribution,
+                                         n_opts=len(opts), shard=shard,
+                                         block=True)
+                outs = _materialize_jax(raw, attribution)
             else:
                 raise ValueError(f"unknown backend {backend!r}")
-        shape = (stacked.batch, len(opts), len(params))
+        return self._package(stacked, outs, len(opts), len(params))
+
+    def _package(self, stacked: StackedTraces, outs, n_opts: int,
+                 n_params: int) -> BatchResult:
+        """Reshape a backend's flat `(B, W)` 7-tuple into a BatchResult."""
+        cyc, bf, bb, comp, lfo, ffo, fst = outs
+        shape = (stacked.batch, n_opts, n_params)
         return BatchResult(names=stacked.names,
                            cycles=cyc.reshape(shape),
                            busy_fpu=bf.reshape(shape),
@@ -321,6 +354,50 @@ class BatchAraSimulator:
                            lane_first_out=lfo.reshape(shape),
                            first_first_out=ffo.reshape(shape),
                            finish_start=fst.reshape(shape))
+
+    def _run_pipelined(self, stacked: StackedTraces,
+                       opts: Sequence[OptConfig],
+                       params: Sequence[SimParams],
+                       attribution: bool, p_chunk: int,
+                       shard: str) -> BatchResult:
+        """Chunked-P jax execution as an async pipeline.
+
+        All chunks are dispatched back-to-back — jax dispatch is async,
+        so the device crunches chunk `k` while the host builds the views
+        for chunk `k+1` — and results stay as device buffers until one
+        final drain (`exec.jax.drain` span) materializes everything.
+        The old path recursed through `_run` and paid a
+        `block_until_ready` + host copy per chunk.  Reports
+        `plan.pipeline_chunks` / `plan.pipeline_occupancy` (dispatch
+        share of total wall-clock: ~1.0 means the drain found results
+        already finished, i.e. the pipeline stayed full).
+        """
+        import time
+        t0 = time.perf_counter()
+        raws = []
+        for lo in range(0, len(params), p_chunk):
+            chunk = list(params[lo:lo + p_chunk])
+            pad = p_chunk - len(chunk)
+            view = make_views(opts, chunk + [chunk[-1]] * pad)
+            with obs_spans.span("exec.p_chunk", lo=lo, size=len(chunk),
+                                width=view.width):
+                raw = self._dispatch_jax(stacked, view, attribution,
+                                         n_opts=len(opts), shard=shard,
+                                         block=False)
+            raws.append((raw, len(chunk)))
+        obs_metrics.counter("plan.pipeline_chunks").inc(len(raws))
+        t_dispatch = time.perf_counter() - t0
+        with obs_spans.span("exec.jax.drain", chunks=len(raws)):
+            parts = []
+            for raw, keep in raws:
+                outs = _materialize_jax(raw, attribution)
+                part = self._package(stacked, outs, len(opts), p_chunk)
+                parts.append(_slice_p(part, keep)
+                             if keep != p_chunk else part)
+        total = time.perf_counter() - t0
+        obs_metrics.gauge("plan.pipeline_occupancy").set(
+            t_dispatch / total if total > 0 else 0.0)
+        return _concat_p(parts)
 
     # -- numpy backend ------------------------------------------------------
     def _run_numpy(self, st: StackedTraces, v: ParamView,
@@ -683,29 +760,65 @@ class BatchAraSimulator:
                 lane_fo, first_fo, fin_start)
 
     # -- jax backend --------------------------------------------------------
-    def _run_jax(self, st: StackedTraces, v: ParamView,
-                 attribution: bool = False):
+    def _device_fields(self, st: StackedTraces) -> tuple:
+        """Trace fields as device-resident buffers, uploaded once per
+        stack.  Identity-keyed with a strong reference to the stack (so
+        a recycled `id()` can never alias) and bounded: chunked runs hit
+        the same entry once per chunk instead of re-transferring the
+        `(I, B)` arrays."""
+        ent = self._dev_fields.get(id(st))
+        if ent is not None and ent[0] is st:
+            return ent[1]
+        import jax
+        fields = tuple(jax.device_put(a) for a in _jax_fields(st))
+        if len(self._dev_fields) >= 8:
+            self._dev_fields.clear()
+        self._dev_fields[id(st)] = (st, fields)
+        return fields
+
+    def _dispatch_jax(self, st: StackedTraces, v: ParamView,
+                      attribution: bool = False, n_opts: int = 1,
+                      shard: str = "none", block: bool = True):
+        """Dispatch one compiled sweep; returns the raw device-array
+        7-tuple in the sweep's own order ``(cyc, bf, bb, lfo, ffo, fst,
+        comp)``.  With ``block=False`` the call returns as soon as the
+        computation is enqueued — the pipelined chunk loop relies on
+        this to overlap chunks (`_materialize_jax` syncs later)."""
         from jax.experimental import enable_x64
         with enable_x64():
             fn = self._jax_fns.get(attribution)
             if fn is None:
                 fn = _build_jax_sweep(self.mc, attribution)
                 self._jax_fns[attribution] = fn
-            fields = _jax_fields(st)
+            fields = self._device_fields(st)
             views = dataclasses.astuple(v)
             R = max(st.max_regs, 1)
             sig = (attribution, st.kind.shape, st.srcs.shape[2],
-                   v.width, R)
+                   v.width, R, shard)
             fresh = sig not in self._jax_seen
             name = "exec.jax.compile" if fresh else "exec.jax.execute"
             with obs_spans.span(name, batch=st.batch, width=v.width,
                                 n_instrs=int(st.kind.shape[1])):
-                cyc, bf, bb, lfo, ffo, fst, comp = fn(fields, views, R)
-                cyc.block_until_ready()
+                if shard == "devices":
+                    from repro.launch import mesh as launch_mesh
+                    out = launch_mesh.sharded_sweep(
+                        fn, fields, views, R, n_opts, attribution)
+                else:
+                    out = fn(fields, views, R)
+                if block:
+                    out[0].block_until_ready()
             self._jax_seen.add(sig)
-        return (np.asarray(cyc), np.asarray(bf), np.asarray(bb),
-                np.asarray(comp) if attribution else None,
-                np.asarray(lfo), np.asarray(ffo), np.asarray(fst))
+        return out
+
+
+def _materialize_jax(raw, attribution: bool):
+    """Pull a `_dispatch_jax` result to host, reordered to the shared
+    backend convention ``(cyc, bf, bb, comp, lfo, ffo, fst)``.  This is
+    the only host sync on the jax path."""
+    cyc, bf, bb, lfo, ffo, fst, comp = raw
+    return (np.asarray(cyc), np.asarray(bf), np.asarray(bb),
+            np.asarray(comp) if attribution else None,
+            np.asarray(lfo), np.asarray(ffo), np.asarray(fst))
 
 
 def _jax_fields(st: StackedTraces) -> tuple:

@@ -1,0 +1,161 @@
+"""Shape-bucketed grid execution: stop paying for the longest trace.
+
+`repro.core.traces.stack_traces` pads every trace in a grid to the
+longest one, and the jax backends scan the *padded* instruction axis —
+masked no-op steps for every `PAD` row.  On a mixed grid (scal's ~10
+instructions stacked with gemm's hundreds) the majority of all scan
+steps are padding.  The numpy backend never pays this (its per-row
+Python loop stops at `n_instrs[b]`), which is also why bucketing is
+*structurally* bit-exact there: rows are independent, so any row
+subset computes exactly the same numbers.
+
+This module groups the trace rows of a `StackedTraces` into **shape
+buckets** by padded instruction length (power-of-two bucket edges, so
+at most `log2(I)` compiled programs exist per grid family and a bucket
+never groups rows more than 2x apart; each bucket then pads only to
+its own longest member), runs the batched engine once per bucket via
+`StackedTraces.subset`, and scatters the per-bucket results back into
+the caller's original row order.  The scatter covers every
+`BatchResult` field — per-cell tensors, per-trace flops/bytes, the
+attribution/phase observables — so callers cannot tell a bucketed run
+from an unbucketed one except by wall-clock and the `bucket.*` metrics.
+
+Bucketing also shrinks the assoc engine's basis: `D = 8 + 3R` is
+computed from the *bucket's* `max_regs`, so a bucket without the
+register-heavy kernels composes smaller transfer matrices.
+
+The decision to bucket lives in `repro.core.api.resolve_plan`
+(`bucket="auto"` weighs the measured pad-waste share against
+`BUCKET_WASTE_CROSSOVER`); this module only executes the plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.batch_sim import BatchResult
+from repro.core.traces import StackedTraces
+from repro.obs import metrics as obs_metrics
+from repro.obs import spans as obs_spans
+
+#: Bucket-edge policies understood by `plan_buckets` (and the values the
+#: `bucket=` plan axis can resolve to, besides "none").
+POLICIES = ("pow2",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One shape bucket: which stacked rows run together, padded to cap."""
+    rows: tuple[int, ...]              # row indices into the original stack
+    cap: int                           # padded instruction length
+
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
+def plan_buckets(stacked: StackedTraces, policy: str = "pow2"
+                 ) -> list[Bucket]:
+    """Group trace rows into shape buckets by padded instruction length.
+
+    ``pow2`` groups by each trace's instruction count rounded up to the
+    next power of two (clamped to the stack's own padded length), then
+    pads each bucket only to its *longest member* — the edges bound how
+    far apart grouped rows can be (2x), the member-max cap keeps the
+    residual waste to the intra-bucket spread (measured 3% vs 15% for
+    raw pow2 caps on the smoke grid).  A single-bucket plan therefore
+    degenerates to the unbucketed shape exactly.  Buckets are returned
+    shortest-cap first; row order within a bucket preserves the
+    original stack order.
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"unknown bucket policy {policy!r} "
+                         f"(known: {POLICIES})")
+    by_edge: dict[int, list[int]] = {}
+    I = stacked.max_instrs
+    for b, n in enumerate(stacked.n_instrs):
+        edge = min(_next_pow2(int(n)), I)
+        by_edge.setdefault(edge, []).append(b)
+    return [Bucket(rows=tuple(rows),
+                   cap=int(max(stacked.n_instrs[r] for r in rows)))
+            for _, rows in sorted(by_edge.items())]
+
+
+def pad_waste_share(stacked: StackedTraces,
+                    buckets: Sequence[Bucket] | None = None) -> float:
+    """Share of scan steps spent on padding, in [0, 1).
+
+    With `buckets=None` this is the *unbucketed* waste: the stack pays
+    `B * max_instrs` scan steps for `sum(n_instrs)` real instructions.
+    With a bucket plan, each bucket pays `len(rows) * cap` instead.
+    """
+    valid = int(stacked.n_instrs.sum())
+    if buckets is None:
+        steps = stacked.batch * stacked.max_instrs
+    else:
+        steps = sum(len(bk.rows) * bk.cap for bk in buckets)
+    return 1.0 - valid / steps if steps else 0.0
+
+
+def _scatter(stacked: StackedTraces, buckets: Sequence[Bucket],
+             parts: Sequence[BatchResult]) -> BatchResult:
+    """Reassemble per-bucket results into the original row order.
+
+    Every ndarray field of `BatchResult` has the trace axis first, so
+    one row-scatter per field covers per-cell tensors and per-trace
+    vectors alike — a future field is scattered automatically, the same
+    derivation trick `_per_cell_fields` uses for P-axis chunking.
+    """
+    out: dict[str, np.ndarray | None] = {}
+    for f in dataclasses.fields(BatchResult):
+        if f.name == "names":
+            continue
+        vals = [getattr(p, f.name) for p in parts]
+        if vals[0] is None:
+            out[f.name] = None
+            continue
+        arr = np.empty((stacked.batch,) + vals[0].shape[1:],
+                       vals[0].dtype)
+        for bk, v in zip(buckets, vals):
+            arr[np.asarray(bk.rows, np.intp)] = v
+        out[f.name] = arr
+    return BatchResult(names=stacked.names, **out)
+
+
+def run_bucketed(sim, stacked: StackedTraces, opts, params, *,
+                 policy: str = "pow2", backend: str = "numpy",
+                 method: str = "scan", attribution: bool = False,
+                 p_chunk: int | None = None,
+                 assoc_chunk: int | None = None,
+                 use_pallas: bool = False,
+                 shard: str = "none") -> BatchResult:
+    """Execute the grid bucket-by-bucket through `sim._run` and scatter.
+
+    `sim` is a `BatchAraSimulator`; each bucket reuses its compiled-fn
+    caches (keyed on shape signatures, so two grids sharing bucket
+    shapes share compiles).  Emits `bucket.*` metrics: how many buckets
+    the plan formed and the pad-waste share before/after.
+    """
+    buckets = plan_buckets(stacked, policy)
+    obs_metrics.counter("bucket.groups").inc(len(buckets))
+    obs_metrics.gauge("bucket.baseline_waste_share").set(
+        pad_waste_share(stacked))
+    obs_metrics.gauge("bucket.pad_waste_share").set(
+        pad_waste_share(stacked, buckets))
+    parts = []
+    for bk in buckets:
+        sub = stacked
+        if len(buckets) > 1 or bk.cap != stacked.max_instrs:
+            sub = stacked.subset(bk.rows, bk.cap)
+        with obs_spans.span("exec.bucket", rows=len(bk.rows),
+                            cap=bk.cap):
+            parts.append(sim._run(
+                sub, opts, params, backend=backend,
+                attribution=attribution, p_chunk=p_chunk, method=method,
+                assoc_chunk=assoc_chunk, use_pallas=use_pallas,
+                shard=shard))
+    if len(parts) == 1 and parts[0].names == stacked.names:
+        return parts[0]
+    return _scatter(stacked, buckets, parts)

@@ -99,7 +99,9 @@ def evaluate_many(params_list: Sequence[SimParams],
                   traces=None, backend: str = "numpy",
                   attribution: bool = False,
                   method: str = "scan",
-                  assoc_chunk: int | None = None) -> list[dict]:
+                  assoc_chunk: int | None = None,
+                  bucket: str = "auto",
+                  shard: str = "auto") -> list[dict]:
     """Score many candidates with one batched `(kernel x config x
     candidate)` sweep; returns one metrics dict per candidate.
 
@@ -112,7 +114,11 @@ def evaluate_many(params_list: Sequence[SimParams],
     baseline and full-opt cycles (``paths_base/full``,
     ``stalls_base/full``) for `attribution_loss`.  `method` picks the
     instruction-axis algorithm on the jax backend (``scan`` / ``assoc``,
-    see `repro.core.api.simulate`)."""
+    see `repro.core.api.simulate`).  `bucket` / `shard` are the
+    execution-planner axes (shape bucketing and P-axis device sharding
+    — wide candidate populations are exactly the sweeps that shard
+    well); both default to the planner's measured-crossover ``auto``
+    and never change results."""
     traces = traces or _traces()
     names = list(traces)
     params_list = list(params_list)
@@ -125,7 +131,8 @@ def evaluate_many(params_list: Sequence[SimParams],
         res = api.simulate(stacked, _CONFIGS, params_list,
                            backend=backend, method=method,
                            assoc_chunk=assoc_chunk,
-                           attribution=attribution, sim=_SIM)
+                           attribution=attribution,
+                           bucket=bucket, shard=shard, sim=_SIM)
     cycles = res.cycles                        # (kernel, config, candidate)
     gflops = res.gflops
     if attribution:

@@ -73,13 +73,42 @@ def _make_kernel(D: int):
     return kernel
 
 
-def _compose_pallas(b, a, *, block: int = 8, interpret: bool | None = None):
+def _pick_block(n: int, D: int) -> int:
+    """Choose the kernel block size from the batch size and matrix dim.
+
+    A batch smaller than the old fixed ``block=8`` must not pad up to a
+    full block (a 2-pair compose would run 4x the work); a large batch
+    bounds the per-block working set — four ``(block, D, D)`` float64
+    tiles live at once — to ~256 KiB so blocks stay cache-resident as
+    ``D = 8 + 3R`` grows with the register count."""
+    if n <= 0:
+        return 1
+    budget = max(1, (1 << 18) // (4 * D * D * 8))
+    return max(1, min(n, budget, 64))
+
+
+def _tropical_identity(n: int, D: int, dtype):
+    """``n`` stacked tropical identity matrices: 0 on the diagonal,
+    ``-inf`` elsewhere — the semiring's neutral element, so padded rows
+    compose to exact identities instead of the finite garbage zero
+    padding would produce (``tests/test_bucketing.py`` asserts this on
+    the ``n % block != 0`` path)."""
+    import jax.numpy as jnp
+
+    eye = jnp.where(jnp.eye(D, dtype=bool),
+                    jnp.zeros((), dtype), -jnp.inf).astype(dtype)
+    return jnp.broadcast_to(eye, (n, D, D))
+
+
+def _compose_pallas(b, a, *, block: int | None = None,
+                    interpret: bool | None = None):
     """Pallas-fused tropical matmul over a flattened batch of pairs.
 
     Leading dims of `b`/`a` are flattened to one batch axis, padded up to a
-    multiple of `block`, and the kernel runs one grid step per block.
-    ``interpret`` defaults to True on CPU (no Pallas lowering there) and
-    False on accelerator backends.
+    multiple of `block` (default: `_pick_block` from the batch size and
+    `D`) with tropical identity matrices, and the kernel runs one grid
+    step per block.  ``interpret`` defaults to True on CPU (no Pallas
+    lowering there) and False on accelerator backends.
     """
     import jax
     import jax.numpy as jnp
@@ -92,13 +121,15 @@ def _compose_pallas(b, a, *, block: int = 8, interpret: bool | None = None):
     n = 1
     for d in lead:
         n *= d
+    if block is None:
+        block = _pick_block(n, D)
     bf = b.reshape(n, D, D)
     af = a.reshape(n, D, D)
     n2 = -(-n // block) * block
     if n2 != n:
-        pad = ((0, n2 - n), (0, 0), (0, 0))
-        bf = jnp.pad(bf, pad)
-        af = jnp.pad(af, pad)
+        ident = _tropical_identity(n2 - n, D, b.dtype)
+        bf = jnp.concatenate([bf, ident], axis=0)
+        af = jnp.concatenate([af, ident], axis=0)
     c, k = pl.pallas_call(
         _make_kernel(D),
         grid=(n2 // block,),

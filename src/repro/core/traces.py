@@ -75,6 +75,39 @@ class StackedTraces:
     def max_regs(self) -> int:
         return int(self.n_regs.max()) if len(self.n_regs) else 0
 
+    def subset(self, rows: Sequence[int], max_instrs: int | None = None
+               ) -> "StackedTraces":
+        """Select trace rows and (optionally) truncate the instruction
+        axis to `max_instrs` — the padded columns beyond every selected
+        trace's valid prefix are pure `PAD` and carry no state, so a
+        shorter instruction axis is semantically identical.  This is how
+        `repro.core.bucketing` builds per-bucket stacks without
+        re-stacking from the original `KernelTrace` objects.
+
+        The source axis (`max_srcs`) is kept as-is: it is tiny, and a
+        shared width lets every bucket reuse one compiled program family.
+        """
+        idx = np.asarray(list(rows), np.intp)
+        cap = self.max_instrs if max_instrs is None else int(max_instrs)
+        if len(idx) and cap < int(self.n_instrs[idx].max()):
+            raise ValueError(
+                f"max_instrs={cap} would truncate valid instructions "
+                f"(longest selected trace: {int(self.n_instrs[idx].max())})")
+        c = np.ascontiguousarray
+        return StackedTraces(
+            names=tuple(self.names[i] for i in idx),
+            n_instrs=c(self.n_instrs[idx]),
+            kind=c(self.kind[idx, :cap]), vl=c(self.vl[idx, :cap]),
+            sew=c(self.sew[idx, :cap]), nbytes=c(self.nbytes[idx, :cap]),
+            stride=c(self.stride[idx, :cap]),
+            first_strip=c(self.first_strip[idx, :cap]),
+            is_div=c(self.is_div[idx, :cap]),
+            red_levels=c(self.red_levels[idx, :cap]),
+            dst=c(self.dst[idx, :cap]), srcs=c(self.srcs[idx, :cap]),
+            n_regs=c(self.n_regs[idx]),
+            total_flops=c(self.total_flops[idx]),
+            total_bytes=c(self.total_bytes[idx]))
+
 
 def stack_traces(traces: Sequence[KernelTrace]) -> StackedTraces:
     """Pad/stack kernel traces into the batched struct-of-arrays form."""

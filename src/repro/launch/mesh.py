@@ -1,7 +1,23 @@
-"""Production mesh construction (required interface from the brief)."""
+"""Production mesh construction (required interface from the brief).
+
+Also home of the **P-axis sweep sharding** used by the execution
+planner (`repro.core.api.simulate(..., shard="devices")`): a 1-D mesh
+over the local devices plus a `shard_map` wrapper that splits the
+params columns of the compiled batched sweep across them.  The sweep
+is embarrassingly parallel along its width axis (every `(opt, params)`
+cell is an independent column of the scanned state), so the shard
+needs no collectives — each device runs the same program on its slice
+of the params axis and the results concatenate back.  On a one-device
+host the mesh has a single shard and the sharded program is exactly
+the unsharded one (parity-tested in tests/test_bucketing.py), so
+callers never special-case device count.
+"""
 from __future__ import annotations
 
+import functools
+
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,3 +34,64 @@ def make_host_mesh(model: int = 2):
     n = len(jax.devices())
     model = min(model, n)
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+@functools.lru_cache(maxsize=1)
+def make_sweep_mesh():
+    """1-D mesh over all local devices, axis ``p`` (the params axis of
+    a batched sweep).  Cached: device topology is fixed per process."""
+    return jax.make_mesh((len(jax.devices()),), ("p",))
+
+
+def sharded_sweep(fn, fields, views, R: int, n_opts: int,
+                  attribution: bool = False, mesh=None):
+    """Run the compiled batched sweep with its params axis sharded.
+
+    ``fn`` is `batch_sim._build_jax_sweep`'s jitted callable taking
+    ``(fields, views, R)`` where each view is a flat opt-major ``(W,)``
+    array with ``W = n_opts * P``; returns its 7-tuple with every
+    ``(B, W)``(/``(B, W, NCOMP)`` for the attribution components)
+    output produced under `shard_map`.  The views reshape to
+    ``(n_opts, P)``, P pads up to a multiple of the mesh size by
+    repeating the last column (sliced off after), and each device
+    computes its own params columns — no collectives, no cross-device
+    traffic beyond the final gather.  Trace fields are replicated: they
+    are small next to the ``(B, R, W)`` scan state.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = mesh or make_sweep_mesh()
+    n_dev = int(np.prod(mesh.devices.shape))
+    W = int(np.shape(views[0])[0])
+    n_p = W // n_opts
+    p_pad = -(-n_p // n_dev) * n_dev
+    v2 = []
+    for v in views:
+        v = np.asarray(v).reshape(n_opts, n_p)
+        if p_pad != n_p:
+            v = np.concatenate(
+                [v, np.repeat(v[:, -1:], p_pad - n_p, axis=1)], axis=1)
+        v2.append(v)
+    v2 = tuple(v2)
+
+    def local(fields, views):
+        flat = tuple(v.reshape(-1) for v in views)   # (n_opts * P_loc,)
+        outs = fn(fields, flat, R)
+        # (B, O*P_loc)[, NCOMP] -> (B, O, P_loc)[, NCOMP]: stitch along
+        # the params axis, not the flat shard-major width axis.
+        return tuple(o.reshape(o.shape[0], n_opts, -1, *o.shape[2:])
+                     for o in outs)
+
+    spec_f = jax.tree_util.tree_map(lambda _: P(), fields)
+    spec_v = jax.tree_util.tree_map(lambda _: P(None, "p"), v2)
+    spec_comp = (P(None, None, "p", None) if attribution
+                 else P(None, None, "p"))
+    out = shard_map(
+        local, mesh=mesh, in_specs=(spec_f, spec_v),
+        out_specs=(P(None, None, "p"),) * 6 + (spec_comp,),
+        check_rep=False)(fields, v2)
+    # Back to the caller's flat (B, W) layout, padding dropped.
+    return tuple(
+        o[:, :, :n_p].reshape(o.shape[0], n_opts * n_p, *o.shape[3:])
+        for o in out)

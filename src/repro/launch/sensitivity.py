@@ -264,6 +264,7 @@ def run_grid(traces: Mapping[str, KernelTrace],
              attribution: bool = True,
              cache: SweepCache | None = None, use_cache: bool = True,
              p_chunk: int | None = DEFAULT_P_CHUNK,
+             bucket: str = "auto", shard: str = "auto",
              sim: BatchAraSimulator | None = None
              ) -> dict[tuple[str, str, int], SimResult]:
     """Evaluate `(trace x opt x params)` cells, batch-running only
@@ -287,6 +288,13 @@ def run_grid(traces: Mapping[str, KernelTrace],
     run.  `method` picks the jax instruction-axis algorithm
     (``scan``/``assoc``/``auto``, see `repro.core.api.resolve_plan`);
     assoc-computed cells are never persisted either.
+
+    ``bucket``/``shard`` are the execution-planner axes (shape
+    bucketing of mixed-length miss batches, P-axis device sharding of
+    wide designs via `repro.launch.mesh`); the default ``auto`` defers
+    to the measured crossovers in `resolve_plan` and neither axis
+    affects results or cache keys (`sweep_cache.cell_key` hashes
+    inputs, not execution strategy).
     """
     opts = list(opts)
     params_list = list(params_list)
@@ -341,7 +349,8 @@ def run_grid(traces: Mapping[str, KernelTrace],
                              mc=mc, backend=plan.backend,
                              method=plan.method,
                              attribution=attribution,
-                             p_chunk=p_chunk, sim=simulator)
+                             p_chunk=p_chunk, bucket=bucket,
+                             shard=shard, sim=simulator)
         pg = (phase_decompose_grid(run_traces, batch, mc=mc,
                                    params=run_params)
               if attribution else None)

@@ -91,6 +91,12 @@ def cell_key(trace: KernelTrace, opt: OptConfig,
 
     `trace_fp` lets callers sweeping many opts per trace hash the
     instruction stream once (`trace_fingerprint`) instead of per cell.
+
+    Execution-planner axes (backend, method, ``bucket``, ``shard``,
+    ``p_chunk``...) are deliberately NOT part of the payload: they pick
+    *how* a cell is computed, never *what* it evaluates to, so a cell
+    simulated bucketed fills the same entry an unbucketed rerun would
+    read (tests/test_bucketing.py::test_cache_keys_ignore_plan_axes).
     """
     payload = {
         "schema": SCHEMA_VERSION,

@@ -43,6 +43,13 @@ KNOWN_METRICS = {
     "plan.resolved": "resolve_plan calls",
     "plan.auto_backend": "auto backend decisions, labeled numpy|jax",
     "plan.auto_method": "auto method decisions, labeled scan|assoc",
+    "plan.auto_bucket": "auto bucket decisions, labeled none|pow2",
+    "plan.auto_shard": "auto shard decisions, labeled none|devices",
+    "plan.pipeline_chunks": "p_chunk dispatches through the async pipeline",
+    "plan.pipeline_occupancy": "dispatch share of pipelined jax wall-clock",
+    "bucket.groups": "shape buckets executed by run_bucketed",
+    "bucket.baseline_waste_share": "pad-waste share of the unbucketed stack",
+    "bucket.pad_waste_share": "pad-waste share after shape bucketing",
     "sweep_cache.hits": "SweepCache lookups served from disk",
     "sweep_cache.misses": "SweepCache lookups that required simulation",
     "sweep_cache.evictions": "SweepCache entries removed by LRU pruning",

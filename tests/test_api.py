@@ -91,6 +91,78 @@ def test_execution_plan_validation():
         api.ExecutionPlan(backend="jax", method="magic")
     with pytest.raises(ValueError, match="assoc"):
         api.ExecutionPlan(backend="numpy", method="assoc")
+    with pytest.raises(ValueError, match="bucket"):
+        api.ExecutionPlan(backend="jax", method="scan", bucket="magic")
+    with pytest.raises(ValueError, match="shard"):
+        api.ExecutionPlan(backend="jax", method="scan", shard="magic")
+    # P-axis sharding only exists on the compiled jax scan path.
+    with pytest.raises(ValueError):
+        api.ExecutionPlan(backend="numpy", method="scan",
+                          shard="devices")
+    with pytest.raises(ValueError):
+        api.ExecutionPlan(backend="jax", method="assoc",
+                          shard="devices")
+
+
+def test_resolve_plan_auto_bucket_on_pad_waste():
+    """bucket="auto" → pow2 only on jax, and only past the waste
+    crossover; numpy never buckets (its loop already skips padding)."""
+    wasteful = api.resolve_plan(backend="jax", method="scan",
+                                pad_waste=0.9)
+    assert wasteful.bucket == "pow2"
+    tight = api.resolve_plan(backend="jax", method="scan",
+                             pad_waste=0.01)
+    assert tight.bucket == "none"
+    on_numpy = api.resolve_plan(backend="numpy", method="scan",
+                                pad_waste=0.9)
+    assert on_numpy.bucket == "none"
+
+
+def test_resolve_plan_auto_shard_needs_devices():
+    """On a 1-device host auto sharding always resolves to none; with
+    devices it needs jax+scan and at least one params column each."""
+    plan = api.resolve_plan(backend="jax", method="scan", n_params=64)
+    if api.local_device_count() > 1:
+        assert plan.shard == "devices"
+    else:
+        assert plan.shard == "none"
+    starved = api.resolve_plan(backend="jax", method="scan", n_params=0)
+    assert starved.shard == "none"
+
+
+def test_measured_crossovers_override(tmp_path, monkeypatch):
+    """Non-null values in the recorded BENCH crossovers fold override
+    the code constants; nulls fall back (the committed CPU entry)."""
+    import json
+    bench = tmp_path / "BENCH_simulate.json"
+    bench.write_text(json.dumps({api._machine_key(): {"crossovers": {
+        "jax_width": 7, "assoc_instrs": None}}}))
+    monkeypatch.setattr(api, "_BENCH_PATH", bench)
+    api._recorded_crossovers.cache_clear()
+    try:
+        cw = api.measured_crossovers()
+        assert cw["jax_width"] == 7
+        assert cw["assoc_instrs"] == api.ASSOC_INSTR_CROSSOVER
+        assert cw["bucket_waste"] == api.BUCKET_WASTE_CROSSOVER
+        monkeypatch.setattr(api, "jax_accelerator", lambda: True)
+        plan = api.resolve_plan(width=7, n_instrs=1)
+        assert plan.backend == "jax"
+    finally:
+        api._recorded_crossovers.cache_clear()
+
+
+def test_measured_crossovers_default_to_constants(monkeypatch):
+    monkeypatch.setattr(api, "_BENCH_PATH",
+                        api._BENCH_PATH.with_name("absent.json"))
+    api._recorded_crossovers.cache_clear()
+    try:
+        assert api.measured_crossovers() == {
+            "jax_width": api.JAX_WIDTH_CROSSOVER,
+            "assoc_instrs": api.ASSOC_INSTR_CROSSOVER,
+            "bucket_waste": api.BUCKET_WASTE_CROSSOVER,
+        }
+    finally:
+        api._recorded_crossovers.cache_clear()
 
 
 def test_shared_sim_is_cached():

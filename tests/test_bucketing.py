@@ -1,0 +1,283 @@
+"""Shape-bucketed execution (`repro.core.bucketing`) and the other
+execution-planner axes: parity (the planner must be invisible in the
+results), bucket-plan structure, the pipelined P axis, 1-device
+sharding, cache-key independence, and the Pallas block-padding fix.
+
+The contract under test everywhere: plan axes change *how* a grid
+executes, never *what* it computes — numpy bucketed is bit-exact
+(its per-row loop makes row subsets structurally identical), jax is
+float64-allclose (XLA reassociation), and the sweep cache cannot tell
+plans apart.
+"""
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings
+
+from repro.core import api, bucketing, calibration
+from repro.core.isa import ABLATION_GRID, OptConfig
+from repro.core.simulator import SimParams
+from repro.core.traces import dotp, gemm, scal, stack_traces, symv
+from trace_gen import build_trace, instr_tuples
+
+from hypothesis_compat import st
+
+ALL_CORNERS = (OptConfig.baseline(), *ABLATION_GRID)
+BASE_FULL = (OptConfig.baseline(), OptConfig.full())
+
+#: A deliberately mixed-length stack: 3..~1200 instructions, so the
+#: pow2 plan forms several buckets and the unbucketed pad waste is huge.
+MIXED = (scal(256), gemm(32, 32, 32), dotp(512), symv(16))
+
+
+def _assert_results_equal(got, ref, exact: bool):
+    """Every BatchResult field agrees (bit-exact or allclose)."""
+    import dataclasses
+    assert got.names == ref.names
+    for f in dataclasses.fields(type(ref)):
+        if f.name == "names":
+            continue
+        a, b = getattr(got, f.name), getattr(ref, f.name)
+        if b is None:
+            assert a is None, f.name
+        elif exact:
+            np.testing.assert_array_equal(a, b, err_msg=f.name)
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-9,
+                                       err_msg=f.name)
+
+
+# -- bucket planning ------------------------------------------------------
+
+def test_plan_buckets_structure():
+    stacked = stack_traces(list(MIXED))
+    buckets = bucketing.plan_buckets(stacked)
+    n = stacked.n_instrs
+    # Partition: every row exactly once, shortest cap first.
+    rows = sorted(r for bk in buckets for r in bk.rows)
+    assert rows == list(range(stacked.batch))
+    caps = [bk.cap for bk in buckets]
+    assert caps == sorted(caps)
+    for bk in buckets:
+        member_max = max(int(n[r]) for r in bk.rows)
+        # Cap is the longest member; the pow2 edge bounds the spread.
+        assert bk.cap == member_max
+        assert all(bk.cap <= 2 * max(int(n[r]), 1) for r in bk.rows)
+    # The longest bucket's cap is the stack's own padded length.
+    assert caps[-1] == stacked.max_instrs
+
+
+def test_plan_buckets_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="policy"):
+        bucketing.plan_buckets(stack_traces([scal(64)]), policy="magic")
+
+
+def test_pad_waste_share_drops():
+    stacked = stack_traces(list(MIXED))
+    before = bucketing.pad_waste_share(stacked)
+    after = bucketing.pad_waste_share(stacked,
+                                      bucketing.plan_buckets(stacked))
+    assert before > 0.5          # the mixed stack is mostly padding
+    assert after < 0.1           # bucketing kills it
+    assert 0.0 <= after < before
+
+
+def test_subset_rejects_cap_below_member():
+    stacked = stack_traces(list(MIXED))
+    with pytest.raises(ValueError):
+        stacked.subset((1,), max_instrs=4)    # gemm needs ~1200
+
+
+# -- numpy parity (bit-exact) --------------------------------------------
+
+def test_numpy_bucketed_bit_exact_full_calibrated_grid():
+    """Acceptance: the full calibrated parity grid, all 8 corners,
+    bucketed vs unbucketed on numpy — every field bit-for-bit."""
+    traces = list(calibration.parity_traces().values())
+    params = calibration.load()
+    ref = api.simulate(traces, ALL_CORNERS, params, backend="numpy",
+                       bucket="none", shard="none", attribution=True)
+    got = api.simulate(traces, ALL_CORNERS, params, backend="numpy",
+                       bucket="pow2", shard="none", attribution=True)
+    _assert_results_equal(got, ref, exact=True)
+
+
+@given(raws=st.lists(instr_tuples(min_size=1, max_size=24),
+                     min_size=1, max_size=4))
+@settings(max_examples=25, deadline=None)
+def test_property_bucketed_numpy_bit_exact(raws):
+    """Random mixed-length traces: bucketing is invisible on numpy, and
+    the attribution invariant `ideal + sum(stalls) == cycles` holds on
+    the bucketed results themselves."""
+    traces = [build_trace(raw) for raw in raws]
+    ref = api.simulate(traces, BASE_FULL, backend="numpy",
+                       bucket="none", shard="none", attribution=True)
+    got = api.simulate(traces, BASE_FULL, backend="numpy",
+                       bucket="pow2", shard="none", attribution=True)
+    _assert_results_equal(got, ref, exact=True)
+    np.testing.assert_allclose(got.ideal + got.stalls.sum(axis=-1),
+                               got.cycles, rtol=1e-12)
+
+
+@given(raws=st.lists(instr_tuples(min_size=1, max_size=12),
+                     min_size=2, max_size=3))
+@settings(max_examples=5, deadline=None)
+def test_property_bucketed_jax_allclose(raws):
+    """Random mixed-length traces through the compiled jax scan:
+    bucketed must be float64-allclose to the unbucketed program,
+    attribution tensors included (few examples: each fresh shape
+    signature pays a jit compile)."""
+    pytest.importorskip("jax")
+    traces = [build_trace(raw) for raw in raws]
+    ref = api.simulate(traces, BASE_FULL, backend="jax", method="scan",
+                       bucket="none", shard="none", attribution=True)
+    got = api.simulate(traces, BASE_FULL, backend="jax", method="scan",
+                       bucket="pow2", shard="none", attribution=True)
+    _assert_results_equal(got, ref, exact=False)
+
+
+def test_single_trace_and_equal_lengths_degenerate():
+    """Edge cases: one trace, and all-equal lengths, both collapse to a
+    single bucket at the unbucketed shape — still bit-exact."""
+    for traces in ([scal(256)], [scal(256), scal(256), scal(256)]):
+        stacked = stack_traces(traces)
+        buckets = bucketing.plan_buckets(stacked)
+        assert len(buckets) == 1
+        assert buckets[0].cap == stacked.max_instrs
+        ref = api.simulate(stacked, BASE_FULL, backend="numpy",
+                           bucket="none", shard="none")
+        got = api.simulate(stacked, BASE_FULL, backend="numpy",
+                           bucket="pow2", shard="none")
+        _assert_results_equal(got, ref, exact=True)
+
+
+# -- jax parity (allclose) -----------------------------------------------
+
+jax = pytest.importorskip("jax")
+
+
+@pytest.fixture(scope="module")
+def cal_params():
+    return calibration.load()
+
+
+@pytest.fixture(scope="module")
+def grid_traces():
+    return list(calibration.parity_traces().values())
+
+
+@pytest.fixture(scope="module")
+def numpy_ref(grid_traces, cal_params):
+    return api.simulate(grid_traces, ALL_CORNERS, cal_params,
+                        backend="numpy", bucket="none", shard="none",
+                        attribution=True)
+
+
+def test_jax_scan_bucketed_full_calibrated_grid(grid_traces, cal_params,
+                                                numpy_ref):
+    got = api.simulate(grid_traces, ALL_CORNERS, cal_params,
+                       backend="jax", method="scan", bucket="pow2",
+                       shard="none", attribution=True)
+    _assert_results_equal(got, numpy_ref, exact=False)
+
+
+def test_jax_assoc_bucketed_full_calibrated_grid(grid_traces, cal_params,
+                                                 numpy_ref):
+    got = api.simulate(grid_traces, ALL_CORNERS, cal_params,
+                       backend="jax", method="assoc", bucket="pow2",
+                       shard="none", attribution=True)
+    _assert_results_equal(got, numpy_ref, exact=False)
+
+
+def test_pipelined_p_chunk_with_padded_tail():
+    """P=3 with p_chunk=2: the async pipeline pads the last chunk (one
+    phantom params column, sliced off at drain) — results must match
+    the unchunked run and numpy exactly/allclose."""
+    traces = [scal(128), dotp(256)]
+    params = [SimParams(), SimParams(mem_latency=90.0),
+              SimParams(issue_gap_base=5.0)]
+    ref = api.simulate(traces, BASE_FULL, params, backend="numpy",
+                       bucket="none", shard="none", attribution=True)
+    got = api.simulate(traces, BASE_FULL, params, backend="jax",
+                       method="scan", bucket="none", shard="none",
+                       p_chunk=2, attribution=True)
+    _assert_results_equal(got, ref, exact=False)
+
+
+def test_shard_devices_parity_on_one_device():
+    """`shard="devices"` on however many devices exist (1 in CI) must
+    be exactly the unsharded program — graceful degradation."""
+    traces = [scal(128), symv(16)]
+    params = [SimParams(), SimParams(mem_latency=60.0)]
+    ref = api.simulate(traces, BASE_FULL, params, backend="jax",
+                       method="scan", bucket="none", shard="none")
+    got = api.simulate(traces, BASE_FULL, params, backend="jax",
+                       method="scan", bucket="none", shard="devices")
+    _assert_results_equal(got, ref, exact=False)
+
+
+def test_bucket_metrics_emitted():
+    from repro.obs import metrics as obs_metrics
+    api.simulate(list(MIXED), BASE_FULL, backend="numpy",
+                 bucket="pow2", shard="none")
+    stacked = stack_traces(list(MIXED))
+    waste = obs_metrics.gauge("bucket.pad_waste_share").value
+    base = obs_metrics.gauge("bucket.baseline_waste_share").value
+    assert base == pytest.approx(bucketing.pad_waste_share(stacked))
+    assert waste == pytest.approx(bucketing.pad_waste_share(
+        stacked, bucketing.plan_buckets(stacked)))
+    assert obs_metrics.counter("bucket.groups").value > 0
+
+
+# -- the sweep cache cannot tell plans apart -----------------------------
+
+def test_cache_keys_ignore_plan_axes(tmp_path):
+    """A grid filled bucketed is fully served from cache unbucketed:
+    cell keys carry no plan axes (satellite contract in
+    `sweep_cache.cell_key`'s docstring)."""
+    from repro.launch.sensitivity import run_grid
+    from repro.launch.sweep_cache import SweepCache
+    cache = SweepCache(tmp_path)
+    traces = {"scal": scal(256), "gemm": gemm(16, 16, 16)}
+    params = [SimParams(), SimParams(mem_latency=90.0)]
+    cells = run_grid(traces, params, BASE_FULL, cache=cache,
+                     backend="numpy", bucket="pow2", shard="none")
+    n_cells = len(traces) * len(BASE_FULL) * len(params)
+    assert cache.misses == n_cells and cache.hits == 0
+    again = run_grid(traces, params, BASE_FULL, cache=cache,
+                     backend="numpy", bucket="none", shard="none")
+    assert cache.hits == n_cells
+    for key, res in cells.items():
+        assert again[key].cycles == res.cycles
+
+
+# -- Pallas block padding (satellite: n % block != 0) --------------------
+
+def test_pallas_tropical_identity_padding():
+    """Regression: `_compose_pallas` used to zero-pad the batch up to a
+    block multiple — zeros are NOT the tropical identity, so a padded
+    row composed to finite garbage.  Identity rows must now compose to
+    exact identities, and every batch size (especially n % block != 0)
+    must match the jnp reference bit-for-bit."""
+    import jax.numpy as jnp
+    from repro.core.pallas_step import (_compose_jnp, _compose_pallas,
+                                        _pick_block, _tropical_identity)
+    D = 14
+    rng = np.random.default_rng(7)
+    for n in (1, 2, 5, 7, 8, 13):
+        b = jnp.asarray(rng.normal(size=(n, D, D)) * 10)
+        a = jnp.asarray(rng.normal(size=(n, D, D)) * 10)
+        cr, kr = _compose_jnp(b, a)
+        # Forced block=8 exercises the padded tail for every n != 8.
+        cp, kp = _compose_pallas(b, a, block=8)
+        np.testing.assert_array_equal(np.asarray(cp), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(kp), np.asarray(kr))
+        ca, _ = _compose_pallas(b, a)          # auto block via _pick_block
+        np.testing.assert_array_equal(np.asarray(ca), np.asarray(cr))
+    # Identity (.) identity == identity, exactly.
+    ident = _tropical_identity(3, D, jnp.asarray(0.0).dtype)
+    c, _ = _compose_pallas(ident, ident, block=2)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(ident))
+    # The auto block never exceeds the batch (no wasted pad compute).
+    assert _pick_block(2, D) == 2
+    assert _pick_block(0, D) == 1
+    assert 1 <= _pick_block(10_000, 38) <= 64
