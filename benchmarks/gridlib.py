@@ -128,6 +128,31 @@ def paper_traces(profile: str | None = None) -> dict[str, KernelTrace]:
     return {name: T.KERNELS[name](*sizes[name]) for name in sizes}
 
 
+#: Scenarios per workload class the corpus axis serves, per profile.
+#: ``None`` means the whole committed corpus; smoke keeps CI quick while
+#: still spanning every class.
+CORPUS_PER_CLASS: dict[str, int | None] = {
+    "default": None, "smoke": 4, "large": None,
+}
+
+
+def corpus_traces(classes: Sequence[str] | None = None,
+                  per_class: int | None = None,
+                  profile: str | None = None) -> dict[str, KernelTrace]:
+    """The committed scenario corpus (`repro.data.corpus`) as a grid
+    axis: scenario-name -> trace, budgeted by the active profile.
+
+    This is the workload frontier beyond the 11 paper kernels — ~160
+    generated scenarios across the `repro.core.tracegen` classes, with
+    genuinely mixed instruction-stream lengths (the shape-bucketed
+    planner's first production workload).  `fig8_corpus.py` sweeps it.
+    """
+    from repro.data import corpus as C
+    if per_class is None:
+        per_class = CORPUS_PER_CLASS[profile or _profile]
+    return C.corpus_traces(classes=classes, per_class=per_class)
+
+
 #: Sentinel labels used as cell keys alongside OptConfig.label.
 BASE = OptConfig.baseline()
 FULL = OptConfig.full()

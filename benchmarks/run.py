@@ -27,8 +27,9 @@ def main() -> None:
 
     from benchmarks import (dryrun_table, fig3_speedup, fig4_roofline,
                             fig5_sensitivity, fig6_attribution,
-                            fig7_sensitivity, gridlib, kernel_bench,
-                            table1_ablation, table2_efficiency)
+                            fig7_sensitivity, fig8_corpus, gridlib,
+                            kernel_bench, table1_ablation,
+                            table2_efficiency)
     if args.smoke:
         gridlib.set_profile("smoke")
 
@@ -43,6 +44,10 @@ def main() -> None:
     table1_ablation.main()
     fig5_sensitivity.main()
     table2_efficiency.main()
+    # fig8 sweeps the generated-scenario corpus (the workload frontier
+    # beyond the 11 paper kernels): per-class attribution + gap-closed.
+    # Smoke trims it to CORPUS_PER_CLASS["smoke"] scenarios per class.
+    fig8_corpus.main([])
     # fig7 parameter sensitivity: a tiny grid at smoke sizes for CI, the
     # wide params axis at `large` sizes in the full profile (the sweep
     # that actually exercises `large`; fig7 restores the active profile

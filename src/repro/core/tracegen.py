@@ -1,0 +1,488 @@
+"""Parameterized, seed-deterministic RVV trace generation.
+
+Everything before this module ran the paper's 11 hand-written kernels
+(`repro.core.traces`), so every claim — attribution shares, gap-closed
+ratios, planner crossovers — was only ever tested on the workloads the
+paper picked.  This module turns the trace axis into a *generator*: a
+`GenSpec` names a workload class plus a handful of structural knobs
+(stride/gather mixes, RAW-chain depth, accumulator pressure, slide
+storms, mixed-VL segments, LMUL), and `generate(spec)` deterministically
+expands it into a strip-mined `KernelTrace` that runs through the exact
+same `api.simulate` grid as the paper kernels.
+
+Determinism contract: `generate` draws randomness only from
+`numpy.random.Generator.integers`/`.random` seeded by
+``(class, seed, index)`` `SeedSequence` entropy — the same spec yields a
+byte-identical serialized trace on every run and platform
+(`tests/test_tracegen.py`; `tools/gen_corpus.py --check` enforces it on
+the committed corpus in CI).
+
+Classification: each trace is classified by arithmetic intensity against
+the Ara roofline (`repro.core.roofline`), so per-class gap-closed
+normalization stays well-defined — a "memory_bound" scenario's ideal is
+the bandwidth roof, a "compute_bound" one's the FLOP roof
+(docs/workloads.md has the taxonomy; the knob table there is CI-synced
+against `GenSpec`'s fields).
+
+The hypothesis strategies in `tests/trace_gen.py` are thin wrappers over
+this module (the ``fuzz`` class absorbs the old independent
+random-instruction builder), so property tests exercise the shipped
+generator path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import roofline
+from repro.core.isa import (KernelTrace, OpKind, Stride, VInstr, strips,
+                            vlmax_for)
+
+__all__ = [
+    "GenSpec", "CLASSES", "CORPUS_CLASSES", "INTENSITY_CLASSES",
+    "generate", "sample_spec", "intensity_class", "intensity_index",
+    "classify", "retotaled", "spec_to_dict", "spec_from_dict",
+    "trace_to_dict", "trace_from_dict", "trace_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class GenSpec:
+    """Knobs of one generated workload (docs/workloads.md knob table).
+
+    ``cls`` picks the structural emitter; the remaining fields shape it.
+    Class presets (`sample_spec`) draw each knob from a class-appropriate
+    range, but any combination is legal — the generator only ever emits
+    structurally-valid instruction streams.
+    """
+    cls: str = "streaming"       # workload class, one of CLASSES
+    seed: int = 0                # RNG stream selector (byte-determinism key)
+    n: int = 512                 # elements per memory stream
+    sew: int = 4                 # element width in bytes
+    lmul: int = 8                # register-group size (sets VLMAX)
+    n_streams: int = 2           # distinct input memory streams
+    compute_per_mem: int = 1     # independent compute chains per strip
+    flops_per_elem: int = 2      # flops per element of each compute op
+    stride_mix: tuple[float, float, float] = (1.0, 0.0, 0.0)
+    #                            # unit/strided/indexed stream weights
+    chain_depth: int = 1         # RAW-dependent ops per compute chain
+    accum_regs: int = 2          # accumulator registers rotated across strips
+    reduce_interval: int = 0     # vfredsum every k-th strip (0: never)
+    slide_share: float = 0.0     # fraction of chain ops emitted as slides
+    div_share: float = 0.0       # fraction of chain ops that are divides
+    vl_jitter: float = 0.0       # per-strip VL shrink factor (mixed-VL)
+    store_share: float = 1.0     # probability a strip stores its result
+    max_instrs: int = 256        # hard cap on emitted instructions
+
+
+#: Workload classes, in a stable order (`_CLASS_IDS` feeds the RNG seed).
+CLASSES: tuple[str, ...] = (
+    "streaming",        # unit-stride load/compute/store, low intensity
+    "strided",          # strided even/odd-style streams (dwt-shaped)
+    "gather",           # indexed gather/scatter mixes (spmv-shaped)
+    "reduction",        # accumulate + vfredsum tails (dotp-shaped)
+    "raw_chain",        # long serialized RAW chains on one register
+    "queue_pressure",   # accumulator-rich chains stressing operand queues
+    "slide_storm",      # vslide/permute-heavy traffic
+    "mixed_vl",         # mixed-VL segments with LMUL variation
+    "compute_tile",     # register-blocked FMA tiles (gemm-shaped)
+    "fuzz",             # arbitrary-but-valid instruction soup
+)
+
+#: Classes the committed scenario corpus covers (all of them).
+CORPUS_CLASSES: tuple[str, ...] = CLASSES
+
+_CLASS_IDS = {name: i for i, name in enumerate(CLASSES)}
+
+#: Arithmetic-intensity classes, ordered from memory- to compute-limited.
+INTENSITY_CLASSES: tuple[str, ...] = ("memory_bound", "balanced",
+                                      "compute_bound")
+
+#: Band edges relative to the Ara ridge point (peak_flops / peak_bw):
+#: below half the ridge the bandwidth roof binds decisively, above twice
+#: the ridge the FLOP roof does; in between both terms matter.
+_BAND_LO = 0.5
+_BAND_HI = 2.0
+
+
+def intensity_class(oi: float) -> str:
+    """Arithmetic-intensity class of operational intensity ``oi``
+    (flops/byte) against the Ara roofline ridge."""
+    ridge = roofline.ARA_PEAK_GFLOPS / roofline.ARA_PEAK_BW
+    if oi < _BAND_LO * ridge:
+        return "memory_bound"
+    if oi <= _BAND_HI * ridge:
+        return "balanced"
+    return "compute_bound"
+
+
+def intensity_index(name: str) -> int:
+    """Position of an intensity class on the memory->compute axis."""
+    return INTENSITY_CLASSES.index(name)
+
+
+def classify(trace: KernelTrace) -> str:
+    """Intensity class of a trace's roofline accounting."""
+    return intensity_class(trace.operational_intensity)
+
+
+# ---------------------------------------------------------------------------
+# Generation
+# ---------------------------------------------------------------------------
+
+_STRIDES = (Stride.UNIT, Stride.STRIDED, Stride.INDEXED)
+
+
+def _rng_for(spec: GenSpec) -> np.random.Generator:
+    # SeedSequence over (class, seed) gives independent, reproducible
+    # streams; only Generator.integers/.random are used downstream (their
+    # bit streams are stable across numpy versions).
+    return np.random.default_rng([_CLASS_IDS[spec.cls], spec.seed])
+
+
+def _pick_stride(mix: Sequence[float], u: float) -> Stride:
+    """Weighted stride draw from a uniform sample (no Generator.choice —
+    its internals are not bit-stream pinned)."""
+    w = [max(float(x), 0.0) for x in mix]
+    total = sum(w) or 1.0
+    acc = 0.0
+    for stride, wi in zip(_STRIDES, w):
+        acc += wi / total
+        if u < acc:
+            return stride
+    return _STRIDES[-1]
+
+
+def _mem_name(kind: OpKind, stride: Stride) -> str:
+    if kind is OpKind.LOAD:
+        return {Stride.UNIT: "vle32", Stride.STRIDED: "vlse32",
+                Stride.INDEXED: "vluxei32"}[stride]
+    return {Stride.UNIT: "vse32", Stride.STRIDED: "vsse32",
+            Stride.INDEXED: "vsuxei32"}[stride]
+
+
+def _emit_fuzz(spec: GenSpec, rng: np.random.Generator) -> list[VInstr]:
+    """Arbitrary-but-valid instruction soup: the deterministic successor
+    of the old hypothesis tuple builder in tests/trace_gen.py, kept as a
+    first-class workload class so property tests fuzz the shipped path."""
+    pool = ("v0", "v4", "v8", "v12", "v16", "v20")
+    kinds = (OpKind.LOAD, OpKind.STORE, OpKind.COMPUTE, OpKind.REDUCE,
+             OpKind.SLIDE)
+    count = max(3, min(spec.max_instrs,
+                       3 + int(rng.integers(0, spec.max_instrs))))
+    ins: list[VInstr] = []
+    for _ in range(count):
+        kind = kinds[int(rng.integers(0, len(kinds)))]
+        vl = 1 + int(rng.integers(0, 300))
+        dst = pool[int(rng.integers(0, len(pool)))]
+        srcs = tuple(pool[int(rng.integers(0, len(pool)))]
+                     for _ in range(int(rng.integers(0, 3))))
+        stride = _STRIDES[int(rng.integers(0, 3))]
+        mem = kind in (OpKind.LOAD, OpKind.STORE)
+        if kind is OpKind.STORE and not srcs:
+            srcs = (dst,)
+        if kind is OpKind.LOAD:
+            srcs = srcs[:1] if stride is Stride.INDEXED else ()
+        isdiv = kind is OpKind.COMPUTE and rng.random() < 0.2
+        name = "vfdiv" if isdiv else (
+            _mem_name(kind, stride) if mem else
+            {OpKind.COMPUTE: "vop", OpKind.REDUCE: "vfredsum",
+             OpKind.SLIDE: "vslide"}[kind])
+        ins.append(VInstr(
+            name=name, kind=kind, vl=vl, sew=spec.sew,
+            dst=None if kind is OpKind.STORE else dst, srcs=srcs,
+            stride=stride if mem else Stride.UNIT,
+            flops=vl if kind in (OpKind.COMPUTE, OpKind.REDUCE) else 0,
+            stream="s", first_strip=bool(rng.random() < 0.3)))
+    return ins
+
+
+def _emit_structured(spec: GenSpec, rng: np.random.Generator
+                     ) -> list[VInstr]:
+    """One strip-mined loop nest shaped by the spec's knobs."""
+    vlmax = max(1, vlmax_for(spec.sew, 1024, max(1, spec.lmul)))
+    n_streams = max(1, spec.n_streams)
+    n_chains = max(1, spec.compute_per_mem)
+    chain_depth = max(1, spec.chain_depth)
+    accum_regs = max(1, spec.accum_regs)
+
+    # Bounded register pools: load buffers double-buffer per stream,
+    # chain registers rotate (or serialize, for raw_chain), accumulators
+    # persist across strips.  Small pools keep the interned register
+    # count (and the assoc engine's D = 8 + 3R) bounded.
+    load_regs = [f"v{8 * s}" for s in range(min(n_streams, 3))]
+    load_alt = [f"v{8 * s + 4}" for s in range(min(n_streams, 3))]
+    chain_regs = [f"vc{c}" for c in range(min(chain_depth, 4))]
+    accums = [f"va{a}" for a in range(min(accum_regs, 4))]
+    serialize = spec.cls == "raw_chain"
+
+    # Per-stream stride is fixed for the stream's lifetime (prefetcher
+    # state is per stream), drawn once from the mix.
+    stream_strides = [_pick_stride(spec.stride_mix, rng.random())
+                      for _ in range(n_streams)]
+    idx_reg = "v28"                      # index vector for gathers
+
+    ins: list[VInstr] = []
+    strip_vls = list(strips(max(1, spec.n), vlmax))
+    for t, base_vl in enumerate(strip_vls):
+        if len(ins) >= spec.max_instrs:
+            break
+        vl = base_vl
+        if spec.vl_jitter > 0.0:
+            shrink = 1.0 - spec.vl_jitter * rng.random()
+            vl = max(1, int(round(base_vl * shrink)))
+        first = t == 0
+
+        # Mixed-VL segments also vary the effective LMUL: halve the
+        # strip on a coin flip so short and long vectors interleave.
+        if spec.cls == "mixed_vl" and rng.random() < 0.5:
+            vl = max(1, vl // 2)
+
+        loaded: list[str] = []
+        for s in range(n_streams):
+            stride = stream_strides[s]
+            dst = (load_regs[s % len(load_regs)] if t % 2 == 0
+                   else load_alt[s % len(load_alt)])
+            if stride is Stride.INDEXED:
+                ins.append(VInstr(name="vle32", kind=OpKind.LOAD, vl=vl,
+                                  sew=spec.sew, dst=idx_reg, srcs=(),
+                                  stride=Stride.UNIT, flops=0,
+                                  stream=f"idx{s}", first_strip=first))
+                srcs: tuple[str, ...] = (idx_reg,)
+            else:
+                srcs = ()
+            ins.append(VInstr(name=_mem_name(OpKind.LOAD, stride),
+                              kind=OpKind.LOAD, vl=vl, sew=spec.sew,
+                              dst=dst, srcs=srcs, stride=stride, flops=0,
+                              stream=f"in{s}", first_strip=first))
+            loaded.append(dst)
+
+        last_dst = loaded[-1]
+        for c in range(n_chains):
+            acc = accums[(t * n_chains + c) % len(accums)]
+            prev = loaded[c % len(loaded)]
+            for d in range(chain_depth):
+                u = rng.random()
+                dst = (chain_regs[0] if serialize
+                       else chain_regs[(c + d) % len(chain_regs)])
+                if u < spec.slide_share:
+                    ins.append(VInstr(name="vslideup", kind=OpKind.SLIDE,
+                                      vl=vl, sew=spec.sew, dst=dst,
+                                      srcs=(prev,), flops=0, stream="s"))
+                else:
+                    isdiv = u < spec.slide_share + spec.div_share
+                    name = "vfdiv" if isdiv else "vfmacc"
+                    srcs = (prev, acc) if d == chain_depth - 1 else (prev,)
+                    ins.append(VInstr(name=name, kind=OpKind.COMPUTE,
+                                      vl=vl, sew=spec.sew, dst=dst,
+                                      srcs=srcs,
+                                      flops=spec.flops_per_elem * vl,
+                                      stream="s"))
+                prev = dst
+                if len(ins) >= spec.max_instrs:
+                    break
+            # Fold the chain into the accumulator (RAW on the rotating
+            # accumulator: the dotp-style loop-carried dependence).
+            ins.append(VInstr(name="vfmacc", kind=OpKind.COMPUTE, vl=vl,
+                              sew=spec.sew, dst=acc, srcs=(prev, acc),
+                              flops=spec.flops_per_elem * vl, stream="s"))
+            last_dst = acc
+            if len(ins) >= spec.max_instrs:
+                break
+
+        if spec.reduce_interval and t % spec.reduce_interval == 0:
+            ins.append(VInstr(name="vfredsum", kind=OpKind.REDUCE, vl=vl,
+                              sew=spec.sew, dst="f0", srcs=(last_dst,),
+                              flops=vl, stream="s"))
+        if rng.random() < spec.store_share:
+            stride = stream_strides[0]
+            ins.append(VInstr(name=_mem_name(OpKind.STORE, stride),
+                              kind=OpKind.STORE, vl=vl, sew=spec.sew,
+                              dst=None, srcs=(last_dst,), stride=stride,
+                              flops=0, stream="out", first_strip=first))
+    return ins[:spec.max_instrs]
+
+
+def generate(spec: GenSpec) -> KernelTrace:
+    """Deterministically expand a spec into a strip-mined kernel trace.
+
+    Roofline accounting (`total_flops` / `total_bytes`) is summed from
+    the emitted instructions, so classification is exactly a function of
+    the op mix — invariant under any reordering that preserves it.
+    """
+    if spec.cls not in _CLASS_IDS:
+        raise ValueError(f"unknown workload class {spec.cls!r} "
+                         f"(known: {', '.join(CLASSES)})")
+    rng = _rng_for(spec)
+    if spec.cls == "fuzz":
+        ins = _emit_fuzz(spec, rng)
+    else:
+        ins = _emit_structured(spec, rng)
+    flops = sum(i.flops for i in ins)
+    nbytes = sum(i.bytes for i in ins)
+    name = f"{spec.cls}_{spec.seed:04d}"
+    return KernelTrace(name, tuple(ins), total_flops=max(flops, 1),
+                       total_bytes=max(nbytes, 1),
+                       problem=f"N={spec.n},cls={spec.cls}")
+
+
+def retotaled(trace: KernelTrace,
+              instrs: Sequence[VInstr] | None = None) -> KernelTrace:
+    """A copy of `trace` (optionally with a different instruction order)
+    whose roofline totals are re-summed from its instructions — the
+    reorder-stability tests build permuted twins through this."""
+    ins = tuple(instrs if instrs is not None else trace.instrs)
+    flops = sum(i.flops for i in ins)
+    nbytes = sum(i.bytes for i in ins)
+    return KernelTrace(trace.name, ins, total_flops=max(flops, 1),
+                       total_bytes=max(nbytes, 1), problem=trace.problem)
+
+
+# ---------------------------------------------------------------------------
+# Class presets / corpus sampling
+# ---------------------------------------------------------------------------
+
+def _u(rng: np.random.Generator, lo: float, hi: float) -> float:
+    return lo + (hi - lo) * rng.random()
+
+
+def _i(rng: np.random.Generator, lo: int, hi: int) -> int:
+    return int(rng.integers(lo, hi + 1))
+
+
+def sample_spec(cls: str, seed: int = 0, index: int = 0,
+                max_instrs: int = 160) -> GenSpec:
+    """Draw a class-shaped spec: knobs vary scenario-to-scenario inside
+    class-appropriate ranges, deterministically from ``(cls, seed,
+    index)``.  `tools/gen_corpus.py` builds the committed corpus from
+    exactly these draws."""
+    if cls not in _CLASS_IDS:
+        raise ValueError(f"unknown workload class {cls!r}")
+    rng = np.random.default_rng([_CLASS_IDS[cls], seed, index, 0x5eed])
+    spec_seed = (seed << 12) | index
+    common = dict(cls=cls, seed=spec_seed, sew=4,
+                  max_instrs=max_instrs)
+    if cls == "streaming":
+        return GenSpec(n=_i(rng, 256, 1024), lmul=8,
+                       n_streams=_i(rng, 1, 3), compute_per_mem=1,
+                       flops_per_elem=_i(rng, 1, 2),
+                       stride_mix=(1.0, 0.0, 0.0), chain_depth=1,
+                       accum_regs=2, store_share=1.0, **common)
+    if cls == "strided":
+        return GenSpec(n=_i(rng, 256, 768), lmul=4,
+                       n_streams=_i(rng, 2, 3), compute_per_mem=1,
+                       flops_per_elem=1,
+                       stride_mix=(_u(rng, 0.0, 0.3), 1.0, 0.0),
+                       chain_depth=_i(rng, 1, 2), accum_regs=2,
+                       store_share=1.0, **common)
+    if cls == "gather":
+        return GenSpec(n=_i(rng, 128, 512), lmul=2,
+                       n_streams=_i(rng, 2, 3), compute_per_mem=1,
+                       flops_per_elem=_i(rng, 1, 2),
+                       stride_mix=(_u(rng, 0.0, 0.4), 0.0, 1.0),
+                       chain_depth=1, accum_regs=2,
+                       store_share=_u(rng, 0.4, 1.0), **common)
+    if cls == "reduction":
+        return GenSpec(n=_i(rng, 256, 1024), lmul=8,
+                       n_streams=_i(rng, 1, 2),
+                       compute_per_mem=_i(rng, 1, 2), flops_per_elem=2,
+                       stride_mix=(1.0, 0.0, 0.0),
+                       chain_depth=_i(rng, 1, 2), accum_regs=1,
+                       reduce_interval=_i(rng, 1, 3), store_share=0.0,
+                       **common)
+    if cls == "raw_chain":
+        return GenSpec(n=_i(rng, 128, 512), lmul=4, n_streams=1,
+                       compute_per_mem=1, flops_per_elem=2,
+                       stride_mix=(1.0, 0.0, 0.0),
+                       chain_depth=_i(rng, 6, 12), accum_regs=1,
+                       div_share=_u(rng, 0.0, 0.15),
+                       store_share=_u(rng, 0.0, 0.5), **common)
+    if cls == "queue_pressure":
+        return GenSpec(n=_i(rng, 256, 512), lmul=2, n_streams=1,
+                       compute_per_mem=_i(rng, 3, 4),
+                       flops_per_elem=2, stride_mix=(1.0, 0.0, 0.0),
+                       chain_depth=_i(rng, 2, 4),
+                       accum_regs=_i(rng, 3, 4),
+                       store_share=_u(rng, 0.0, 0.3), **common)
+    if cls == "slide_storm":
+        return GenSpec(n=_i(rng, 256, 768), lmul=4,
+                       n_streams=_i(rng, 1, 2), compute_per_mem=1,
+                       flops_per_elem=1, stride_mix=(1.0, 0.0, 0.0),
+                       chain_depth=_i(rng, 3, 5), accum_regs=2,
+                       slide_share=_u(rng, 0.5, 0.85), store_share=1.0,
+                       **common)
+    if cls == "mixed_vl":
+        return GenSpec(n=_i(rng, 256, 1024), lmul=_i(rng, 1, 3) * 2,
+                       n_streams=_i(rng, 1, 3),
+                       compute_per_mem=_i(rng, 1, 2), flops_per_elem=2,
+                       stride_mix=(1.0, _u(rng, 0.0, 0.5), 0.0),
+                       chain_depth=_i(rng, 1, 3), accum_regs=2,
+                       vl_jitter=_u(rng, 0.4, 0.9), store_share=1.0,
+                       **common)
+    if cls == "compute_tile":
+        return GenSpec(n=_i(rng, 128, 384), lmul=2, n_streams=1,
+                       compute_per_mem=_i(rng, 4, 6),
+                       flops_per_elem=2, stride_mix=(1.0, 0.0, 0.0),
+                       chain_depth=_i(rng, 3, 6),
+                       accum_regs=_i(rng, 2, 4),
+                       store_share=_u(rng, 0.1, 0.4), **common)
+    # fuzz
+    return GenSpec(n=_i(rng, 64, 512), lmul=4, n_streams=1, **common)
+
+
+# ---------------------------------------------------------------------------
+# Serialization (the committed-corpus wire format)
+# ---------------------------------------------------------------------------
+
+_KIND_TAGS = {k: k.value for k in OpKind}
+_KIND_FROM = {k.value: k for k in OpKind}
+_STRIDE_FROM = {s.value: s for s in Stride}
+
+
+def spec_to_dict(spec: GenSpec) -> dict:
+    d = dataclasses.asdict(spec)
+    d["stride_mix"] = list(d["stride_mix"])
+    return d
+
+
+def spec_from_dict(d: dict) -> GenSpec:
+    d = dict(d)
+    d["stride_mix"] = tuple(float(x) for x in d["stride_mix"])
+    return GenSpec(**d)
+
+
+def trace_to_dict(trace: KernelTrace) -> dict:
+    """Compact, JSON-stable trace form: one row per instruction,
+    ``[name, kind, vl, sew, dst, srcs, stride, flops, stream, first]``."""
+    return {
+        "name": trace.name,
+        "problem": trace.problem,
+        "total_flops": int(trace.total_flops),
+        "total_bytes": int(trace.total_bytes),
+        "instrs": [[i.name, i.kind.value, i.vl, i.sew, i.dst,
+                    list(i.srcs), i.stride.value, i.flops, i.stream,
+                    bool(i.first_strip)] for i in trace.instrs],
+    }
+
+
+def trace_from_dict(d: dict) -> KernelTrace:
+    instrs = tuple(
+        VInstr(name=row[0], kind=_KIND_FROM[row[1]], vl=int(row[2]),
+               sew=int(row[3]), dst=row[4],
+               srcs=tuple(row[5]), stride=_STRIDE_FROM[row[6]],
+               flops=int(row[7]), stream=row[8], first_strip=bool(row[9]))
+        for row in d["instrs"])
+    return KernelTrace(d["name"], instrs,
+                       total_flops=int(d["total_flops"]),
+                       total_bytes=int(d["total_bytes"]),
+                       problem=d.get("problem", ""))
+
+
+def trace_bytes(trace: KernelTrace) -> bytes:
+    """Canonical serialized form — the byte-determinism tests compare
+    exactly these bytes across repeated generation."""
+    return json.dumps(trace_to_dict(trace), sort_keys=True,
+                      separators=(",", ":")).encode()

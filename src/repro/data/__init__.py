@@ -1,0 +1,2 @@
+"""Workload data: the committed generated-scenario corpus and the
+calibration pipeline inputs (docs/workloads.md)."""

@@ -1,0 +1,160 @@
+"""Committed scenario corpus: load / persist generated RVV workloads.
+
+The corpus under ``src/repro/data/corpus/`` is the workload frontier of
+ROADMAP item 3: ~160 generated scenarios across the workload classes of
+`repro.core.tracegen`, each committed with its full instruction stream,
+its arithmetic-intensity class, and golden per-corner simulation totals
+(numpy backend, default `SimParams`, baseline and M+C+O corners).
+
+Wire format (diff-friendly, byte-deterministic):
+
+* ``<class>.jsonl`` — one scenario per line, ``json.dumps(...,
+  sort_keys=True, separators=(",", ":"))`` of `scenario_to_dict`;
+* ``manifest.json`` — seed, per-class counts, format version.
+
+`tools/gen_corpus.py` regenerates the tree (``--check`` byte-diffs a
+fresh regeneration against the committed files in CI);
+`tests/test_corpus.py` re-simulates every scenario and holds the golden
+totals bit-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Iterable, Mapping, Sequence
+
+from repro.core import tracegen
+from repro.core.isa import KernelTrace
+
+__all__ = [
+    "CORPUS_DIR", "FORMAT_VERSION", "Scenario", "scenario_to_dict",
+    "scenario_from_dict", "dump_corpus", "load_manifest",
+    "load_scenarios", "corpus_traces", "by_class",
+]
+
+#: Committed corpus location (inside the package, next to this module).
+CORPUS_DIR = pathlib.Path(__file__).resolve().parent / "corpus"
+
+FORMAT_VERSION = 1
+
+#: Ablation corners the golden totals cover, keyed by `OptConfig.label`.
+EXPECTED_CORNERS = ("base", "M+C+O")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One committed workload: spec + expanded trace + golden totals.
+
+    ``expected`` maps an ablation-corner label to ``{"cycles": float,
+    "ideal": float, "stalls": [9 floats]}`` — numpy-backend totals at
+    default `SimParams`, held bit-exact by `tests/test_corpus.py`.
+    """
+    name: str
+    cls: str
+    spec: tracegen.GenSpec
+    trace: KernelTrace
+    intensity: str
+    oi: float
+    expected: Mapping[str, Mapping]
+
+    @property
+    def n_instrs(self) -> int:
+        return len(self.trace.instrs)
+
+
+def scenario_to_dict(s: Scenario) -> dict:
+    return {
+        "name": s.name,
+        "cls": s.cls,
+        "spec": tracegen.spec_to_dict(s.spec),
+        "trace": tracegen.trace_to_dict(s.trace),
+        "intensity": s.intensity,
+        "oi": s.oi,
+        "expected": {k: dict(v) for k, v in s.expected.items()},
+    }
+
+
+def scenario_from_dict(d: dict) -> Scenario:
+    return Scenario(
+        name=d["name"], cls=d["cls"],
+        spec=tracegen.spec_from_dict(d["spec"]),
+        trace=tracegen.trace_from_dict(d["trace"]),
+        intensity=d["intensity"], oi=float(d["oi"]),
+        expected=d["expected"])
+
+
+def _scenario_line(s: Scenario) -> str:
+    return json.dumps(scenario_to_dict(s), sort_keys=True,
+                      separators=(",", ":"))
+
+
+def dump_corpus(scenarios: Sequence[Scenario], root: pathlib.Path,
+                seed: int) -> dict:
+    """Write the per-class ``.jsonl`` files plus ``manifest.json`` under
+    `root`; returns the manifest payload.  Output is a pure function of
+    the scenario list, so regenerating from the same seed byte-matches."""
+    root = pathlib.Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    classes: dict[str, list[Scenario]] = {}
+    for s in scenarios:
+        classes.setdefault(s.cls, []).append(s)
+    for cls, rows in sorted(classes.items()):
+        text = "\n".join(_scenario_line(s) for s in rows) + "\n"
+        (root / f"{cls}.jsonl").write_text(text)
+    manifest = {
+        "format": FORMAT_VERSION,
+        "seed": seed,
+        "params": "SimParams() defaults",
+        "corners": list(EXPECTED_CORNERS),
+        "classes": {cls: len(rows)
+                    for cls, rows in sorted(classes.items())},
+        "n_scenarios": len(scenarios),
+    }
+    (root / "manifest.json").write_text(
+        json.dumps(manifest, sort_keys=True, indent=1) + "\n")
+    return manifest
+
+
+def load_manifest(root: pathlib.Path = CORPUS_DIR) -> dict:
+    return json.loads((pathlib.Path(root) / "manifest.json").read_text())
+
+
+def load_scenarios(classes: Iterable[str] | None = None,
+                   per_class: int | None = None,
+                   root: pathlib.Path = CORPUS_DIR) -> list[Scenario]:
+    """Load committed scenarios, manifest class order, optionally
+    filtered to `classes` and truncated to the first `per_class` of each
+    (the smoke profile's budget)."""
+    root = pathlib.Path(root)
+    manifest = load_manifest(root)
+    wanted = list(classes) if classes is not None \
+        else sorted(manifest["classes"])
+    out: list[Scenario] = []
+    for cls in wanted:
+        path = root / f"{cls}.jsonl"
+        if not path.exists():
+            raise FileNotFoundError(
+                f"corpus class file missing: {path} "
+                f"(regenerate with tools/gen_corpus.py)")
+        rows = [scenario_from_dict(json.loads(line))
+                for line in path.read_text().splitlines() if line]
+        out.extend(rows[:per_class] if per_class is not None else rows)
+    return out
+
+
+def corpus_traces(classes: Iterable[str] | None = None,
+                  per_class: int | None = None,
+                  root: pathlib.Path = CORPUS_DIR
+                  ) -> dict[str, KernelTrace]:
+    """Scenario-name -> trace mapping, shaped for `gridlib.Grid.cells`."""
+    return {s.name: s.trace
+            for s in load_scenarios(classes, per_class, root)}
+
+
+def by_class(scenarios: Sequence[Scenario]
+             ) -> dict[str, list[Scenario]]:
+    out: dict[str, list[Scenario]] = {}
+    for s in scenarios:
+        out.setdefault(s.cls, []).append(s)
+    return out

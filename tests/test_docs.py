@@ -16,7 +16,7 @@ def test_required_docs_exist():
     for rel in ("README.md", "docs/architecture.md",
                 "docs/attribution.md", "docs/backends.md",
                 "docs/sensitivity.md", "docs/figures.md",
-                "docs/observability.md"):
+                "docs/observability.md", "docs/workloads.md"):
         assert (REPO / rel).is_file(), f"{rel} missing"
 
 
@@ -63,6 +63,24 @@ def test_metric_check_catches_divergence(monkeypatch, tmp_path):
     errors = check_docs.check_metric_table()
     assert any("simulate.callz" in e for e in errors)     # unknown row
     assert any("'simulate.calls'" in e for e in errors)   # missing row
+
+
+def test_tracegen_knob_table_in_sync():
+    """docs/workloads.md's generator knob table must match
+    `dataclasses.fields(GenSpec)` exactly, and the taxonomy must name
+    every workload class."""
+    assert check_docs.check_tracegen_table() == []
+
+
+def test_tracegen_check_catches_renames(monkeypatch, tmp_path):
+    doc = tmp_path / "docs" / "workloads.md"
+    doc.parent.mkdir()
+    real = (REPO / "docs" / "workloads.md").read_text()
+    doc.write_text(real.replace("| `chain_depth`", "| `chain_depthh`", 1))
+    monkeypatch.setattr(check_docs, "REPO", tmp_path)
+    errors = check_docs.check_tracegen_table()
+    assert any("chain_depthh" in e for e in errors)       # unknown row
+    assert any("'chain_depth'" in e for e in errors)      # missing row
 
 
 def test_every_figure_script_documented():

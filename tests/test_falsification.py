@@ -1,0 +1,134 @@
+"""Per-class falsification checks: the paper's §IV narrative, asserted
+on *generated* workloads instead of the 11 cherry-picked kernels.
+
+The narrative under test (paper §IV, docs/workloads.md):
+
+* streaming-shaped classes (``streaming``, ``strided``, ``gather``,
+  ``fuzz``) lose their baseline cycles primarily to the memory-side
+  supply path;
+* chaining-pathology classes (``raw_chain``, ``queue_pressure``,
+  ``compute_tile``) lose primarily to the dependence side (dep_issue +
+  operand paths).
+
+Checks run against the committed golden attributions (baseline corner,
+default `SimParams`), which `tests/test_corpus.py` holds bit-exact — so
+these are assertions about the *model*, not about simulator drift.
+
+Where the narrative genuinely breaks, the break is committed as a
+strict xfail with the mechanism documented inline (and in
+docs/workloads.md): slide storms were designed as a chaining pathology
+but stay memory-dominated, and reduction's per-scenario dominance flips
+for short-accumulation shapes.
+"""
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO / "src") not in sys.path:
+    sys.path.insert(0, str(REPO / "src"))
+
+from repro.core import stalls as S  # noqa: E402
+from repro.data import corpus  # noqa: E402
+
+#: Classes whose baseline loss must be memory-path-dominated.
+STREAMING_CLASSES = ("streaming", "strided", "gather", "fuzz")
+#: Classes whose baseline loss must be dependence-side-dominated
+#: (dep_issue + operand together beat mem_supply).
+CHAINING_CLASSES = ("raw_chain", "queue_pressure", "compute_tile")
+
+
+@pytest.fixture(scope="module")
+def classes():
+    return corpus.by_class(corpus.load_scenarios())
+
+
+def _base_paths(scenario) -> dict[str, float]:
+    return S.group_stalls(np.asarray(scenario.expected["base"]["stalls"],
+                                     np.float64))
+
+
+def _agg_paths(rows) -> dict[str, float]:
+    agg = np.zeros(len(S.STALL_CATEGORIES))
+    for s in rows:
+        agg += np.asarray(s.expected["base"]["stalls"], np.float64)
+    return S.group_stalls(agg)
+
+
+@pytest.mark.parametrize("cls", STREAMING_CLASSES)
+def test_streaming_classes_memory_dominated(classes, cls):
+    """Every streaming-class scenario (not just the aggregate) loses
+    most to mem_supply at baseline."""
+    rows = classes[cls]
+    assert rows, cls
+    for s in rows:
+        paths = _base_paths(s)
+        assert paths["mem_supply"] > paths["dep_issue"], (s.name, paths)
+        assert paths["mem_supply"] > paths["operand"], (s.name, paths)
+    agg = _agg_paths(rows)
+    assert agg["mem_supply"] > 0.5 * sum(agg.values()), (cls, agg)
+
+
+@pytest.mark.parametrize("cls", CHAINING_CLASSES)
+def test_chaining_classes_dependence_dominated(classes, cls):
+    """Every chaining-pathology scenario loses most of its baseline
+    cycles on the dependence side (issue + operand paths combined)."""
+    rows = classes[cls]
+    assert rows, cls
+    for s in rows:
+        paths = _base_paths(s)
+        dep_side = paths["dep_issue"] + paths["operand"]
+        assert dep_side > paths["mem_supply"], (s.name, paths)
+    agg = _agg_paths(rows)
+    assert agg["operand"] == max(agg.values()), (cls, agg)
+
+
+def test_mixed_vl_majority_memory_dominated(classes):
+    """Mixed-VL streams stay memory-shaped in the large majority of
+    scenarios (VL jitter shrinks strips but not the byte/flop mix)."""
+    rows = classes["mixed_vl"]
+    dominated = sum(1 for s in rows
+                    if max((p := _base_paths(s)), key=p.get)
+                    == "mem_supply")
+    assert dominated >= 0.8 * len(rows), (dominated, len(rows))
+
+
+def test_reduction_aggregate_operand_dominated(classes):
+    """In aggregate, reduction scenarios bind on operand delivery (the
+    accumulator RAW chain runs through the VRF round trip)."""
+    agg = _agg_paths(classes["reduction"])
+    assert agg["operand"] == max(agg.values()), agg
+
+
+# --- documented narrative breaks (strict xfail: if one starts passing,
+# --- the breakage documentation in docs/workloads.md must be updated) ------
+
+@pytest.mark.xfail(
+    strict=True,
+    reason="NARRATIVE BREAK (documented in docs/workloads.md): "
+           "slide_storm was designed as a chaining pathology — slides "
+           "serialize in the SLDU and feed RAW chains — but at baseline "
+           "every committed scenario still loses more to mem_supply: "
+           "slides carry no memory traffic, so the store stream's "
+           "r/w-turnaround and commit costs dwarf the slide chain delay "
+           "at these VLs.")
+def test_slide_storm_dependence_dominated(classes):
+    for s in classes["slide_storm"]:
+        paths = _base_paths(s)
+        dep_side = paths["dep_issue"] + paths["operand"]
+        assert dep_side > paths["mem_supply"], (s.name, paths)
+
+
+@pytest.mark.xfail(
+    strict=True,
+    reason="NARRATIVE BREAK (documented in docs/workloads.md): "
+           "reduction is operand-dominated in aggregate but NOT per "
+           "scenario — short-accumulation shapes (small n, frequent "
+           "vfredsum) flip to mem_supply because the reduce tail "
+           "serializes behind first-strip demand misses.")
+def test_reduction_every_scenario_operand_dominated(classes):
+    for s in classes["reduction"]:
+        paths = _base_paths(s)
+        assert max(paths, key=paths.get) == "operand", (s.name, paths)

@@ -1,0 +1,135 @@
+"""Generator determinism + intensity-classification properties.
+
+Covers the PR-9 contracts: same seed => byte-identical trace, the
+intensity class is a pure function of the op mix (stable under any
+instruction reordering), and raising the compute share never lowers the
+intensity class.  Plain parametrized tests keep the contracts enforced
+in bare environments; hypothesis widens the spec coverage when the
+`[test]` extra is installed.
+"""
+import sys
+import pathlib
+
+import numpy as np
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO / "src") not in sys.path:
+    sys.path.insert(0, str(REPO / "src"))
+
+from hypothesis_compat import given, settings  # noqa: E402
+
+from repro.core import tracegen as G  # noqa: E402
+from repro.core import roofline  # noqa: E402
+
+from trace_gen import build_trace, gen_specs  # noqa: E402
+
+
+# --- determinism ------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", G.CLASSES)
+def test_same_seed_byte_identical(cls):
+    spec = G.sample_spec(cls, seed=7, index=3)
+    a, b = G.generate(spec), G.generate(spec)
+    assert G.trace_bytes(a) == G.trace_bytes(b)
+    assert a == b                          # frozen-dataclass deep equality
+
+
+def test_different_seeds_differ():
+    base = G.GenSpec(cls="fuzz", seed=0)
+    other = G.GenSpec(cls="fuzz", seed=1)
+    assert G.trace_bytes(G.generate(base)) != \
+        G.trace_bytes(G.generate(other))
+
+
+@pytest.mark.parametrize("cls", G.CLASSES)
+def test_sample_spec_deterministic(cls):
+    assert G.sample_spec(cls, seed=5, index=9) == \
+        G.sample_spec(cls, seed=5, index=9)
+
+
+def test_serialization_roundtrip():
+    for cls in G.CLASSES:
+        spec = G.sample_spec(cls, seed=2, index=0)
+        tr = G.generate(spec)
+        assert G.trace_from_dict(G.trace_to_dict(tr)) == tr
+        assert G.spec_from_dict(G.spec_to_dict(spec)) == spec
+
+
+def test_unknown_class_rejected():
+    with pytest.raises(ValueError):
+        G.generate(G.GenSpec(cls="nope"))
+    with pytest.raises(ValueError):
+        G.sample_spec("nope")
+
+
+def test_max_instrs_cap_and_floor():
+    for cls in G.CLASSES:
+        tr = G.generate(G.GenSpec(cls=cls, seed=0, n=4096, max_instrs=24))
+        assert 3 <= len(tr.instrs) <= 24, (cls, len(tr.instrs))
+
+
+@given(spec=gen_specs(max_size=48))
+@settings(max_examples=30, deadline=None)
+def test_property_seed_determinism(spec):
+    assert G.trace_bytes(G.generate(spec)) == \
+        G.trace_bytes(build_trace(spec))
+
+
+# --- classification ---------------------------------------------------------
+
+def test_intensity_class_monotone_in_oi():
+    """Walking operational intensity upward never walks the class back
+    toward memory_bound."""
+    ois = np.geomspace(1e-3, 1e3, 200)
+    idx = [G.intensity_index(G.intensity_class(oi)) for oi in ois]
+    assert all(b >= a for a, b in zip(idx, idx[1:]))
+    assert G.intensity_class(0.01) == "memory_bound"
+    ridge = roofline.ARA_PEAK_GFLOPS / roofline.ARA_PEAK_BW
+    assert G.intensity_class(ridge) == "balanced"
+    assert G.intensity_class(100 * ridge) == "compute_bound"
+
+
+@pytest.mark.parametrize("cls", [c for c in G.CLASSES if c != "fuzz"])
+def test_class_stable_under_reordering(cls):
+    """Any instruction permutation that preserves the op mix preserves
+    the intensity class (classification is a function of the totals)."""
+    rng = np.random.default_rng(11)
+    spec = G.sample_spec(cls, seed=4, index=1)
+    tr = G.generate(spec)
+    for _ in range(3):
+        perm = rng.permutation(len(tr.instrs))
+        shuffled = G.retotaled(tr, [tr.instrs[i] for i in perm])
+        assert shuffled.total_flops == tr.total_flops
+        assert shuffled.total_bytes == tr.total_bytes
+        assert G.classify(shuffled) == G.classify(tr)
+
+
+@pytest.mark.parametrize("cls", ["streaming", "reduction", "raw_chain",
+                                 "compute_tile"])
+def test_compute_share_monotonicity(cls):
+    """Raising the compute share (more chains, deeper chains) never
+    lowers the intensity class, spec-to-spec, when no truncation bites
+    (ample max_instrs)."""
+    import dataclasses
+    base = dataclasses.replace(G.sample_spec(cls, seed=1, index=0),
+                               max_instrs=4096)
+    prev_idx, prev_oi = -1, -1.0
+    for chains in (1, 2, 4, 8):
+        spec = dataclasses.replace(base, compute_per_mem=chains)
+        tr = G.generate(spec)
+        oi = tr.operational_intensity
+        idx = G.intensity_index(G.classify(tr))
+        assert oi >= prev_oi - 1e-12, (cls, chains)
+        assert idx >= prev_idx, (cls, chains)
+        prev_idx, prev_oi = idx, oi
+
+
+@given(spec=gen_specs(max_size=64))
+@settings(max_examples=30, deadline=None)
+def test_property_reorder_stability(spec):
+    tr = build_trace(spec)
+    rng = np.random.default_rng(spec.seed)
+    perm = rng.permutation(len(tr.instrs))
+    shuffled = G.retotaled(tr, [tr.instrs[i] for i in perm])
+    assert G.classify(shuffled) == G.classify(tr)

@@ -1,48 +1,49 @@
-"""Shared hypothesis generator for random-but-valid kernel traces.
+"""Hypothesis strategies over the production trace generator.
 
-Used by the property tests in `test_attribution.py` (scalar/batched
-accounting invariants) and `test_assoc.py` (max-plus engine parity), so
-both suites draw from the same trace distribution.
+Before PR 9 this module carried its own random-instruction builder; it
+is now a thin wrapper over `repro.core.tracegen`, so every property test
+(`test_attribution.py`, `test_assoc.py`, `test_bucketing.py`) exercises
+the exact generator path that builds the committed scenario corpus —
+hypothesis only picks *which* deterministic spec to expand.
+
+`instr_tuples` keeps its historical name and ``(min_size, max_size)``
+signature (bounds on the emitted instruction count); it now yields
+`GenSpec` values, and `build_trace` is just `tracegen.generate`.
 """
 from hypothesis_compat import st
 
-from repro.core.isa import KernelTrace, OpKind, Stride, VInstr
+from repro.core.tracegen import CLASSES, GenSpec, generate
 
-_REGS = ("v0", "v4", "v8", "v12", "v16", "v20")
-_KINDS = (OpKind.LOAD, OpKind.STORE, OpKind.COMPUTE, OpKind.REDUCE,
-          OpKind.SLIDE)
-_STRIDES = (Stride.UNIT, Stride.STRIDED, Stride.INDEXED)
+#: Every workload class, including the "fuzz" instruction soup that
+#: subsumes the old independent tuple builder's distribution.
+_GEN_CLASSES = CLASSES
 
 
+def gen_specs(min_size: int = 3, max_size: int = 24):
+    """Strategy: a `GenSpec` whose expansion has between `min_size` and
+    `max_size` instructions (the generator emits at least 3 per strip
+    and hard-caps at ``max_instrs``)."""
+    del min_size  # every class emits >= 3 instructions per strip
+    return st.builds(
+        lambda cls, seed, n, streams, chains, depth: GenSpec(
+            cls=cls, seed=seed, n=n, n_streams=streams,
+            compute_per_mem=chains, chain_depth=depth,
+            max_instrs=max_size),
+        cls=st.sampled_from(_GEN_CLASSES),
+        seed=st.integers(0, 2**16 - 1),
+        n=st.integers(1, 1024),
+        streams=st.integers(1, 3),
+        chains=st.integers(1, 3),
+        depth=st.integers(1, 6),
+    )
+
+
+#: Historical alias: the property suites were written against a raw
+#: tuple strategy of this name; they now draw specs.
 def instr_tuples(min_size: int = 3, max_size: int = 24):
-    """Strategy: a list of raw instruction tuples for `build_trace`."""
-    return st.lists(
-        st.tuples(st.integers(0, 4),       # kind
-                  st.integers(1, 300),     # vl
-                  st.integers(0, 5),       # dst register
-                  st.integers(-1, 5),      # src 1 (-1: none)
-                  st.integers(-1, 5),      # src 2 (-1: none)
-                  st.integers(0, 2),       # stride
-                  st.booleans(),           # first_strip
-                  st.booleans()),          # divide op
-        min_size=min_size, max_size=max_size)
+    return gen_specs(min_size, max_size)
 
 
-def build_trace(raw) -> KernelTrace:
-    """Materialize a raw tuple list into a structurally-valid trace."""
-    instrs = []
-    for k, vl, dst, s1, s2, stride_i, first, isdiv in raw:
-        kind = _KINDS[k]
-        mem = kind in (OpKind.LOAD, OpKind.STORE)
-        srcs = tuple(_REGS[s] for s in (s1, s2) if s >= 0)
-        if kind is OpKind.STORE and not srcs:
-            srcs = (_REGS[dst],)
-        if kind is OpKind.LOAD:
-            srcs = srcs[:1] if _STRIDES[stride_i] is Stride.INDEXED else ()
-        name = "vfdiv" if (isdiv and kind is OpKind.COMPUTE) else "vop"
-        instrs.append(VInstr(
-            name=name, kind=kind, vl=vl, sew=4,
-            dst=None if kind is OpKind.STORE else _REGS[dst],
-            srcs=srcs, stride=_STRIDES[stride_i] if mem else Stride.UNIT,
-            flops=vl, stream="s", first_strip=first))
-    return KernelTrace("rand", tuple(instrs), total_flops=1, total_bytes=1)
+def build_trace(spec: GenSpec):
+    """Materialize a drawn spec through the shipped generator."""
+    return generate(spec)

@@ -25,6 +25,11 @@ Four checks:
    `docs/observability.md` must name exactly the keys of
    `repro.obs.metrics.KNOWN_METRICS` — an emitted-but-undocumented
    (or documented-but-gone) metric fails in both directions.
+6. **The generator knob table stays in sync.**  The table between the
+   ``gen-knob-table-start``/``gen-knob-table-end`` markers in
+   `docs/workloads.md` must document exactly the fields of
+   `repro.core.tracegen.GenSpec`, and the workload-class taxonomy
+   there must name every generator class.
 """
 from __future__ import annotations
 
@@ -148,6 +153,39 @@ def check_metric_table() -> list[str]:
     return errors
 
 
+def check_tracegen_table() -> list[str]:
+    """docs/workloads.md's knob table == dataclasses.fields(GenSpec),
+    and its taxonomy covers every generator workload class.
+
+    Same contract as the SimParams knob table: rows between the explicit
+    markers are parsed for their first backticked column, and the set
+    must equal GenSpec's field set, so a renamed/added/dropped generator
+    knob fails CI until the doc row moves with it."""
+    import dataclasses
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.core.tracegen import CLASSES, GenSpec
+    doc = REPO / "docs" / "workloads.md"
+    if not doc.exists():
+        return ["docs/workloads.md is missing"]
+    text = doc.read_text()
+    m = re.search(r"<!-- gen-knob-table-start -->(.*?)"
+                  r"<!-- gen-knob-table-end -->", text, re.S)
+    if m is None:
+        return ["docs/workloads.md lacks the gen-knob-table-start/"
+                "gen-knob-table-end markers"]
+    documented = set(re.findall(r"^\|\s*`([A-Za-z0-9_]+)`", m.group(1),
+                                re.M))
+    fields = {f.name for f in dataclasses.fields(GenSpec)}
+    errors = [f"docs/workloads.md knob table names unknown GenSpec "
+              f"field {name!r}" for name in sorted(documented - fields)]
+    errors += [f"docs/workloads.md knob table does not document "
+               f"GenSpec field {name!r}"
+               for name in sorted(fields - documented)]
+    errors += [f"docs/workloads.md does not document workload class "
+               f"{cls!r}" for cls in CLASSES if f"`{cls}`" not in text]
+    return errors
+
+
 def check_figure_docs() -> list[str]:
     """Every benchmarks/fig*.py has a "how to read it" doc under docs/."""
     docs = [(p, p.read_text()) for p in sorted((REPO / "docs")
@@ -166,7 +204,7 @@ def check_figure_docs() -> list[str]:
 def main() -> int:
     errors = (check_links() + check_stall_vocabulary()
               + check_simparams_table() + check_figure_docs()
-              + check_metric_table())
+              + check_metric_table() + check_tracegen_table())
     for e in errors:
         print(f"ERROR: {e}")
     if not errors:

@@ -1,0 +1,128 @@
+"""Generate (or verify) the committed scenario corpus.
+
+    python tools/gen_corpus.py --seed 0            # rewrite the corpus
+    python tools/gen_corpus.py --check             # CI: regenerate into a
+                                                   # temp dir, byte-diff
+
+The corpus is a pure function of ``(seed, per_class)``: scenario specs
+are drawn by `repro.core.tracegen.sample_spec`, expanded by `generate`,
+classified by arithmetic intensity, and stamped with golden simulation
+totals (numpy backend, default `SimParams`, baseline + M+C+O corners)
+from one batched `api.simulate` call.  ``--check`` failing means either
+the generator, the simulator, or the corpus files drifted — regenerate
+and commit, or fix the drift.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO / "src") not in sys.path:
+    sys.path.insert(0, str(REPO / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import api, tracegen  # noqa: E402
+from repro.core.isa import OptConfig  # noqa: E402
+from repro.core.simulator import SimParams  # noqa: E402
+from repro.data import corpus  # noqa: E402
+
+#: Default corpus shape: every tracegen class x this many scenarios.
+PER_CLASS = 16
+
+_CORNERS = (OptConfig.baseline(), OptConfig.full())
+
+
+def build_scenarios(seed: int = 0, per_class: int = PER_CLASS
+                    ) -> list[corpus.Scenario]:
+    """Sample, expand, classify, and stamp golden totals (one batched
+    numpy attribution call over the whole corpus)."""
+    drafts: list[tuple[str, tracegen.GenSpec]] = []
+    for cls in tracegen.CORPUS_CLASSES:
+        for idx in range(per_class):
+            spec = tracegen.sample_spec(cls, seed=seed, index=idx)
+            drafts.append((cls, spec))
+    traces = [tracegen.generate(spec) for _, spec in drafts]
+    batch = api.simulate(traces, list(_CORNERS), SimParams(),
+                         backend="numpy", method="scan",
+                         bucket="none", attribution=True)
+    scenarios: list[corpus.Scenario] = []
+    for bi, ((cls, spec), tr) in enumerate(zip(drafts, traces)):
+        expected = {}
+        for oi_, opt in enumerate(_CORNERS):
+            expected[opt.label] = {
+                "cycles": float(batch.cycles[bi, oi_, 0]),
+                "ideal": float(batch.ideal[bi, oi_, 0]),
+                "stalls": [float(x) for x in batch.stalls[bi, oi_, 0]],
+            }
+        assert np.isfinite(batch.cycles[bi]).all(), tr.name
+        scenarios.append(corpus.Scenario(
+            name=tr.name, cls=cls, spec=spec, trace=tr,
+            intensity=tracegen.classify(tr),
+            oi=tr.operational_intensity, expected=expected))
+    return scenarios
+
+
+def _diff_trees(committed: pathlib.Path, fresh: pathlib.Path
+                ) -> list[str]:
+    errors = []
+    fresh_files = {p.name for p in fresh.iterdir()}
+    committed_files = ({p.name for p in committed.iterdir()}
+                       if committed.exists() else set())
+    for name in sorted(fresh_files - committed_files):
+        errors.append(f"missing from committed corpus: {name}")
+    for name in sorted(committed_files - fresh_files):
+        errors.append(f"stale committed file (not regenerated): {name}")
+    for name in sorted(fresh_files & committed_files):
+        if (committed / name).read_bytes() != (fresh / name).read_bytes():
+            errors.append(f"corpus file differs from regeneration: {name}")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="corpus master seed (default 0, the committed "
+                         "corpus)")
+    ap.add_argument("--per-class", type=int, default=PER_CLASS)
+    ap.add_argument("--out", type=pathlib.Path,
+                    default=corpus.CORPUS_DIR)
+    ap.add_argument("--check", action="store_true",
+                    help="regenerate into a temp dir and byte-diff "
+                         "against the committed corpus (exit 1 on drift)")
+    args = ap.parse_args(argv)
+
+    if args.check:
+        committed = corpus.load_manifest(args.out)
+        scenarios = build_scenarios(committed.get("seed", args.seed),
+                                    args.per_class)
+        with tempfile.TemporaryDirectory() as tmp:
+            corpus.dump_corpus(scenarios, pathlib.Path(tmp),
+                               committed.get("seed", args.seed))
+            errors = _diff_trees(pathlib.Path(args.out),
+                                 pathlib.Path(tmp))
+        for e in errors:
+            print(f"ERROR: {e}")
+        if errors:
+            print("corpus drift: rerun tools/gen_corpus.py and commit, "
+                  "or fix the generator/simulator change")
+            return 1
+        print(f"corpus check OK ({len(scenarios)} scenarios, "
+              f"byte-identical regeneration)")
+        return 0
+
+    scenarios = build_scenarios(args.seed, args.per_class)
+    manifest = corpus.dump_corpus(scenarios, args.out, args.seed)
+    n_cls = len(manifest["classes"])
+    print(f"wrote {manifest['n_scenarios']} scenarios across {n_cls} "
+          f"classes -> {args.out}")
+    for cls, count in manifest["classes"].items():
+        print(f"  {cls:14s} {count}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
