@@ -27,8 +27,8 @@ def main() -> None:
 
     from benchmarks import (dryrun_table, fig3_speedup, fig4_roofline,
                             fig5_sensitivity, fig6_attribution,
-                            fig7_sensitivity, fig8_corpus, gridlib,
-                            kernel_bench, table1_ablation,
+                            fig7_sensitivity, fig8_corpus, fig9_search,
+                            gridlib, kernel_bench, table1_ablation,
                             table2_efficiency)
     if args.smoke:
         gridlib.set_profile("smoke")
@@ -58,8 +58,15 @@ def main() -> None:
         from benchmarks.common import emit
         emit(kernel_bench.batch_grid_rows(),
              gridlib.table_name("kernel_bench"))
+        # fig9 design-space search: the smoke profile runs exactly the
+        # canonical committed budget, so the same pass that emits the
+        # frontier/convergence CSVs also verifies the committed
+        # experiments/search/pareto.json (dominance equivalence + the
+        # calibrated-geomean drift gate).
+        fig9_search.main(["--check", *plot])
     else:
         fig7_sensitivity.main(["--profile", "large", *plot])
+        fig9_search.main(plot)
         kernel_bench.main()
         dryrun_table.main()
 

@@ -265,6 +265,91 @@ def render_param_heatmap(rows: list[dict], knobs: tuple[str, str],
     return path
 
 
+def render_frontier(rows: list[dict], path: str | pathlib.Path,
+                    title: str = "design-search Pareto frontier"
+                    ) -> pathlib.Path:
+    """Render fig9 frontier rows as a cost/score scatter.
+
+    `rows` is the fig9_search CSV shape: every evaluated-or-frontier
+    point carries ``cost``, ``score``, ``label`` and an ``on_frontier``
+    flag.  Frontier points draw as a step line (the achievable
+    trade-off curve) colored by dominant path; non-frontier evaluations
+    (when present) scatter grey underneath, showing what the search
+    rejected."""
+    if not have_matplotlib():
+        raise RuntimeError(
+            "render_frontier needs matplotlib; install the [plot] "
+            "extra (pip install -e .[plot])")
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    front = [r for r in rows if r.get("on_frontier", True)]
+    rest = [r for r in rows if not r.get("on_frontier", True)]
+    front.sort(key=lambda r: r["cost"])
+    fig, ax = plt.subplots(figsize=(5.4, 3.6))
+    if rest:
+        ax.scatter([r["cost"] for r in rest], [r["score"] for r in rest],
+                   s=12, color="#cccccc", zorder=1, label="evaluated")
+    ax.step([r["cost"] for r in front], [r["score"] for r in front],
+            where="post", color="#555555", lw=1, zorder=2)
+    colors = [_PATH_COLORS.get(r.get("dominant_path", ""), "#969696")
+              for r in front]
+    ax.scatter([r["cost"] for r in front], [r["score"] for r in front],
+               s=30, c=colors, zorder=3, label="frontier")
+    for r in front:
+        ax.annotate(str(r.get("label", "")), (r["cost"], r["score"]),
+                    fontsize=5, xytext=(2, 2),
+                    textcoords="offset points")
+    ax.set_xlabel("cost (area mm$^2$)", fontsize=8)
+    ax.set_ylabel("score (geomean speedup)", fontsize=8)
+    ax.tick_params(labelsize=7)
+    ax.legend(fontsize=6)
+    ax.set_title(title, fontsize=10)
+    fig.tight_layout()
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fig.savefig(path, dpi=150)
+    plt.close(fig)
+    return path
+
+
+def render_convergence(history: list[dict], path: str | pathlib.Path,
+                       title: str = "design-search convergence"
+                       ) -> pathlib.Path:
+    """Render a search log (fig9_convergence CSV shape: per-generation
+    ``gen``/``best_score``/``frontier_size``/``archive`` rows) as the
+    best-score trajectory with the frontier size on a twin axis."""
+    if not have_matplotlib():
+        raise RuntimeError(
+            "render_convergence needs matplotlib; install the [plot] "
+            "extra (pip install -e .[plot])")
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    gens = [r["gen"] for r in history]
+    fig, ax = plt.subplots(figsize=(5.0, 3.2))
+    ax.plot(gens, [r["best_score"] for r in history], "o-",
+            color="#08519c", label="best score")
+    ax.set_xlabel("generation", fontsize=8)
+    ax.set_ylabel("best feasible score", color="#08519c", fontsize=8)
+    ax.tick_params(labelsize=7)
+    ax2 = ax.twinx()
+    ax2.plot(gens, [r["frontier_size"] for r in history], "s--",
+             color="#31a354", label="frontier size")
+    ax2.set_ylabel("frontier size", color="#31a354", fontsize=8)
+    ax2.tick_params(labelsize=7)
+    ax.set_title(title, fontsize=10)
+    fig.tight_layout()
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fig.savefig(path, dpi=150)
+    plt.close(fig)
+    return path
+
+
 __all__ = ["breakdown_rows", "format_report", "write_csv",
            "have_matplotlib", "render_stacked_bars", "render_tornado",
-           "render_param_heatmap", "STALL_CATEGORIES"]
+           "render_param_heatmap", "render_frontier",
+           "render_convergence", "STALL_CATEGORIES"]

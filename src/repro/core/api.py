@@ -48,10 +48,10 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import spans as obs_spans
 
 __all__ = [
-    "ExecutionPlan", "simulate", "resolve_plan", "have_jax",
-    "jax_accelerator", "local_device_count", "measured_crossovers",
-    "JAX_WIDTH_CROSSOVER", "ASSOC_INSTR_CROSSOVER",
-    "BUCKET_WASTE_CROSSOVER",
+    "ExecutionPlan", "simulate", "simulate_groups", "resolve_plan",
+    "have_jax", "jax_accelerator", "local_device_count",
+    "measured_crossovers", "JAX_WIDTH_CROSSOVER",
+    "ASSOC_INSTR_CROSSOVER", "BUCKET_WASTE_CROSSOVER",
 ]
 
 #: Measured numpy-vs-jax crossover (grid width ``O * P``): the numbers in
@@ -363,3 +363,40 @@ def simulate(traces, opts: Sequence[OptConfig],
             obs_export.flush(target)
             if not was_enabled:
                 obs_spans.disable()
+
+
+def simulate_groups(traces, groups: Sequence[tuple[Sequence[OptConfig],
+                                                   Sequence[SimParams]]],
+                    *, mc: MachineConfig = MachineConfig(),
+                    backend: str = "auto", method: str = "auto",
+                    attribution: bool = False,
+                    p_chunk: int | None = None,
+                    assoc_chunk: int | None = None,
+                    bucket: str = "auto", shard: str = "auto",
+                    sim: BatchAraSimulator | None = None
+                    ) -> list[BatchResult]:
+    """Evaluate several `(opts, params)` grids over ONE shared trace
+    stack: `groups[g]` is an ``(opts, params)`` pair and the g-th
+    result is ``simulate(traces, *groups[g])``.
+
+    This is the population-scoring entrypoint for callers whose
+    candidates do not form a dense `(opts x params)` product — the
+    design-space searcher's populations mix opt corners, and simulating
+    the bounding product would waste `O(corners)` times the work.
+    Grouping by corner instead keeps every group one batched call, the
+    trace stacking/padding is paid once for the whole population, and
+    all groups share one simulator (compiled-program cache).  Each
+    group still counts one ``simulate.calls`` tick, so obs metrics can
+    assert a search generation cost at most `corners + 1` batched
+    calls (`tests/test_design_search.py`).
+    """
+    stacked = _as_stacked(traces)
+    simulator = sim if sim is not None else _shared_sim(mc)
+    obs_metrics.counter("simulate.groups").inc(len(groups))
+    with obs_spans.span("simulate.groups", n_groups=len(groups),
+                        n_traces=int(stacked.kind.shape[0])):
+        return [simulate(stacked, opts, params, mc=mc, backend=backend,
+                         method=method, attribution=attribution,
+                         p_chunk=p_chunk, assoc_chunk=assoc_chunk,
+                         bucket=bucket, shard=shard, sim=simulator)
+                for opts, params in groups]

@@ -88,6 +88,16 @@ def _traces():
     return {k: fn() for k, fn in DEFAULT_TRACES.items()}
 
 
+def grid_traces():
+    """The calibration evaluation grid: the 11 paper kernels at their
+    Fig. 3 problem sizes.  Public so the design-space searcher
+    (`repro.launch.design_search`) can score candidate designs on
+    exactly the grid the recorded ``geomean_speedup`` in
+    `ara_calibrated.json` was measured on — the "scores >= Ara-Opt on
+    the calibrated grid" acceptance gate compares like with like."""
+    return _traces()
+
+
 # One simulator for every scoring call: the jax backend caches its
 # compiled program per instance, so sharing it lets the search's repeated
 # same-shape populations reuse one compile instead of recompiling per

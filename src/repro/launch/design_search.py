@@ -1,0 +1,807 @@
+"""Attribution-guided design-space search: the simulator, inverted.
+
+The paper hand-picks three coordinated optimizations (M/C/O) at one
+strength each and evaluates eight corners.  This module *discovers*
+designs instead: it searches the widened space of opt-class flags x
+continuous strength knobs (`repro.launch.costmodel.SEARCH_SPACE`),
+maximizing a throughput objective subject to a hardware cost bound
+(`costmodel.design_cost`, anchored to Table II), and returns a Pareto
+frontier of score vs. cost instead of a single Ara-Opt point.
+
+Everything the earlier PRs built feeds the loop:
+
+* **batched population scoring** — every generation's new candidates
+  are grouped by opt corner and scored through
+  `repro.core.api.simulate_groups`: one shared trace stack, one
+  batched `(trace x corner x candidates)` call per corner, never a
+  per-candidate scalar simulation (asserted via obs metrics in
+  `tests/test_design_search.py`);
+* **attribution-guided mutation** — each scored design carries the
+  stall tensors' binding critical path aggregated over the evaluation
+  set, and mutations bias knob proposals toward the knobs acting on
+  that path (`sensitivity.KNOB_PATHS`), or toward enabling the class
+  whose hardware addresses it;
+* **Sobol-informed co-moves** — a Saltelli design over the strength
+  space (`sensitivity.sobol_design`) is scored once up front, and the
+  total-minus-first-order interaction masses pick knob *pairs* to
+  mutate jointly (`sensitivity.co_move_pairs`);
+* **the scenario corpus as evaluation set** — ``eval_set="corpus"``
+  scores candidates on the committed 160-scenario corpus (budgeted per
+  class like `benchmarks.gridlib`), with per-class gap-closed columns
+  in every frontier record; ``eval_set="grid"`` scores on the
+  calibration grid the recorded 1.29 geomean lives on.
+
+Algorithms: ``evolve`` (elitist evolutionary loop, crossover +
+mutation), ``beam`` (top-k frontier expansion), ``random`` (multi-seed
+LHS restarts), ``chain`` (width-1 beam — the hillclimb CLI's mode).
+All are seed-deterministic: same seed -> identical search log and
+frontier (tested).
+
+Artifacts: `benchmarks/fig9_search.py` runs the canonical budget and
+commits `experiments/search/pareto.json`; docs/search.md documents the
+objective/constraint vocabulary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import random
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core import api
+from repro.core.batch_sim import BatchAraSimulator
+from repro.core.calibration import grid_traces, load as load_calibrated
+from repro.core.isa import KernelTrace, OptConfig, geomean
+from repro.core.simulator import SimParams
+from repro.core.stalls import PATH_NAMES, path_sums
+from repro.core.traces import stack_traces
+from repro.launch.costmodel import (SEARCH_SPACE, SPACE_BY_NAME,
+                                    design_cost)
+from repro.launch.sensitivity import (KNOB_PATHS, co_move_pairs,
+                                      sobol_design, sobol_indices)
+from repro.launch.sweep_cache import design_fingerprint
+from repro.obs import metrics as obs_metrics
+from repro.obs import spans as obs_spans
+
+__all__ = [
+    "DesignPoint", "ScoredDesign", "SearchResult", "make_design",
+    "baseline_design", "ara_opt_design", "paper_corners",
+    "PopulationScorer", "pareto_front", "dominates", "run_search",
+    "frontier_payload", "write_pareto", "check_committed",
+    "CANONICAL_BUDGET", "PARETO_PATH", "ALGORITHMS", "OBJECTIVES",
+]
+
+_REPO = pathlib.Path(__file__).resolve().parents[3]
+PARETO_PATH = _REPO / "experiments" / "search" / "pareto.json"
+
+ALGORITHMS = ("evolve", "beam", "random", "chain")
+OBJECTIVES = ("speedup", "gap_closed")
+
+#: Class whose hardware addresses each critical path — the flag-flip
+#: bias of attribution-guided mutation.
+PATH_CLASS = {"mem_supply": "M", "dep_issue": "C", "operand": "O"}
+
+#: Geomean-gap objective floor: gap-closed is negative for designs
+#: slower than baseline, so the geomean aggregates the clamped value
+#: (raw per-trace/per-class means are still reported unclamped).
+GAP_FLOOR = 1e-3
+
+#: The committed-frontier budget (`experiments/search/pareto.json`):
+#: small enough for the CI smoke job to regenerate, large enough that
+#: the evolved best beats the injected Ara-Opt corner.  fig9's full
+#: profile scales generations/population up from here.
+CANONICAL_BUDGET = dict(
+    algorithm="evolve", objective="speedup", eval_set="corpus",
+    per_class=2, seed=0, generations=4, population=14, beam_width=4,
+    branch=4, restarts=3, sobol_n=8,
+)
+
+
+# -- the design space ------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    """One candidate design: M/C/O flags + enabled-class strengths.
+
+    ``strengths`` holds only the knobs of *enabled* classes (absent
+    hardware has no knobs), name-sorted and bound-clipped — the
+    canonical form, so two routes to the same design hash identically
+    (`key`) and the evaluated-archive never re-scores a repeat.
+    """
+    memory: bool
+    control: bool
+    operand: bool
+    strengths: tuple[tuple[str, float], ...]
+
+    @property
+    def opt(self) -> OptConfig:
+        return OptConfig(self.memory, self.control, self.operand)
+
+    @property
+    def label(self) -> str:
+        return self.opt.label
+
+    def enabled(self, cls: str) -> bool:
+        return {"M": self.memory, "C": self.control,
+                "O": self.operand}[cls]
+
+    def params(self, center: SimParams) -> SimParams:
+        """Concrete `SimParams`: the center's (calibrated) baseline-side
+        knobs with this design's strengths on top.  Disabled-class
+        knobs stay at the center — the simulator never reads them with
+        the class off."""
+        return dataclasses.replace(center, **dict(self.strengths))
+
+    @property
+    def key(self) -> str:
+        """Archive identity (content hash; trace-independent)."""
+        return design_fingerprint(
+            self.opt, dataclasses.replace(SimParams(),
+                                          **dict(self.strengths)))[:16]
+
+    def to_json(self) -> dict:
+        return {"memory": self.memory, "control": self.control,
+                "operand": self.operand,
+                "strengths": dict(self.strengths)}
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "DesignPoint":
+        return make_design(bool(d["memory"]), bool(d["control"]),
+                           bool(d["operand"]), d.get("strengths", {}))
+
+
+def make_design(memory: bool, control: bool, operand: bool,
+                strengths: Mapping[str, float] = (),
+                center: SimParams | None = None) -> DesignPoint:
+    """Canonicalize a design: clip strengths to `SEARCH_SPACE` bounds,
+    fill missing enabled-class knobs from `center` (the paper defaults
+    when None), drop disabled-class knobs."""
+    strengths = dict(strengths)
+    flags = {"M": memory, "C": control, "O": operand}
+    kept: list[tuple[str, float]] = []
+    for dim in SEARCH_SPACE:
+        if not flags[dim.cls]:
+            continue
+        v = strengths.get(dim.name)
+        if v is None:
+            v = (getattr(center, dim.name) if center is not None
+                 else dim.default)
+        kept.append((dim.name, dim.clip(float(v))))
+    return DesignPoint(memory, control, operand, tuple(sorted(kept)))
+
+
+def baseline_design() -> DesignPoint:
+    """The paper's baseline Ara corner: every class off, no knobs."""
+    return make_design(False, False, False)
+
+
+def ara_opt_design(center: SimParams | None = None) -> DesignPoint:
+    """The paper's Ara-Opt corner: every class on at the strengths of
+    `center` (defaults to the calibrated point, so this design's
+    calibrated-grid score IS `ara_calibrated.json`'s recorded
+    geomean)."""
+    center = center if center is not None else load_calibrated()
+    return make_design(True, True, True, center=center)
+
+
+def paper_corners(center: SimParams | None = None) -> list[DesignPoint]:
+    """Injected seeds: baseline, the three single classes, Ara-Opt."""
+    center = center if center is not None else load_calibrated()
+    return [
+        baseline_design(),
+        make_design(True, False, False, center=center),
+        make_design(False, True, False, center=center),
+        make_design(False, False, True, center=center),
+        ara_opt_design(center),
+    ]
+
+
+# -- population scoring ----------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScoredDesign:
+    """A design plus everything the search and frontier records need."""
+    design: DesignPoint
+    score: float                 # the objective being maximized
+    cost: float                  # the scalar being minimized (area mm2)
+    area_mm2: float
+    power_mw: float
+    geomean_speedup: float       # geomean speedup on the eval set
+    gap_closed: float            # mean gap-closed on the eval set
+    gap_by_class: tuple[tuple[str, float], ...]
+    dominant_path: str           # binding critical path, eval-aggregated
+    path_shares: tuple[tuple[str, float], ...]
+
+    @property
+    def key(self) -> str:
+        return self.design.key
+
+
+class PopulationScorer:
+    """Scores whole populations of designs in batched calls.
+
+    The evaluation traces are stacked **once**; the baseline reference
+    column (cycles + ideal, identical for every candidate because
+    baseline-side knobs are pinned to the center) is simulated **once**
+    at construction; and each `score()` call groups its designs by opt
+    corner and runs one batched `(trace x corner-population)` call per
+    corner through `api.simulate_groups`.  Attribution is always on —
+    the stall tensors are what guide mutation.
+    """
+
+    def __init__(self, traces: Mapping[str, KernelTrace],
+                 classes: Mapping[str, str] | None = None,
+                 center: SimParams | None = None,
+                 objective: str = "speedup",
+                 backend: str = "numpy", method: str = "scan",
+                 sim: BatchAraSimulator | None = None):
+        if objective not in OBJECTIVES:
+            raise ValueError(f"unknown objective {objective!r} "
+                             f"(known: {', '.join(OBJECTIVES)})")
+        self.names = list(traces)
+        self.classes = dict(classes or {})
+        self.center = center if center is not None else load_calibrated()
+        self.objective = objective
+        self.backend = backend
+        self.method = method
+        self.sim = sim if sim is not None else BatchAraSimulator()
+        self.stacked = stack_traces([traces[k] for k in self.names])
+        base = api.simulate(self.stacked, [OptConfig.baseline()],
+                            [self.center], backend=backend,
+                            method=method, attribution=True,
+                            sim=self.sim)
+        self.cycles_base = base.cycles[:, 0, 0]          # (B,)
+        self.ideal_base = base.ideal[:, 0, 0]            # (B,)
+
+    def score(self, designs: Sequence[DesignPoint]) -> list[ScoredDesign]:
+        """One batched-population evaluation; preserves input order."""
+        designs = list(designs)
+        if not designs:
+            return []
+        obs_metrics.counter("search.populations").inc()
+        obs_metrics.counter("search.candidates").inc(len(designs))
+        by_corner: dict[str, list[int]] = {}
+        for i, d in enumerate(designs):
+            by_corner.setdefault(d.label, []).append(i)
+        labels = sorted(by_corner)
+        groups = [([designs[by_corner[lbl][0]].opt],
+                   [designs[i].params(self.center)
+                    for i in by_corner[lbl]]) for lbl in labels]
+        with obs_spans.span("search.score", n_designs=len(designs),
+                            n_corners=len(labels)):
+            results = api.simulate_groups(
+                self.stacked, groups, backend=self.backend,
+                method=self.method, attribution=True, sim=self.sim)
+        out: list[ScoredDesign | None] = [None] * len(designs)
+        for lbl, res in zip(labels, results):
+            cyc = res.cycles[:, 0, :]                     # (B, P)
+            paths = path_sums(res.stalls[:, 0, :, :])     # (B, P, 3)
+            for pi, di in enumerate(by_corner[lbl]):
+                out[di] = self._finish(designs[di], cyc[:, pi],
+                                       paths[:, pi, :])
+        return out  # type: ignore[return-value]
+
+    def _finish(self, design: DesignPoint, cycles: np.ndarray,
+                paths: np.ndarray) -> ScoredDesign:
+        speedups = self.cycles_base / np.maximum(cycles, 1e-9)
+        stall_base = np.maximum(self.cycles_base - self.ideal_base, 1e-9)
+        gaps = (self.cycles_base - cycles) / stall_base
+        sp_geo = geomean([float(s) for s in speedups])
+        gap_geo = geomean([max(float(g), GAP_FLOOR) for g in gaps])
+        by_cls: dict[str, list[float]] = {}
+        for name, g in zip(self.names, gaps):
+            by_cls.setdefault(self.classes.get(name, name),
+                              []).append(float(g))
+        gap_by_class = tuple((c, sum(v) / len(v))
+                             for c, v in sorted(by_cls.items()))
+        totals = paths.sum(axis=0)                        # (3,)
+        share = totals / max(float(totals.sum()), 1e-9)
+        dominant = PATH_NAMES[int(np.argmax(totals))]
+        cost = design_cost(design.opt, design.params(self.center))
+        return ScoredDesign(
+            design=design,
+            score=sp_geo if self.objective == "speedup" else gap_geo,
+            cost=cost["cost"], area_mm2=cost["area_mm2"],
+            power_mw=cost["power_mw"], geomean_speedup=sp_geo,
+            gap_closed=float(np.mean(gaps)), gap_by_class=gap_by_class,
+            dominant_path=dominant,
+            path_shares=tuple(zip(PATH_NAMES, map(float, share))))
+
+
+def eval_traces(eval_set: str, per_class: int | None = None
+                ) -> tuple[dict[str, KernelTrace], dict[str, str]]:
+    """The searcher's evaluation set: traces + scenario-class labels.
+
+    ``grid`` is the calibration grid (11 paper kernels, each its own
+    class); ``corpus`` the committed scenario corpus, ``per_class``
+    budgeted like `benchmarks.gridlib.CORPUS_PER_CLASS`.
+    """
+    if eval_set == "grid":
+        traces = grid_traces()
+        return traces, {name: name for name in traces}
+    if eval_set == "corpus":
+        from repro.data import corpus as C
+        scenarios = C.load_scenarios(per_class=per_class)
+        return ({s.name: s.trace for s in scenarios},
+                {s.name: s.cls for s in scenarios})
+    raise ValueError(f"unknown eval_set {eval_set!r} "
+                     "(known: grid, corpus)")
+
+
+# -- Pareto ---------------------------------------------------------------
+
+def dominates(a: ScoredDesign, b: ScoredDesign) -> bool:
+    """`a` dominates `b`: no worse on both axes, better on one
+    (score is maximized, cost minimized)."""
+    return (a.score >= b.score and a.cost <= b.cost
+            and (a.score > b.score or a.cost < b.cost))
+
+
+def pareto_front(points: Sequence[ScoredDesign]) -> list[ScoredDesign]:
+    """Mutually non-dominated subset, cheapest first (pure function;
+    property-tested: non-dominated within itself AND dominating or
+    tying every excluded point).  Exact (score, cost) duplicates keep
+    only the first by key order."""
+    pts = sorted(points, key=lambda p: (p.cost, -p.score, p.key))
+    front: list[ScoredDesign] = []
+    seen: set[tuple[float, float]] = set()
+    best_score = -float("inf")
+    for p in pts:
+        if p.score > best_score:
+            if (p.score, p.cost) not in seen:
+                front.append(p)
+                seen.add((p.score, p.cost))
+            best_score = p.score
+    return front
+
+
+# -- proposal operators ----------------------------------------------------
+
+def _weighted_choice(rng: random.Random, items: Sequence,
+                     weights: Sequence[float]):
+    total = float(sum(weights))
+    r = rng.random() * total
+    acc = 0.0
+    for item, w in zip(items, weights):
+        acc += w
+        if r <= acc:
+            return item
+    return items[-1]
+
+
+def _jitter(rng: random.Random, name: str, value: float,
+            step: float) -> float:
+    """Gaussian step in the knob's normalized [lo, hi] coordinate."""
+    dim = SPACE_BY_NAME[name]
+    x = (dim.clip(value) - dim.lo) / (dim.hi - dim.lo)
+    x = min(1.0, max(0.0, x + rng.gauss(0.0, step)))
+    return dim.lo + x * (dim.hi - dim.lo)
+
+
+def mutate(scored: ScoredDesign, rng: random.Random,
+           center: SimParams, step: float = 0.15,
+           pairs: Sequence[tuple[str, str]] = (),
+           flag_prob: float = 0.15,
+           pair_prob: float = 0.35) -> DesignPoint:
+    """One attribution-guided mutation of a scored design.
+
+    With probability `flag_prob` a class flag flips — biased toward
+    *enabling* the class whose hardware addresses the design's binding
+    critical path.  Otherwise 1-2 strength knobs jitter, sampled 4x
+    more often from the knobs acting on that path (`KNOB_PATHS`); with
+    probability `pair_prob` a Sobol co-move `pair` (both knobs inside
+    enabled classes) is jittered jointly instead.
+    """
+    d = scored.design
+    flags = {"M": d.memory, "C": d.control, "O": d.operand}
+    strengths = dict(d.strengths)
+    bind_cls = PATH_CLASS.get(scored.dominant_path)
+    if rng.random() < flag_prob:
+        if bind_cls is not None and not flags[bind_cls]:
+            flip = bind_cls                   # enable the binding class
+        else:
+            flip = rng.choice(("M", "C", "O"))
+        flags[flip] = not flags[flip]
+        return make_design(flags["M"], flags["C"], flags["O"],
+                           strengths, center=center)
+    knobs = [d0.name for d0 in SEARCH_SPACE if flags[d0.cls]]
+    if not knobs:                             # baseline corner: enable one
+        flip = bind_cls or rng.choice(("M", "C", "O"))
+        flags[flip] = True
+        return make_design(flags["M"], flags["C"], flags["O"],
+                           strengths, center=center)
+    live_pairs = [p for p in pairs if p[0] in knobs and p[1] in knobs]
+    if live_pairs and rng.random() < pair_prob:
+        chosen = list(rng.choice(live_pairs))
+    else:
+        weights = [4.0 if KNOB_PATHS.get(k) == scored.dominant_path
+                   else 1.0 for k in knobs]
+        chosen = [_weighted_choice(rng, knobs, weights)]
+        if len(knobs) > 1 and rng.random() < 0.4:
+            rest = [k for k in knobs if k not in chosen]
+            wrest = [4.0 if KNOB_PATHS.get(k) == scored.dominant_path
+                     else 1.0 for k in rest]
+            chosen.append(_weighted_choice(rng, rest, wrest))
+    for k in chosen:
+        cur = strengths.get(k, float(getattr(center, k)))
+        strengths[k] = _jitter(rng, k, cur, step)
+    return make_design(flags["M"], flags["C"], flags["O"], strengths,
+                       center=center)
+
+
+def crossover(a: ScoredDesign, b: ScoredDesign, rng: random.Random,
+              center: SimParams) -> DesignPoint:
+    """Uniform crossover: each flag and each strength knob inherits
+    from a random parent (strengths fall back to whichever parent has
+    the knob's class enabled, the center otherwise)."""
+    da, db = a.design, b.design
+    flags = {
+        "M": (da if rng.random() < 0.5 else db).memory,
+        "C": (da if rng.random() < 0.5 else db).control,
+        "O": (da if rng.random() < 0.5 else db).operand,
+    }
+    sa, sb = dict(da.strengths), dict(db.strengths)
+    strengths = {}
+    for dim in SEARCH_SPACE:
+        if not flags[dim.cls]:
+            continue
+        pick = [p for p in ((sa if rng.random() < 0.5 else sb), sa, sb)
+                if dim.name in p]
+        if pick:
+            strengths[dim.name] = pick[0][dim.name]
+    return make_design(flags["M"], flags["C"], flags["O"], strengths,
+                       center=center)
+
+
+def _lhs_designs(rng: random.Random, n: int,
+                 center: SimParams) -> list[DesignPoint]:
+    """`n` Latin-hypercube random designs over the full strength space,
+    with rng-drawn class flags (never all-off — that's the injected
+    baseline's job)."""
+    from repro.launch.sensitivity import lhs_candidates
+    space = [(d.name, d.lo, d.hi) for d in SEARCH_SPACE]
+    rows = lhs_candidates(space, n, rng) if n else []
+    out = []
+    for row in rows:
+        flags = [rng.random() < 0.75 for _ in range(3)]
+        if not any(flags):
+            flags = [True, True, True]
+        out.append(make_design(*flags, row, center=center))
+    return out
+
+
+# -- the search loop -------------------------------------------------------
+
+@dataclasses.dataclass
+class SearchResult:
+    """Everything one search run produced."""
+    best: ScoredDesign               # argmax score subject to the bound
+    frontier: list[ScoredDesign]     # Pareto front over ALL evaluated
+    evaluated: list[ScoredDesign]    # archive, evaluation order
+    history: list[dict]              # per-generation search log
+    config: dict                     # reproduces the run
+    calibrated: dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def _selection_key(bound: float):
+    """Feasible-first, score-descending, then cost, then key (total
+    deterministic order)."""
+    def key(s: ScoredDesign):
+        return (s.cost > bound, -s.score, s.cost, s.key)
+    return key
+
+
+def _sobol_pairs(scorer: PopulationScorer, seed: int, n: int,
+                 top: int = 3) -> list[tuple[str, str]]:
+    """Score a Saltelli design over the strength space once (one
+    batched `(trace x {base, full} x variants)` call) and rank knob
+    pairs by interaction mass."""
+    if n <= 0:
+        return []
+    space = [(d.name, d.lo, d.hi) for d in SEARCH_SPACE]
+    design = sobol_design(center=scorer.center, n=n, seed=seed,
+                          space=space)
+    res = api.simulate(scorer.stacked,
+                       [OptConfig.baseline(), OptConfig.full()],
+                       list(design.variants), backend=scorer.backend,
+                       method=scorer.method, sim=scorer.sim)
+    sp = res.cycles[:, 0, :] / np.maximum(res.cycles[:, 1, :], 1e-9)
+    f = np.exp(np.log(np.maximum(sp, 1e-30)).mean(axis=0))   # (P,)
+    return co_move_pairs(sobol_indices(design, f), top=top)
+
+
+def run_search(algorithm: str = "evolve", objective: str = "speedup",
+               eval_set: str = "grid", seed: int = 0,
+               generations: int = 6, population: int = 24,
+               beam_width: int = 6, branch: int = 4, restarts: int = 4,
+               cost_bound: float | None = None, sobol_n: int = 8,
+               per_class: int | None = None,
+               center: SimParams | None = None,
+               backend: str = "numpy", method: str = "scan",
+               inject: Sequence[DesignPoint] | None = None,
+               scorer: PopulationScorer | None = None) -> SearchResult:
+    """Run one seeded search; see the module docstring for the loop.
+
+    ``cost_bound`` defaults to the calibrated Ara-Opt corner's own cost
+    — "find designs at most as expensive as the paper's" — and the
+    injected corners (`paper_corners`) guarantee the search never loses
+    to Ara-Opt on its own evaluation set.  The returned ``best`` is the
+    highest-scoring *feasible* design; the ``frontier`` spans all
+    costs.
+    """
+    if algorithm not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {algorithm!r} "
+                         f"(known: {', '.join(ALGORITHMS)})")
+    requested = algorithm
+    rng = random.Random(seed)
+    center = center if center is not None else load_calibrated()
+    if scorer is None:
+        traces, classes = eval_traces(eval_set, per_class)
+        scorer = PopulationScorer(traces, classes, center=center,
+                                  objective=objective, backend=backend,
+                                  method=method)
+    if cost_bound is None:
+        cost_bound = design_cost(OptConfig.full(), center)["cost"]
+    pairs = _sobol_pairs(scorer, seed, sobol_n)
+
+    archive: dict[str, ScoredDesign] = {}
+    history: list[dict] = []
+
+    def evaluate(designs: Sequence[DesignPoint]) -> int:
+        fresh, seen = [], set()
+        for d in designs:
+            if d.key not in archive and d.key not in seen:
+                fresh.append(d)
+                seen.add(d.key)
+        for s in scorer.score(fresh):
+            archive[s.key] = s
+        return len(fresh)
+
+    def record(gen: int, n_new: int) -> None:
+        ranked = sorted(archive.values(), key=_selection_key(cost_bound))
+        front = pareto_front(list(archive.values()))
+        best = ranked[0]
+        history.append({
+            "gen": gen, "evaluated": n_new, "archive": len(archive),
+            "best_key": best.key, "best_score": best.score,
+            "best_cost": best.cost, "frontier_size": len(front),
+        })
+        obs_metrics.gauge("search.frontier_size").set(len(front))
+
+    if algorithm == "chain":
+        beam_width, algorithm = 1, "beam"
+        branch = max(branch, 6)
+
+    seeds = (list(inject) if inject is not None
+             else paper_corners(center))
+    if algorithm == "random":
+        # Multi-seed random restarts: `restarts` independent LHS
+        # populations, each its own batched scoring call.
+        n_new = evaluate(seeds + _lhs_designs(rng, population, center))
+        record(0, n_new)
+        for r in range(1, restarts):
+            rr = random.Random(seed + 1000 * r)
+            record(r, evaluate(_lhs_designs(rr, population, center)))
+    else:
+        n_init = max(population - len(seeds), 0)
+        n_new = evaluate(seeds + _lhs_designs(rng, n_init, center))
+        record(0, n_new)
+        for gen in range(1, generations + 1):
+            ranked = sorted(archive.values(),
+                            key=_selection_key(cost_bound))
+            proposals: list[DesignPoint] = []
+            if algorithm == "beam":
+                for parent in ranked[:beam_width]:
+                    proposals += [mutate(parent, rng, center,
+                                         pairs=pairs)
+                                  for _ in range(branch)]
+            else:                              # evolve
+                parents = ranked[:max(population // 2, 2)]
+                while len(proposals) < population:
+                    if len(parents) >= 2 and rng.random() < 0.4:
+                        a, b = rng.sample(parents, 2)
+                        child = crossover(a, b, rng, center)
+                        better = a if a.score >= b.score else b
+                        proposals.append(mutate(
+                            ScoredDesign(**{
+                                **dataclasses.asdict(better),
+                                "design": child}), rng, center,
+                            pairs=pairs, flag_prob=0.05))
+                    else:
+                        parent = _weighted_choice(
+                            rng, parents,
+                            [len(parents) - i
+                             for i in range(len(parents))])
+                        proposals.append(mutate(parent, rng, center,
+                                                pairs=pairs))
+            record(gen, evaluate(proposals))
+
+    evaluated = list(archive.values())
+    front = pareto_front(evaluated)
+    best = sorted(evaluated, key=_selection_key(cost_bound))[0]
+    config = {"algorithm": requested,
+              "objective": objective, "eval_set": eval_set,
+              "seed": seed, "generations": generations,
+              "population": population, "beam_width": beam_width,
+              "branch": branch, "restarts": restarts,
+              "sobol_n": sobol_n, "per_class": per_class,
+              "cost_bound": cost_bound, "backend": backend,
+              "method": method, "co_move_pairs": [list(p) for p in pairs]}
+    return SearchResult(best=best, frontier=front, evaluated=evaluated,
+                        history=history, config=config)
+
+
+def annotate_calibrated(result: SearchResult,
+                        center: SimParams | None = None,
+                        backend: str = "numpy",
+                        method: str = "scan") -> dict[str, float]:
+    """Geomean speedup of every evaluated design on the *calibrated
+    11-kernel grid* — one batched scoring pass.  This is the column the
+    CI drift gate compares against `ara_calibrated.json`'s recorded
+    geomean: the injected Ara-Opt corner is always among the evaluated
+    (and feasible at exactly the default cost bound), so the best
+    feasible calibrated geomean can never fall below the recorded
+    value."""
+    center = center if center is not None else load_calibrated()
+    scorer = PopulationScorer(grid_traces(), center=center,
+                              objective="speedup", backend=backend,
+                              method=method)
+    designs = {s.key: s.design for s in result.evaluated}
+    keys = sorted(designs)
+    scored = scorer.score([designs[k] for k in keys])
+    result.calibrated = {k: s.geomean_speedup
+                         for k, s in zip(keys, scored)}
+    return result.calibrated
+
+
+# -- committed frontier ----------------------------------------------------
+
+def _record(s: ScoredDesign, calibrated: Mapping[str, float]) -> dict:
+    rec = {"key": s.key, "design": s.design.to_json(),
+           "label": s.design.label, "score": s.score, "cost": s.cost,
+           "area_mm2": s.area_mm2, "power_mw": s.power_mw,
+           "geomean_speedup": s.geomean_speedup,
+           "gap_closed": s.gap_closed,
+           "gap_closed_by_class": dict(s.gap_by_class),
+           "dominant_path": s.dominant_path,
+           "path_shares": dict(s.path_shares)}
+    if s.key in calibrated:
+        rec["calibrated_geomean"] = calibrated[s.key]
+    return rec
+
+
+def frontier_payload(result: SearchResult) -> dict:
+    """JSON payload of a search run (`experiments/search/pareto.json`)."""
+    if not result.calibrated:
+        annotate_calibrated(result)
+    cal = result.calibrated
+    bound = result.config.get("cost_bound", float("inf"))
+    feasible = [s for s in result.evaluated
+                if s.cost <= bound and s.key in cal]
+    best_cal = max(feasible, key=lambda s: (cal[s.key], s.key),
+                   default=result.best)
+    return {
+        "config": result.config,
+        "best": _record(result.best, cal),
+        "best_calibrated": _record(best_cal, cal),
+        "frontier": [_record(s, cal) for s in result.frontier],
+        "history": result.history,
+        "n_evaluated": len(result.evaluated),
+    }
+
+
+def canonical_search(**overrides) -> SearchResult:
+    """The committed-frontier run: `CANONICAL_BUDGET` exactly, unless
+    overridden (fig9's full profile raises the budget)."""
+    kw = dict(CANONICAL_BUDGET)
+    kw.update(overrides)
+    return run_search(**kw)
+
+
+def write_pareto(path: pathlib.Path = PARETO_PATH,
+                 result: SearchResult | None = None) -> dict:
+    result = result if result is not None else canonical_search()
+    payload = frontier_payload(result)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return payload
+
+
+def _front_points(payload: dict) -> set[tuple[float, float]]:
+    return {(round(r["score"], 9), round(r["cost"], 9))
+            for r in payload["frontier"]}
+
+
+def check_committed(path: pathlib.Path = PARETO_PATH,
+                    regen: dict | None = None) -> list[str]:
+    """CI gate: the committed frontier regenerates dominance-equivalent
+    at the canonical budget, stays mutually non-dominated, and its best
+    design's calibrated-grid geomean has not drifted below
+    `ara_calibrated.json`'s recorded value.  Returns error strings
+    (empty = pass)."""
+    from repro.core.calibration import load_payload
+    errors: list[str] = []
+    if not path.exists():
+        return [f"{path} is missing (run design_search.write_pareto)"]
+    committed = json.loads(path.read_text())
+    pts = [(r["score"], r["cost"]) for r in committed["frontier"]]
+    for i, (si, ci) in enumerate(pts):
+        for j, (sj, cj) in enumerate(pts):
+            if i != j and sj >= si and cj <= ci and (sj > si or cj < ci):
+                errors.append(f"committed frontier point {i} is "
+                              f"dominated by point {j}")
+    recorded = load_payload().get("geomean_speedup")
+    best_cal = committed.get("best_calibrated",
+                             committed["best"]).get("calibrated_geomean")
+    if recorded is not None and best_cal is not None \
+            and best_cal < recorded - 1e-6:
+        errors.append(
+            f"committed best_calibrated design's geomean {best_cal:.6f} "
+            f"drifted below ara_calibrated.json's {recorded:.6f}")
+    if regen is None:
+        regen = frontier_payload(canonical_search())
+    if _front_points(regen) != _front_points(committed):
+        errors.append(
+            "regenerated frontier is not dominance-equivalent to the "
+            f"committed one: {sorted(_front_points(regen))} vs "
+            f"{sorted(_front_points(committed))}")
+    return errors
+
+
+def main(argv: Sequence[str] | None = None) -> None:  # pragma: no cover
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--algorithm", choices=ALGORITHMS,
+                    default="evolve")
+    ap.add_argument("--objective", choices=OBJECTIVES, default="speedup")
+    ap.add_argument("--eval-set", choices=("grid", "corpus"),
+                    default="grid")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--generations", type=int, default=6)
+    ap.add_argument("--population", type=int, default=24)
+    ap.add_argument("--beam-width", type=int, default=6)
+    ap.add_argument("--restarts", type=int, default=4)
+    ap.add_argument("--per-class", type=int, default=None)
+    ap.add_argument("--cost-bound", type=float, default=None)
+    ap.add_argument("--backend", default="numpy")
+    ap.add_argument("--method", default="scan")
+    ap.add_argument("--write-pareto", action="store_true",
+                    help="run the canonical committed budget and write "
+                         "experiments/search/pareto.json")
+    ap.add_argument("--check", action="store_true",
+                    help="regenerate at the canonical budget and verify "
+                         "the committed pareto.json (CI gate)")
+    args = ap.parse_args(argv)
+    if args.check:
+        errors = check_committed()
+        for e in errors:
+            print(f"ERROR: {e}")
+        if errors:
+            raise SystemExit(1)
+        print("committed pareto.json OK")
+        return
+    if args.write_pareto:
+        payload = write_pareto()
+        print(json.dumps(payload["best"], indent=2))
+        print(f"wrote {PARETO_PATH} "
+              f"({len(payload['frontier'])} frontier points)")
+        return
+    result = run_search(algorithm=args.algorithm,
+                        objective=args.objective,
+                        eval_set=args.eval_set, seed=args.seed,
+                        generations=args.generations,
+                        population=args.population,
+                        beam_width=args.beam_width,
+                        restarts=args.restarts,
+                        per_class=args.per_class,
+                        cost_bound=args.cost_bound,
+                        backend=args.backend, method=args.method)
+    annotate_calibrated(result)
+    print(json.dumps(frontier_payload(result), indent=2))
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

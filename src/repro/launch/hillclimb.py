@@ -1,81 +1,62 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Single-chain hillclimb over the design space: a thin CLI veneer.
 
-DOC = """§Perf hillclimb runner: hypothesis -> change -> re-lower -> re-analyse.
-
-Each iteration is a ModelConfig override set applied to one (arch x shape)
-cell; the scan-corrected three-term roofline is recomputed and appended to
-experiments/perf/<cell>.jsonl.  EXPERIMENTS.md §Perf narrates these logs.
-
-    python -m repro.launch.hillclimb --arch qwen2.5-3b --shape train_4k \
-        --tag fsdp --override '{"sharding_mode": "fsdp"}' \
-        --hypothesis "TP all-reduce bytes dominate; pure FSDP swaps ..."
+Kept for muscle memory — ``python -m repro.launch.hillclimb`` runs the
+design-space search (`repro.launch.design_search`) in its ``chain``
+mode: a width-1 beam that mutates the incumbent each generation and
+keeps whatever scores best, i.e. a classic stochastic hillclimb with
+the same attribution-guided proposal distribution, batched population
+scoring, and cost bound as the full searcher.  For anything beyond a
+quick climb (Pareto frontiers, evolutionary search, random restarts)
+call ``python -m repro.launch.design_search`` directly.
 """
+from __future__ import annotations
 
 import argparse
 import json
-import pathlib
-import time
+from typing import Sequence
 
-from repro.configs import ARCHS, SHAPES
-from repro.launch.costmodel import analyze, roofline_from_analysis
+from repro.launch import design_search
 
-REPO = pathlib.Path(__file__).resolve().parents[3]
-PERF_DIR = REPO / "experiments" / "perf"
+__all__ = ["climb", "main"]
 
 
-def run_iteration(arch: str, shape: str, tag: str, overrides: dict | None,
-                  hypothesis: str = "") -> dict:
-    from repro.launch.dryrun import lower_cell
-    cfg = ARCHS[arch]
-    t0 = time.time()
-    analysis = analyze(arch, shape, multi_pod=False,
-                       extra_overrides=overrides)
-    rec = {"arch": arch, "shape": shape, "tag": tag,
-           "overrides": overrides or {}, "hypothesis": hypothesis,
-           "elapsed_s": round(time.time() - t0, 1),
-           "status": analysis["status"]}
-    if analysis["status"] == "ok":
-        # model flops per device (production definition, from lower_cell's
-        # bookkeeping without compiling the full production graph).
-        shape_spec = SHAPES[shape]
-        chips = 256
-        if shape_spec.kind == "train":
-            mf = 6.0 * cfg.active_param_count() * \
-                shape_spec.global_batch * shape_spec.seq_len
-        elif shape_spec.kind == "prefill":
-            mf = 2.0 * cfg.active_param_count() * \
-                shape_spec.global_batch * shape_spec.seq_len
-        else:
-            mf = 2.0 * cfg.active_param_count() * shape_spec.global_batch
-        rec["roofline"] = roofline_from_analysis(analysis, mf / chips)
-        rec["totals"] = analysis["total_remat"]
-    PERF_DIR.mkdir(parents=True, exist_ok=True)
-    log = PERF_DIR / f"{arch}__{shape}.jsonl"
-    with open(log, "a") as f:
-        f.write(json.dumps(rec) + "\n")
-    return rec
+def climb(seed: int = 0, generations: int = 8, branch: int = 6,
+          eval_set: str = "grid", objective: str = "speedup",
+          per_class: int | None = None,
+          cost_bound: float | None = None) -> design_search.SearchResult:
+    """One seeded hillclimb chain; see `design_search.run_search`."""
+    return design_search.run_search(
+        algorithm="chain", objective=objective, eval_set=eval_set,
+        seed=seed, generations=generations, branch=branch,
+        per_class=per_class, cost_bound=cost_bound)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
-    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
-    ap.add_argument("--tag", required=True)
-    ap.add_argument("--override", default="")
-    ap.add_argument("--hypothesis", default="")
-    args = ap.parse_args()
-    overrides = json.loads(args.override) if args.override else None
-    rec = run_iteration(args.arch, args.shape, args.tag, overrides,
-                        args.hypothesis)
-    out = {k: rec.get(k) for k in ("tag", "status", "elapsed_s")}
-    if "roofline" in rec:
-        r = rec["roofline"]
-        out.update({k: round(r[k], 6) for k in
-                    ("compute_s", "memory_s", "collective_s")})
-        out["bound"] = r["bound"]
-        out["roofline_fraction"] = round(r["roofline_fraction"], 5)
-    print(json.dumps(out))
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--generations", type=int, default=8)
+    ap.add_argument("--branch", type=int, default=6,
+                    help="mutations proposed per generation")
+    ap.add_argument("--eval-set", choices=("grid", "corpus"),
+                    default="grid")
+    ap.add_argument("--objective", choices=design_search.OBJECTIVES,
+                    default="speedup")
+    ap.add_argument("--per-class", type=int, default=None)
+    ap.add_argument("--cost-bound", type=float, default=None)
+    args = ap.parse_args(argv)
+    result = climb(seed=args.seed, generations=args.generations,
+                   branch=args.branch, eval_set=args.eval_set,
+                   objective=args.objective, per_class=args.per_class,
+                   cost_bound=args.cost_bound)
+    best = result.best
+    print(json.dumps({
+        "best": best.design.to_json(), "label": best.design.label,
+        "score": best.score, "cost": best.cost,
+        "geomean_speedup": best.geomean_speedup,
+        "dominant_path": best.dominant_path,
+        "generations": len(result.history) - 1,
+        "evaluated": len(result.evaluated),
+    }, indent=2))
 
 
 if __name__ == "__main__":

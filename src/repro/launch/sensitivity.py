@@ -587,6 +587,167 @@ def lhs_rows(design: Design, t: SweepTensors, base_col: int = 0,
     return rows
 
 
+# -- Sobol / variance decomposition ---------------------------------------
+
+def sobol_design(center: SimParams | None = None,
+                 knobs: Sequence[str] | None = None,
+                 n: int = 16, seed: int = 0, span: float = 2.0,
+                 space: Sequence[tuple[str, float, float]] | None = None
+                 ) -> Design:
+    """Saltelli sampling design for Sobol variance decomposition.
+
+    Builds two independent Latin-hypercube matrices ``A`` and ``B``
+    (`lhs_candidates`, seeded), plus one ``AB_i`` matrix per knob —
+    ``A`` with column *i* replaced from ``B`` — for ``n * (k + 2)``
+    variants total (the classic first/total-order estimator layout).
+    ``variants[0]`` stays the unmodified center, matching every other
+    design; the sample blocks follow in ``A, B, AB_0..AB_{k-1}`` order
+    and `sobol_indices` re-derives the block structure from the width.
+
+    `space` pins explicit ``(name, lo, hi)`` bounds (the searcher
+    passes `launch.costmodel.SEARCH_SPACE` dims); otherwise bounds come
+    from `knob_bounds` around the center.
+    """
+    import random
+    center = center_params(center)
+    if space is None:
+        knobs = tuple(knobs if knobs is not None else all_knobs())
+        space = [(k, *knob_bounds(center, k, span)) for k in knobs]
+    else:
+        space = [(str(k), float(lo), float(hi)) for k, lo, hi in space]
+        knobs = tuple(k for k, _, _ in space)
+    rng = random.Random(seed)
+    a_rows = lhs_candidates(space, n, rng)
+    b_rows = lhs_candidates(space, n, rng)
+    sample_rows = list(a_rows) + list(b_rows)
+    for k in knobs:
+        sample_rows += [dict(a, **{k: b[k]})
+                        for a, b in zip(a_rows, b_rows)]
+    variants: list[SimParams] = [center]
+    assigns: list[dict[str, float]] = [{}]
+    for over in sample_rows:
+        variants.append(dataclasses.replace(center, **over))
+        assigns.append(dict(over))
+    return Design("sobol", center, knobs, tuple(variants), tuple(assigns))
+
+
+def _sobol_blocks(design: Design) -> int:
+    """Per-block sample count `n` of a Saltelli design."""
+    if design.kind != "sobol":
+        raise ValueError(f"need a 'sobol' design, got {design.kind!r}")
+    k = len(design.knobs)
+    n, rem = divmod(design.width - 1, k + 2)
+    if n < 2 or rem:
+        raise ValueError(f"width {design.width} is not 1 + n*(k+2) "
+                         f"for k={k} knobs")
+    return n
+
+
+def sobol_indices(design: Design, f: np.ndarray) -> dict[str, dict]:
+    """First-order and total-order Sobol indices of one output.
+
+    `f` is the output evaluated at every design variant (aligned with
+    ``design.variants``; the center at index 0 is ignored).  Returns
+    ``{knob: {"Si", "STi", "interaction"}}`` with the Saltelli
+    first-order estimator ``Si = mean(fB * (fAB_i - fA)) / V`` and the
+    Jansen total-order estimator ``STi = mean((fA - fAB_i)^2) / 2V``;
+    ``interaction = max(STi - Si, 0)`` is the knob's
+    involved-in-interactions mass the searcher uses to pick co-move
+    pairs.
+
+    A knob with provably zero influence (e.g. any opt-side knob when
+    only the baseline corner is evaluated) yields **exactly** 0.0 for
+    both indices: the numpy backend is bit-exact, so ``fAB_i == fA``
+    elementwise and both numerators are exact zeros — a property the
+    tests pin.  A flat output (``V == 0``) yields all-zero indices.
+    """
+    f = np.asarray(f, dtype=np.float64)
+    n = _sobol_blocks(design)
+    fA = f[1:1 + n]
+    fB = f[1 + n:1 + 2 * n]
+    V = float(np.var(np.concatenate([fA, fB])))
+    out: dict[str, dict] = {}
+    for i, knob in enumerate(design.knobs):
+        lo = 1 + (2 + i) * n
+        fABi = f[lo:lo + n]
+        if V == 0.0:
+            si = sti = 0.0
+        else:
+            si = float(np.mean(fB * (fABi - fA)) / V)
+            sti = float(np.mean((fA - fABi) ** 2) / (2.0 * V))
+        out[knob] = {"Si": si, "STi": sti,
+                     "interaction": max(sti - si, 0.0)}
+    return out
+
+
+def sobol_rows(design: Design, t: SweepTensors, base_col: int = 0,
+               full_col: int = -1) -> list[dict]:
+    """Per-`(kernel, knob)` Sobol rows plus a ``geomean`` pseudo-kernel.
+
+    Outputs decomposed: baseline cycles (``si_base``/``sti_base``) and
+    the full-vs-base speedup (``si_speedup``/``sti_speedup``); the
+    ``geomean`` rows decompose the geomean speedup across kernels —
+    the quantity the design searcher optimizes, so its ``interaction``
+    column is what ranks co-move pairs.
+    """
+    rows: list[dict] = []
+    speedups = t.cycles[:, base_col, :] / np.maximum(
+        t.cycles[:, full_col, :], 1e-9)
+    for bi, kernel in enumerate(t.names):
+        by_base = sobol_indices(design, t.cycles[bi, base_col])
+        by_sp = sobol_indices(design, speedups[bi])
+        for knob in design.knobs:
+            rows.append({
+                "kernel": kernel, "knob": knob,
+                "path": KNOB_PATHS.get(knob, "unknown"),
+                "si_base": by_base[knob]["Si"],
+                "sti_base": by_base[knob]["STi"],
+                "si_speedup": by_sp[knob]["Si"],
+                "sti_speedup": by_sp[knob]["STi"],
+                "interaction": by_sp[knob]["interaction"],
+            })
+    log_sp = np.log(np.maximum(speedups, 1e-30))
+    by_geo = sobol_indices(design, np.exp(log_sp.mean(axis=0)))
+    for knob in design.knobs:
+        rows.append({
+            "kernel": "geomean", "knob": knob,
+            "path": KNOB_PATHS.get(knob, "unknown"),
+            "si_base": 0.0, "sti_base": 0.0,
+            "si_speedup": by_geo[knob]["Si"],
+            "sti_speedup": by_geo[knob]["STi"],
+            "interaction": by_geo[knob]["interaction"],
+        })
+    return rows
+
+
+def co_move_pairs(indices: Mapping[str, Mapping[str, float]],
+                  top: int = 3) -> list[tuple[str, str]]:
+    """Knob pairs worth mutating jointly, from Sobol interactions.
+
+    A knob's ``interaction`` mass (total-order minus first-order) says
+    it participates in *some* interaction; the strongest candidates for
+    the partner are the other high-interaction knobs, and mechanisms on
+    the same critical path interact through shared stall terms far more
+    often than across paths — so pairs are ranked by the product of the
+    two knobs' interaction masses with same-`KNOB_PATHS`-path pairs
+    first, name-ordered for determinism.  Pairs with zero joint mass
+    are never proposed.
+    """
+    strengths = {k: max(float(v.get("interaction", 0.0)), 0.0)
+                 for k, v in indices.items()}
+    names = sorted(strengths)
+    scored = []
+    for i, k1 in enumerate(names):
+        for k2 in names[i + 1:]:
+            joint = strengths[k1] * strengths[k2]
+            if joint <= 0.0:
+                continue
+            same = KNOB_PATHS.get(k1) == KNOB_PATHS.get(k2)
+            scored.append((not same, -joint, k1, k2))
+    scored.sort()
+    return [(k1, k2) for _, _, k1, k2 in scored[:top]]
+
+
 def path_stall_delta(t: SweepTensors, pi_from: int, pi_to: int,
                      opt_col: int = 0) -> dict[str, np.ndarray]:
     """`(B,)` per-critical-path stall deltas between two variants —
@@ -605,5 +766,6 @@ __all__ = [
     "pair_design", "lhs_design", "lhs_candidates", "resolve_backend",
     "have_jax", "run_grid", "sweep_design", "SweepTensors",
     "tensors_from_cells", "gap_closed", "knob_rows", "pair_rows",
-    "lhs_rows", "path_stall_delta",
+    "lhs_rows", "path_stall_delta", "sobol_design", "sobol_indices",
+    "sobol_rows", "co_move_pairs",
 ]

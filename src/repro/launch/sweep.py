@@ -4,7 +4,10 @@ crash in one cell cannot kill the sweep; each gets a fresh XLA).
 Per (arch x shape):
   * production compile on the single-pod 16x16 mesh        (dryrun.py)
   * production compile on the multi-pod 2x16x16 mesh       (dryrun.py)
-  * scan-corrected cost extrapolation, single-pod          (costmodel.py)
+
+(The scan-corrected cost-extrapolation step is gone: `costmodel.py` is
+now the design-space hardware cost model consumed by
+`repro.launch.design_search`, not a lowering analysis.)
 
 Results land in experiments/dryrun/*.json; benchmarks/dryrun_table.py and
 EXPERIMENTS.md §Roofline read them.
@@ -52,7 +55,6 @@ def main() -> None:
     ap.add_argument("--archs", nargs="*", default=sorted(ARCHS))
     ap.add_argument("--shapes", nargs="*", default=list(SHAPES))
     ap.add_argument("--timeout", type=int, default=1800)
-    ap.add_argument("--skip-analysis", action="store_true")
     ap.add_argument("--skip-multipod", action="store_true")
     ap.add_argument("--only-missing", action="store_true")
     args = ap.parse_args()
@@ -82,11 +84,8 @@ def main() -> None:
             plan = [("repro.launch.dryrun", "single-pod", "")]
             if not args.skip_multipod:
                 plan.append(("repro.launch.dryrun", "multi-pod", ""))
-            if not args.skip_analysis:
-                plan.append(("repro.launch.costmodel", "single-pod", ""))
             for mod, mesh, tag in plan:
-                suffix = ".analysis" if "costmodel" in mod else ""
-                target = OUT / f"{arch}__{shape}__{mesh}{suffix}.json"
+                target = OUT / f"{arch}__{shape}__{mesh}.json"
                 if args.only_missing and target.exists():
                     prev = json.loads(target.read_text())
                     if prev.get("status") in ("ok", "skipped"):

@@ -83,6 +83,20 @@ def params_fingerprint(params: Sequence[SimParams]) -> str:
     return h.hexdigest()
 
 
+def design_fingerprint(opt: OptConfig, params: SimParams) -> str:
+    """Content hash of one *design point* (opt flags + timing params).
+
+    The design-space searcher (`repro.launch.design_search`) keys its
+    evaluated-archive on this, so a candidate proposed twice (mutation
+    and crossover routinely re-derive the same point) is never
+    re-simulated.  Trace-independent by construction — the same design
+    scored on a different evaluation set keeps its identity."""
+    payload = {"opt": [opt.memory, opt.control, opt.operand],
+               "params": dataclasses.asdict(params)}
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
 def cell_key(trace: KernelTrace, opt: OptConfig,
              params: SimParams = SimParams(),
              mc: MachineConfig = MachineConfig(),

@@ -59,6 +59,10 @@ KNOWN_METRICS = {
     "calibration.populations": "candidate populations scored",
     "calibration.candidates": "individual SimParams candidates scored",
     "sensitivity.cells": "sensitivity-grid cells evaluated",
+    "simulate.groups": "per-corner groups run by api.simulate_groups",
+    "search.populations": "design-search populations batch-scored",
+    "search.candidates": "individual designs scored by the search",
+    "search.frontier_size": "current Pareto-frontier size (gauge)",
     "serve.requests": "serving-engine generate() requests",
     "serve.tokens": "tokens decoded by the serving engine",
 }

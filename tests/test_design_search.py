@@ -1,0 +1,359 @@
+"""Design-space-search contracts (repro.launch.design_search +
+repro.launch.costmodel).
+
+Load-bearing invariants:
+
+  * the cost model reproduces the paper's Table II anchors exactly
+    (base 2.64 mm^2 / 141.89 mW; full Ara-Opt at default strengths
+    2.78 mm^2 / 214.05 mW) and is monotone in knob aggressiveness;
+  * designs canonicalize: bound-clipped, disabled-class knobs dropped,
+    so two construction routes to one design share a fingerprint and
+    the archive never re-simulates a re-proposed candidate;
+  * same seed => byte-identical search log and frontier;
+  * (property) `pareto_front` returns a mutually non-dominated set
+    that weakly dominates every excluded point;
+  * the search never loses: with the paper corners injected, the best
+    design on the calibrated grid scores >= the recorded Ara-Opt
+    geomean (`ara_calibrated.json`);
+  * populations are scored in batched calls only — `simulate.calls`
+    grows with the number of opt corners, never with the number of
+    candidates;
+  * the committed `experiments/search/pareto.json` stays mutually
+    non-dominated and drift-free against the calibration anchor.
+"""
+import json
+
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.calibration import load as load_calibrated
+from repro.core.calibration import load_payload
+from repro.core.isa import OptConfig
+from repro.core.simulator import SimParams
+from repro.core.traces import axpy, gemm, scal
+from repro.launch import costmodel as C
+from repro.launch import design_search as D
+from repro.launch import hillclimb
+from repro.obs import metrics as obs_metrics
+
+
+def _traces():
+    return {"scal": scal(128), "axpy": axpy(128),
+            "gemm": gemm(8, 8, 8)}
+
+
+def _classes():
+    return {"scal": "blas1", "axpy": "blas1", "gemm": "blas3"}
+
+
+@pytest.fixture(scope="module")
+def scorer():
+    return D.PopulationScorer(_traces(), _classes(),
+                              center=load_calibrated())
+
+
+# -- cost model ------------------------------------------------------------
+
+def test_cost_model_reproduces_table2_anchors():
+    base = C.design_cost(OptConfig.baseline(), SimParams())
+    assert base["area_mm2"] == pytest.approx(2.64, abs=1e-12)
+    assert base["power_mw"] == pytest.approx(141.89, abs=1e-12)
+    full = C.design_cost(OptConfig.full(), SimParams())
+    assert full["area_mm2"] == pytest.approx(2.78, abs=1e-9)
+    assert full["power_mw"] == pytest.approx(214.05, abs=1e-9)
+    assert base["cost"] < full["cost"]
+
+
+def test_cost_monotone_in_aggressiveness():
+    """Pushing any knob toward its 'stronger' end never cheapens the
+    design, and strictly prices the fully-maxed design above the
+    defaults."""
+    for dim in C.SEARCH_SPACE:
+        weak, strong = ((dim.hi, dim.lo) if dim.stronger == "down"
+                        else (dim.lo, dim.hi))
+        p_weak = D.make_design(True, True, True, {dim.name: weak})
+        p_strong = D.make_design(True, True, True, {dim.name: strong})
+        cw = C.design_cost(p_weak.opt, p_weak.params(SimParams()))
+        cs = C.design_cost(p_strong.opt, p_strong.params(SimParams()))
+        assert cs["cost"] >= cw["cost"], dim.name
+    maxed = D.make_design(True, True, True, {
+        d.name: (d.lo if d.stronger == "down" else d.hi)
+        for d in C.SEARCH_SPACE})
+    assert C.design_cost(maxed.opt, maxed.params(SimParams()))["cost"] \
+        > C.design_cost(OptConfig.full(), SimParams())["cost"]
+
+
+def test_disabled_class_contributes_no_cost():
+    only_m = D.make_design(True, False, False,
+                           {"prefetch_hit": 1.0, "tx_ovh_opt": 0.02})
+    with_o_knobs = D.make_design(True, False, False,
+                                 {"prefetch_hit": 1.0,
+                                  "tx_ovh_opt": 0.02,
+                                  "queue_adv_opt": 512.0})
+    # The O knob is dropped at canonicalization: same design, same cost.
+    assert only_m == with_o_knobs
+    assert C.design_cost(only_m.opt, only_m.params(SimParams()))["cost"] \
+        < C.design_cost(OptConfig.full(), SimParams())["cost"]
+
+
+# -- design canonicalization ----------------------------------------------
+
+def test_make_design_clips_fills_and_drops():
+    d = D.make_design(True, False, True,
+                      {"prefetch_hit": 99.0,       # clipped to hi
+                       "issue_gap_opt": 1.0})      # C off: dropped
+    strengths = dict(d.strengths)
+    assert strengths["prefetch_hit"] == 16.0
+    assert "issue_gap_opt" not in strengths
+    # Missing enabled-class knobs fill from the center (paper defaults).
+    assert strengths["d_fwd"] == SimParams().d_fwd
+    assert d.label == "M+O"
+
+
+def test_design_fingerprint_identity():
+    a = D.make_design(True, True, False, {"prefetch_hit": 3.0})
+    b = D.make_design(True, True, False,
+                      {"prefetch_hit": 3.0, "d_fwd": 9.0})  # O off: dropped
+    assert a == b and a.key == b.key
+    c = D.make_design(True, True, False, {"prefetch_hit": 3.5})
+    assert a.key != c.key
+
+
+def test_paper_corners_cover_table1():
+    corners = D.paper_corners()
+    assert [c.label for c in corners] == ["base", "M", "C", "O", "M+C+O"]
+    assert corners[0].strengths == ()
+    # Ara-Opt carries every search knob at its calibrated strength.
+    cal = load_calibrated()
+    ara = dict(corners[-1].strengths)
+    assert set(ara) == {d.name for d in C.SEARCH_SPACE}
+    assert ara["idx_ovh_opt"] == cal.idx_ovh_opt
+
+
+# -- population scoring ---------------------------------------------------
+
+def test_baseline_design_scores_one(scorer):
+    scored = scorer.score([D.baseline_design()])[0]
+    assert scored.score == pytest.approx(1.0, abs=1e-12)
+    assert scored.cost == pytest.approx(2.64, abs=1e-12)
+    assert scored.dominant_path in ("mem_supply", "dep_issue", "operand")
+
+
+def test_scoring_is_batched_not_per_candidate(scorer):
+    """A population spanning k opt corners costs exactly k batched
+    simulate calls — never one per candidate."""
+    designs = [D.ara_opt_design(),
+               D.make_design(True, True, True, {"prefetch_hit": 2.0}),
+               D.make_design(True, True, True, {"prefetch_hit": 8.0}),
+               D.make_design(True, False, False),
+               D.make_design(True, False, False, {"tx_ovh_opt": 0.5}),
+               D.make_design(False, True, False)]
+    corners = len({d.label for d in designs})
+    calls0 = obs_metrics.counter("simulate.calls").value
+    groups0 = obs_metrics.counter("simulate.groups").value
+    cand0 = obs_metrics.counter("search.candidates").value
+    scored = scorer.score(designs)
+    calls = obs_metrics.counter("simulate.calls").value - calls0
+    groups = obs_metrics.counter("simulate.groups").value - groups0
+    cand = obs_metrics.counter("search.candidates").value - cand0
+    assert len(scored) == len(designs)
+    assert calls == corners < len(designs)
+    assert groups == corners
+    assert cand == len(designs)
+    # Input order is preserved through the corner-grouped dispatch.
+    assert [s.design for s in scored] == designs
+
+
+def test_scored_design_carries_per_class_gaps(scorer):
+    s = scorer.score([D.ara_opt_design()])[0]
+    assert dict(s.gap_by_class).keys() == {"blas1", "blas3"}
+    assert s.geomean_speedup > 1.0
+    assert abs(sum(v for _, v in s.path_shares) - 1.0) < 1e-9
+
+
+def test_gap_closed_objective(scorer_gap=None):
+    sc = D.PopulationScorer(_traces(), _classes(),
+                            center=load_calibrated(),
+                            objective="gap_closed")
+    base, ara = sc.score([D.baseline_design(), D.ara_opt_design()])
+    # Baseline closes none of its own gap; Ara-Opt closes a real share.
+    assert base.score == pytest.approx(D.GAP_FLOOR)
+    assert 0.0 < ara.score <= 1.5
+
+
+# -- Pareto frontier ------------------------------------------------------
+
+def _stub(i: int, score: float, cost: float) -> D.ScoredDesign:
+    design = D.make_design(True, False, False,
+                           {"prefetch_hit": 1.0 + i * 1e-6})
+    return D.ScoredDesign(design=design, score=score, cost=cost,
+                          area_mm2=cost, power_mw=0.0,
+                          geomean_speedup=score, gap_closed=0.0,
+                          gap_by_class=(), dominant_path="mem_supply",
+                          path_shares=())
+
+
+@given(points=st.lists(
+    st.tuples(st.floats(min_value=0.5, max_value=2.0),
+              st.floats(min_value=2.0, max_value=3.0)),
+    min_size=1, max_size=24))
+@settings(max_examples=60, deadline=None)
+def test_pareto_front_property(points):
+    """The frontier is mutually non-dominated AND weakly dominates
+    every evaluated point it excludes."""
+    scored = [_stub(i, s, c) for i, (s, c) in enumerate(points)]
+    front = D.pareto_front(scored)
+    assert front, "frontier of a non-empty set is non-empty"
+    keys = {f.key for f in front}
+    for a in front:
+        for b in front:
+            if a is not b:
+                assert not D.dominates(a, b)
+    for p in scored:
+        if p.key in keys:
+            continue
+        assert any(f.score >= p.score and f.cost <= p.cost
+                   for f in front), (p.score, p.cost)
+    # Cheapest-first, strictly increasing in both axes along the front.
+    for lo, hi in zip(front, front[1:]):
+        assert lo.cost < hi.cost and lo.score < hi.score
+
+
+def test_pareto_front_dedupes_exact_ties():
+    scored = [_stub(0, 1.2, 2.7), _stub(1, 1.2, 2.7), _stub(2, 1.0, 2.6)]
+    front = D.pareto_front(scored)
+    assert [(f.score, f.cost) for f in front] == [(1.0, 2.6), (1.2, 2.7)]
+
+
+# -- the search loop ------------------------------------------------------
+
+def _tiny_search(seed=0, **kw):
+    kw.setdefault("algorithm", "evolve")
+    kw.setdefault("generations", 2)
+    kw.setdefault("population", 6)
+    kw.setdefault("sobol_n", 4)
+    scorer = kw.pop("scorer")
+    return D.run_search(seed=seed, scorer=scorer,
+                        center=load_calibrated(), **kw)
+
+
+def _search_log(result):
+    return json.dumps(result.history) + "|" + json.dumps(
+        [(s.key, s.score, s.cost) for s in result.frontier])
+
+
+def test_seed_determinism(scorer):
+    a = _tiny_search(seed=7, scorer=scorer)
+    b = _tiny_search(seed=7, scorer=scorer)
+    assert _search_log(a) == _search_log(b)
+    assert a.best.key == b.best.key
+    assert a.config == b.config
+
+
+def test_archive_never_rescores_duplicates(scorer):
+    """Injecting the same corner twice evaluates it once: the archive
+    is fingerprint-keyed and `evaluated` holds unique designs."""
+    inject = D.paper_corners() + [D.ara_opt_design(),
+                                  D.baseline_design()]
+    cand0 = obs_metrics.counter("search.candidates").value
+    r = _tiny_search(seed=1, scorer=scorer, generations=1,
+                     population=4, sobol_n=0, inject=inject)
+    keys = [s.key for s in r.evaluated]
+    assert len(keys) == len(set(keys))
+    scored = obs_metrics.counter("search.candidates").value - cand0
+    assert scored == len(keys)
+
+
+def test_search_respects_cost_bound(scorer):
+    """With a bound below every optimized corner, only the baseline is
+    feasible and must win `best` (selection is feasible-first)."""
+    r = _tiny_search(seed=2, scorer=scorer, generations=1,
+                     population=4, sobol_n=0, cost_bound=2.644)
+    assert r.best.design == D.baseline_design()
+    assert any(s.cost > 2.644 for s in r.evaluated)  # infeasible archived
+
+
+@pytest.mark.parametrize("algorithm", ["beam", "random", "chain"])
+def test_all_algorithms_produce_frontiers(scorer, algorithm):
+    r = _tiny_search(seed=3, scorer=scorer, algorithm=algorithm,
+                     generations=1, population=4, beam_width=2,
+                     branch=2, restarts=2, sobol_n=0)
+    assert r.frontier and r.best.score >= 1.0
+    assert r.config["algorithm"] == algorithm
+    assert r.history[0]["gen"] == 0
+
+
+def test_search_never_loses_on_calibrated_grid():
+    """The acceptance gate: with the paper corners injected, a smoke-
+    budget search over the calibrated 11-kernel grid returns a best
+    design scoring >= the recorded Ara-Opt geomean (elitism keeps the
+    injected Ara-Opt corner; the search may only improve on it)."""
+    recorded = load_payload()["geomean_speedup"]
+    r = D.run_search(algorithm="evolve", objective="speedup",
+                     eval_set="grid", seed=0, generations=1,
+                     population=8, sobol_n=0)
+    assert r.best.score >= recorded - 1e-9
+    ara_key = D.ara_opt_design().key
+    assert ara_key in {s.key for s in r.evaluated}
+    # Ara-Opt's own grid score IS the calibration artifact's geomean.
+    ara = next(s for s in r.evaluated if s.key == ara_key)
+    assert ara.score == pytest.approx(recorded, abs=1e-9)
+
+
+def test_hillclimb_delegates_to_chain(scorer, monkeypatch):
+    seen = {}
+    real = D.run_search
+
+    def spy(**kw):
+        seen.update(kw)
+        return real(scorer=scorer, **{k: v for k, v in kw.items()
+                                      if k not in ("eval_set",)})
+    monkeypatch.setattr(D, "run_search", spy)
+    r = hillclimb.climb(seed=0, generations=1, branch=2)
+    assert seen["algorithm"] == "chain"
+    assert r.best.score >= 1.0
+
+
+# -- committed artifact ---------------------------------------------------
+
+def test_committed_pareto_is_nondominated_and_drift_free():
+    """The committed frontier file passes its own CI gate's static
+    checks (mutual non-domination + calibrated-geomean drift) without
+    re-running the search: regen is stubbed with the committed payload
+    itself, so only the intrinsic properties are exercised here — the
+    full regeneration equivalence runs in the CI smoke job."""
+    committed = json.loads(D.PARETO_PATH.read_text())
+    assert D.check_committed(regen=committed) == []
+    recorded = load_payload()["geomean_speedup"]
+    assert committed["best_calibrated"]["calibrated_geomean"] \
+        >= recorded - 1e-6
+    assert committed["config"] == dict(
+        D.CANONICAL_BUDGET,
+        cost_bound=committed["config"]["cost_bound"],
+        backend="numpy", method="scan", per_class=2,
+        co_move_pairs=committed["config"]["co_move_pairs"])
+
+
+def test_check_committed_flags_dominated_frontier(tmp_path):
+    committed = json.loads(D.PARETO_PATH.read_text())
+    broken = json.loads(json.dumps(committed))
+    # Duplicate the best frontier point at a higher cost: dominated.
+    worst = dict(broken["frontier"][-1])
+    worst["cost"] = worst["cost"] + 1.0
+    broken["frontier"].append(worst)
+    p = tmp_path / "pareto.json"
+    p.write_text(json.dumps(broken))
+    errors = D.check_committed(path=p, regen=broken)
+    assert any("dominated" in e for e in errors)
+
+
+def test_eval_traces_corpus_budget():
+    traces, classes = D.eval_traces("corpus", per_class=1)
+    assert set(traces) == set(classes)
+    per = {}
+    for cls in classes.values():
+        per[cls] = per.get(cls, 0) + 1
+    assert all(n == 1 for n in per.values())
+    assert len(per) >= 5       # the corpus spans the workload classes
+    with pytest.raises(ValueError):
+        D.eval_traces("nope")

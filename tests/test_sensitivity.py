@@ -304,3 +304,124 @@ def test_opt_side_knobs_are_inert_under_baseline():
         assert np.array_equal(res.cycles[:, :, pi], res.cycles[:, :, 0])
         assert np.array_equal(res.stalls[:, :, pi], res.stalls[:, :, 0])
         assert np.array_equal(res.ideal[:, :, pi], res.ideal[:, :, 0])
+
+
+# -- Sobol / variance decomposition ---------------------------------------
+
+def test_sobol_design_layout():
+    space = [("mem_latency", 20.0, 60.0), ("issue_gap_base", 1.0, 6.0)]
+    d = S.sobol_design(center=SimParams(), n=8, seed=0, space=space)
+    # center + A + B + one AB block per knob.
+    assert d.kind == "sobol"
+    assert d.width == 1 + 8 * (len(space) + 2)
+    assert d.assignments[0] == {}
+    # AB_i == A with column i replaced from B, elementwise.
+    a = d.assignments[1:9]
+    b = d.assignments[9:17]
+    ab0 = d.assignments[17:25]
+    for ra, rb, rab in zip(a, b, ab0):
+        assert rab["mem_latency"] == rb["mem_latency"]
+        assert rab["issue_gap_base"] == ra["issue_gap_base"]
+
+
+def test_sobol_zero_influence_knob_is_exactly_zero():
+    """Opt-side knobs under the BASE corner are structurally unused, so
+    their Sobol indices must be *exactly* 0.0 (the numpy backend is
+    bit-exact: fAB_i == fA elementwise, so both estimators' numerators
+    are exact zeros, not epsilon)."""
+    space = [("mem_latency", 20.0, 60.0), ("tx_ovh_opt", 0.02, 1.0),
+             ("queue_adv_opt", 24.0, 512.0)]
+    d = S.sobol_design(center=SimParams(), n=8, seed=0, space=space)
+    res = api.simulate(_stacked(), [BASE], list(d.variants),
+                       backend="numpy", method="scan")
+    for bi in range(res.cycles.shape[0]):
+        idx = S.sobol_indices(d, res.cycles[bi, 0, :])
+        for knob in ("tx_ovh_opt", "queue_adv_opt"):
+            assert idx[knob] == {"Si": 0.0, "STi": 0.0,
+                                 "interaction": 0.0}
+        # ... while the baseline-side latency knob does carry variance.
+        assert idx["mem_latency"]["STi"] > 0.0
+
+
+def test_sobol_indices_bounded():
+    """First-order indices decompose a share of variance: their sum
+    stays in [0, 1] up to estimator noise, and no knob's first-order
+    index exceeds its total-order index (tolerance for the small-n
+    Saltelli/Jansen estimators)."""
+    knobs = ("mem_latency", "issue_gap_base", "conflict_base",
+             "store_commit_base")
+    center = SimParams()
+    space = [(k, *S.knob_bounds(center, k, 2.0)) for k in knobs]
+    d = S.sobol_design(center=center, n=96, seed=1, space=space)
+    res = api.simulate(_stacked(), [BASE], list(d.variants),
+                       backend="numpy", method="scan")
+    tol = 0.15
+    for bi in range(res.cycles.shape[0]):
+        idx = S.sobol_indices(d, res.cycles[bi, 0, :])
+        total = sum(v["Si"] for v in idx.values())
+        assert -tol <= total <= 1.0 + tol
+        for v in idx.values():
+            assert v["Si"] <= v["STi"] + tol
+            assert v["interaction"] >= 0.0
+
+
+def test_sobol_flat_output_yields_zero_indices():
+    space = [("mem_latency", 20.0, 60.0)]
+    d = S.sobol_design(center=SimParams(), n=4, seed=0, space=space)
+    idx = S.sobol_indices(d, np.full(d.width, 7.0))
+    assert idx["mem_latency"] == {"Si": 0.0, "STi": 0.0,
+                                  "interaction": 0.0}
+
+
+def test_sobol_top_knob_agrees_with_oat_elasticity():
+    """The Sobol first-order ranking and PR 5's OAT elasticities agree
+    on which knob dominates baseline cycles at the calibrated point
+    (mem_latency, for the memory-bound scal)."""
+    from repro.core.calibration import load
+    center = load()
+    knobs = ("mem_latency", "issue_gap_base", "conflict_base",
+             "store_commit_base")
+    traces = {"scal": scal(256), "axpy": axpy(256)}
+    space = [(k, *S.knob_bounds(center, k, 2.0)) for k in knobs]
+    d = S.sobol_design(center=center, n=16, seed=1, space=space)
+    res = api.simulate(stack_traces(list(traces.values())), [BASE],
+                       list(d.variants), backend="numpy", method="scan")
+    idx = S.sobol_indices(d, res.cycles[0, 0, :])   # scal
+    top_sobol = max(idx, key=lambda k: idx[k]["STi"])
+
+    do = S.oat_design(center, knobs=knobs, points=3)
+    rows = S.knob_rows(do, S.sweep_design(traces, do, backend="numpy",
+                                          use_cache=False))
+    scal_rows = [r for r in rows if r["kernel"] == "scal"]
+    top_oat = max(scal_rows, key=lambda r: abs(r["elast_base"]))["knob"]
+    assert top_sobol == top_oat == "mem_latency"
+
+
+def test_sobol_rows_include_geomean_decomposition():
+    knobs = ("mem_latency", "issue_gap_base")
+    center = SimParams()
+    space = [(k, *S.knob_bounds(center, k, 2.0)) for k in knobs]
+    d = S.sobol_design(center=center, n=8, seed=0, space=space)
+    t = _sweep(d)
+    rows = S.sobol_rows(d, t)
+    kernels = set(r["kernel"] for r in rows)
+    assert "geomean" in kernels
+    assert len(rows) == len(kernels) * len(knobs)
+    for r in rows:
+        assert {"si_base", "sti_base", "si_speedup", "sti_speedup",
+                "interaction", "path"} <= set(r)
+
+
+def test_co_move_pairs_deterministic_and_skips_zero_mass():
+    # Only one knob carries interaction mass: no pair has positive
+    # joint mass, so none is proposed.
+    idx = {"a": {"Si": 0.1, "STi": 0.5, "interaction": 0.4},
+           "b": {"Si": 0.2, "STi": 0.2, "interaction": 0.0},
+           "c": {"Si": 0.0, "STi": 0.0, "interaction": 0.0}}
+    assert S.co_move_pairs(idx) == []
+    # Two massive knobs pair up, deterministically name-ordered.
+    idx["b"]["interaction"] = 0.3
+    pairs = S.co_move_pairs(idx, top=2)
+    assert pairs == S.co_move_pairs(idx, top=2)
+    assert ("a", "b") in pairs
+    assert all(p[0] < p[1] for p in pairs)

@@ -30,6 +30,11 @@ Four checks:
    `docs/workloads.md` must document exactly the fields of
    `repro.core.tracegen.GenSpec`, and the workload-class taxonomy
    there must name every generator class.
+7. **The search-space table stays in sync.**  The table between the
+   ``search-table-start``/``search-table-end`` markers in
+   `docs/search.md` must document exactly the dimensions of
+   `repro.launch.costmodel.SEARCH_SPACE`, each under its correct
+   optimization class.
 """
 from __future__ import annotations
 
@@ -186,6 +191,43 @@ def check_tracegen_table() -> list[str]:
     return errors
 
 
+def check_search_table() -> list[str]:
+    """docs/search.md's strength table == costmodel.SEARCH_SPACE.
+
+    Rows between the explicit markers are parsed for their first
+    backticked column (the knob name) and their class column; the name
+    set must equal the search dimensions and each row's class must
+    match the dimension's, so a renamed/added/dropped/re-classed search
+    knob fails CI until the doc row moves with it."""
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.launch.costmodel import SPACE_BY_NAME
+    doc = REPO / "docs" / "search.md"
+    if not doc.exists():
+        return ["docs/search.md is missing"]
+    text = doc.read_text()
+    m = re.search(
+        r"<!-- search-table-start -->(.*?)<!-- search-table-end -->",
+        text, re.S)
+    if m is None:
+        return ["docs/search.md lacks the search-table-start/"
+                "search-table-end markers"]
+    rows = re.findall(r"^\|\s*`([A-Za-z0-9_]+)`\s*\|\s*([MCO])\s*\|",
+                      m.group(1), re.M)
+    documented = {name for name, _ in rows}
+    known = set(SPACE_BY_NAME)
+    errors = [f"docs/search.md search table names unknown search "
+              f"dimension {name!r} (not in costmodel.SEARCH_SPACE)"
+              for name in sorted(documented - known)]
+    errors += [f"docs/search.md search table does not document search "
+               f"dimension {name!r}"
+               for name in sorted(known - documented)]
+    errors += [f"docs/search.md lists {name!r} under class {cls!r}, "
+               f"but SEARCH_SPACE says {SPACE_BY_NAME[name].cls!r}"
+               for name, cls in rows
+               if name in known and cls != SPACE_BY_NAME[name].cls]
+    return errors
+
+
 def check_figure_docs() -> list[str]:
     """Every benchmarks/fig*.py has a "how to read it" doc under docs/."""
     docs = [(p, p.read_text()) for p in sorted((REPO / "docs")
@@ -204,7 +246,8 @@ def check_figure_docs() -> list[str]:
 def main() -> int:
     errors = (check_links() + check_stall_vocabulary()
               + check_simparams_table() + check_figure_docs()
-              + check_metric_table() + check_tracegen_table())
+              + check_metric_table() + check_tracegen_table()
+              + check_search_table())
     for e in errors:
         print(f"ERROR: {e}")
     if not errors:
